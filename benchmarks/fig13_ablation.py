@@ -1,0 +1,30 @@
+"""Figure 13: ablation — EconoServe-D / -SD / -SDO / full / Oracle on JCT,
+TBT, SSR and throughput."""
+from __future__ import annotations
+
+from .common import Emitter, TRACE_RATES, make_trace, run, steady_metrics
+
+VARIANTS = ["econoserve-d", "econoserve-sd", "econoserve-sdo",
+            "econoserve", "oracle"]
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig13_ablation")
+    n = 250 if quick else 700
+    for tr in (["sharegpt"] if quick else ["alpaca", "sharegpt",
+                                           "bookcorpus"]):
+        rate = TRACE_RATES[tr][1]
+        reqs = make_trace(tr, n, rate)
+        t_end = max(r.arrival for r in reqs)
+        for v in VARIANTS:
+            res = run(v, tr, n, rate)
+            sm = steady_metrics(res, t_end)
+            s = res.summary()
+            em.row(trace=tr, variant=v, jct=sm["jct"], ssr=sm["ssr"],
+                   steady_tput=sm["steady_tput"], tbt=s["mean_tbt_s"],
+                   kvc_util=s["kvc_util"])
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

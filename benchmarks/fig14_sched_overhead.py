@@ -1,0 +1,22 @@
+"""Figure 14: scheduling-time overhead of each method (share of total)."""
+from __future__ import annotations
+
+from .common import Emitter, TRACE_RATES, run
+
+SCHEDS = ["orca", "vllm", "sarathi", "fastserve", "multires",
+          "econoserve-d", "econoserve-sd", "econoserve-sdo", "econoserve"]
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig14_sched_overhead")
+    n = 150 if quick else 500
+    tr = "sharegpt"
+    for sched in SCHEDS:
+        res = run(sched, tr, n, TRACE_RATES[tr][0])
+        em.row(sched=sched, sched_overhead=res.sched_overhead_frac,
+               jct=res.mean_jct)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Figure 15: sensitivity to SLO scale, padding ratio, reserved-KVC
+fraction and the KVCPipe buffer."""
+from __future__ import annotations
+
+from repro.core import traces
+
+from .common import Emitter, TRACE_RATES, make_trace, run, sched_config
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig15_sensitivity")
+    n = 150 if quick else 400
+    tr = "sharegpt"
+    rate = TRACE_RATES[tr][0]
+
+    for slo_scale in ((0.5, 1.5, 2.5) if quick else (0.5, 1.0, 1.5, 2.0, 2.5)):
+        reqs = traces.generate(traces.TRACES[tr], n, seed=0, rate=rate,
+                               slo_scale=slo_scale)
+        from repro.core import registry
+        res = registry.run_one("econoserve", reqs, sched_config(tr),
+                               accuracy=0.732)
+        em.row(factor="slo_scale", value=float(slo_scale), ssr=res.ssr,
+               jct=res.mean_jct, tput=res.throughput_reqs)
+
+    for reserve in (0.01, 0.03, 0.06) if quick else (0.01, 0.02, 0.03,
+                                                     0.04, 0.06):
+        res = run("econoserve", tr, n, rate,
+                  cfg=sched_config(tr, reserve_frac=reserve))
+        em.row(factor="reserve_frac", value=float(reserve), ssr=res.ssr,
+               jct=res.mean_jct, tput=res.throughput_reqs)
+
+    for buf in (0.05, 0.15, 0.30):
+        res = run("econoserve", tr, n, rate,
+                  cfg=sched_config(tr, buffer_frac=buf))
+        em.row(factor="buffer_frac", value=float(buf), ssr=res.ssr,
+               jct=res.mean_jct, tput=res.throughput_reqs)
+
+    for pad in (0.0, 0.15, 0.3):
+        res = run("econoserve", tr, n, rate,
+                  cfg=sched_config(tr, pad_ratio=pad))
+        em.row(factor="pad_ratio", value=float(pad), ssr=res.ssr,
+               jct=res.mean_jct, tput=res.throughput_reqs)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Figure 1: motivation comparison of all schedulers on the three traces —
+throughput, KVC utilization, forward size, allocation failures, JCT
+decomposition, completions-per-iteration distribution."""
+from __future__ import annotations
+
+from .common import Emitter, TRACE_RATES, run
+
+SCHEDS = ["srtf", "orca", "fastserve", "vllm", "sarathi", "multires",
+          "synccoupled", "econoserve-sd", "econoserve"]
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig1_schedulers")
+    n = 150 if quick else 600
+    traces_ = ["sharegpt"] if quick else ["alpaca", "sharegpt", "bookcorpus"]
+    for tr in traces_:
+        rate = TRACE_RATES[tr][1]
+        for sched in SCHEDS:
+            res = run(sched, tr, n, rate)
+            s = res.summary()
+            bd = res.jct_breakdown()
+            em.row(trace=tr, sched=sched,
+                   throughput_tok_s=s["throughput_tok_s"],
+                   jct=s["mean_jct_s"], kvc_util=s["kvc_util"],
+                   fwd_size=s["fwd_size"],
+                   alloc_fail_rate=s["alloc_fail_rate"],
+                   sched_overhead=s["sched_overhead"],
+                   jct_waiting=bd.get("waiting", 0.0),
+                   jct_exec=bd.get("exec", 0.0),
+                   jct_preempt=bd.get("preempt", 0.0))
+            # fig 1f: completions per iteration (EconoServe only, compact)
+            if sched == "econoserve":
+                dist = res.completion_count_dist()
+                tot = sum(dist.values())
+                em.row(trace=tr, sched=sched,
+                       frac_iters_zero_completions=dist.get(0, 0) / tot,
+                       frac_iters_multi_completions=sum(
+                           v for k, v in dist.items() if k >= 2) / tot)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Figure 2: CDF of same-(predicted)-RL group sizes among queued GTs —
+validates O2 (groupable requests exist)."""
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from .common import ACCURACY, Emitter, make_trace, TRACE_RATES
+from repro.core import predictor
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig2_group_sizes")
+    n = 400 if quick else 2000
+    for tr in (["sharegpt"] if quick else ["alpaca", "sharegpt",
+                                           "bookcorpus"]):
+        reqs = make_trace(tr, n, TRACE_RATES[tr][1])
+        p = predictor.NoisyPredictor(accuracy=ACCURACY[tr], seed=0)
+        predictor.annotate(reqs, p, pad_ratio=0.15)
+        # sliding window of queued requests (arrival order, window ~ the
+        # number that queue while a batch is processing)
+        window = 64
+        sizes = []
+        for i in range(0, len(reqs) - window, window // 2):
+            groups = Counter(r.padded_rl for r in reqs[i:i + window])
+            sizes.extend(groups.values())
+        sizes = np.array(sizes)
+        em.row(trace=tr,
+               frac_groups_ge2=float(np.mean(sizes >= 2)),
+               frac_groups_ge4=float(np.mean(sizes >= 4)),
+               frac_groups_ge12=float(np.mean(sizes >= 12)),
+               mean_group_size=float(sizes.mean()))
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

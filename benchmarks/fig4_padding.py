@@ -1,0 +1,28 @@
+"""Figure 4 / 15b: sweet-spot padding-ratio sweep — JCT (waiting vs
+processing), KVC utilization, under-provisioned request fraction."""
+from __future__ import annotations
+
+from .common import Emitter, TRACE_RATES, run, sched_config
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig4_padding")
+    n = 150 if quick else 500
+    ratios = (0.0, 0.1, 0.2, 0.3) if quick else (0.0, 0.05, 0.1, 0.15,
+                                                 0.2, 0.25, 0.3)
+    for tr in (["sharegpt"] if quick else ["alpaca", "sharegpt",
+                                           "bookcorpus"]):
+        for pad in ratios:
+            cfg = sched_config(tr, pad_ratio=pad)
+            res = run("econoserve-sd", tr, n, TRACE_RATES[tr][0], cfg=cfg)
+            s = res.summary()
+            bd = res.jct_breakdown()
+            em.row(trace=tr, pad_ratio=pad, jct=s["mean_jct_s"],
+                   waiting=bd.get("waiting", 0.0),
+                   kvc_util=s["kvc_util"],
+                   underprov_frac=s["underprov"] / max(1, s["completed"]))
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Figure 5b: under-provision handling strategies — offload-based vs
+offload-free preemption vs reserved-KVC rescue: preemption-time share of
+JCT for the affected requests (O4)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Emitter, TRACE_RATES, run, sched_config
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig5_preemption")
+    n = 200 if quick else 600
+    tr = "sharegpt"
+    variants = [
+        ("offload", dict(offload_free=False, reserve_frac=0.0)),
+        ("offload_free", dict(offload_free=True, reserve_frac=0.0)),
+        ("reserved_kvc", dict(offload_free=True, reserve_frac=0.05)),
+    ]
+    for name, kw in variants:
+        cfg = sched_config(tr, **kw)
+        res = run("econoserve", tr, n, TRACE_RATES[tr][0], cfg=cfg)
+        affected = [r for r in res.completed
+                    if r.n_preemptions > 0 or r.swap_time > 0]
+        if affected:
+            share = float(np.mean([
+                (r.preempt_time + r.swap_time) / max(1e-9, r.jct)
+                for r in affected]))
+        else:
+            share = 0.0
+        em.row(strategy=name,
+               preempt_share_of_jct=share,
+               n_affected=float(len(affected)),
+               reserve_rescues=float(res.n_reserve_rescues),
+               jct=res.mean_jct)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

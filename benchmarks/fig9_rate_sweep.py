@@ -1,0 +1,33 @@
+"""Figures 9/10/11: normalized latency, SSR, and KVC/GPU utilization vs
+request rate, per scheduler — steady-state (pre-drain) metrics. The paper's
+headline '2.5-4x sustainable rate vs vLLM at the same latency' is read off
+this sweep."""
+from __future__ import annotations
+
+from .common import Emitter, TRACE_RATES, make_trace, run, steady_metrics
+
+SCHEDS = ["orca", "vllm", "sarathi", "distserve", "econoserve", "oracle"]
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("fig9_rate_sweep")
+    n = 300 if quick else 800
+    scheds = ["vllm", "sarathi", "econoserve"] if quick else SCHEDS
+    traces_ = ["sharegpt"] if quick else ["alpaca", "sharegpt", "bookcorpus"]
+    for tr in traces_:
+        for rate in TRACE_RATES[tr]:
+            reqs = make_trace(tr, n, rate)
+            t_end = max(r.arrival for r in reqs)
+            for sched in scheds:
+                res = run(sched, tr, n, rate)
+                sm = steady_metrics(res, t_end)
+                s = res.summary()
+                em.row(trace=tr, rate=rate, sched=sched,
+                       norm_latency=sm["norm_latency"], ssr=sm["ssr"],
+                       steady_tput=sm["steady_tput"], jct=sm["jct"],
+                       kvc_util=s["kvc_util"], gpu_util=s["gpu_util"])
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

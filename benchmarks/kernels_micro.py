@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: wall time per call of the Pallas kernels (CPU
+interpret mode — correctness-path latency, NOT TPU performance) and the
+pure-jnp oracle for scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_attention
+from repro.kernels.paged_attention import paged_decode_attention
+
+from .common import Emitter
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                       # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("kernels_micro")
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(key, (B, S, K, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention(q, k, v, interpret=True,
+                                                 block_q=64, block_k=64))
+    fr = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v))
+    em.row(kernel="flash_prefill", impl="pallas_interpret",
+           us_per_call=_time(fa, q, k, v))
+    em.row(kernel="flash_prefill", impl="jnp_ref",
+           us_per_call=_time(fr, q, k, v))
+
+    P, page, MP = 16, 16, 4
+    qd = jax.random.normal(key, (2, H, hd), jnp.float32)
+    kp = jax.random.normal(key, (P, page, K, hd), jnp.float32)
+    bt = jnp.arange(2 * MP, dtype=jnp.int32).reshape(2, MP)
+    cl = jnp.array([40, 64], jnp.int32)
+    pa = jax.jit(lambda *a: paged_decode_attention(*a, interpret=True))
+    pr = jax.jit(ref.paged_decode_attention)
+    em.row(kernel="paged_decode", impl="pallas_interpret",
+           us_per_call=_time(pa, qd, kp, kp, bt, cl))
+    em.row(kernel="paged_decode", impl="jnp_ref",
+           us_per_call=_time(pr, qd, kp, kp, bt, cl))
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

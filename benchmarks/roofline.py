@@ -1,0 +1,75 @@
+"""Roofline report (deliverable g): reads the dry-run JSONs and derives the
+three terms per (arch x shape), the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs, and a one-line what-would-move-it-down note.
+
+Run the dry-run first:  python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.core.costmodel import ModelProfile
+from repro.launch.shapes import SHAPES
+
+from .common import Emitter
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "experiments/dryrun")
+
+HINTS = {
+    "compute": "raise per-chip work only via batch; already MXU-bound",
+    "memory": "cut HBM traffic: fuse cache read/update, avoid fp32 "
+              "spills, larger effective arithmetic intensity per token",
+    "collective": "reshard to remove all-gathers (sequence-parallel "
+                  "residuals / expert-parallel dispatch), overlap with "
+                  "compute",
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    prof = ModelProfile.from_config(cfg)
+    sh = SHAPES[shape_name]
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * prof.n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * prof.n_active * tokens
+    return 2.0 * prof.n_active * sh.global_batch      # decode: 1 token/req
+
+
+def main(quick: bool = True) -> None:
+    em = Emitter("roofline")
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        print("roofline,status=no_dryrun_artifacts,count,0")
+        em.finish()
+        return
+    for fn in files:
+        rec = json.load(open(fn))
+        if rec.get("status") != "ok":
+            em.row(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                   status=rec.get("status", "?"), note=rec.get("reason", ""))
+            continue
+        rl = rec["roofline"]
+        chips = rec["chips"]
+        mf = model_flops(rec["arch"], rec["shape"])
+        # compiled (analytic-calibrated) global flops implied by the term
+        compiled_global = float(rl["compute_s"]) * chips * 197e12
+        em.row(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+               compute_s=float(rl["compute_s"]),
+               memory_s=float(rl["memory_s"]),
+               collective_s=float(rl["collective_s"]),
+               bottleneck=rec["bottleneck"],
+               model_flops_ratio=float(mf / max(1.0, compiled_global)),
+               mem_per_device_gib=float(rec.get("mem_per_device", 0))
+               / 2 ** 30,
+               hint=HINTS[rec["bottleneck"]])
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

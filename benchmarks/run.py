@@ -1,0 +1,56 @@
+"""Benchmark driver — one module per paper figure/table plus the roofline
+report. Prints ``bench,key...,metric,value`` CSV lines; JSON artifacts land
+in experiments/results/.
+
+Usage:
+  python -m benchmarks.run                # quick defaults (CI-sized)
+  python -m benchmarks.run --full         # paper-sized sweeps
+  python -m benchmarks.run --bench fig9_rate_sweep
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "fig1_schedulers",
+    "fig2_group_sizes",
+    "fig4_padding",
+    "fig5_preemption",
+    "fig6_occupied_kvc",
+    "fig9_rate_sweep",
+    "fig12_gpu_count",
+    "fig13_ablation",
+    "fig14_sched_overhead",
+    "fig15_sensitivity",
+    "kernels_micro",
+    "roofline",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None, choices=BENCHES)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    benches = [args.bench] if args.bench else BENCHES
+    failures = 0
+    for name in benches:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main(quick=not args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Trace-driven comparison of EconoServe against every baseline the paper
+evaluates (fig 1 / fig 9 style), on a calibrated ShareGPT-like trace.
+
+  PYTHONPATH=src python examples/compare_schedulers.py [--rate 5.0] [-n 300]
+"""
+import argparse
+
+from repro.core import registry, traces
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=5.0)
+    ap.add_argument("-n", type=int, default=300)
+    ap.add_argument("--trace", default="sharegpt",
+                    choices=list(traces.TRACES))
+    args = ap.parse_args()
+
+    reqs = traces.generate(traces.TRACES[args.trace], args.n, seed=1,
+                           rate=args.rate)
+    t_end = max(r.arrival for r in reqs)
+    names = ["orca", "vllm", "sarathi", "multires", "distserve",
+             "econoserve", "oracle"]
+    print(f"{args.trace} trace, {args.n} requests at {args.rate}/s\n")
+    print(f"{'scheduler':14s} {'steady tput':>11s} {'mean JCT':>9s} "
+          f"{'norm lat':>9s} {'SSR':>6s} {'KVC util':>9s} {'fwd':>7s}")
+    for name in names:
+        res = registry.run_one(name, reqs)
+        done = [r for r in res.completed if r.t_complete <= t_end]
+        tput = len(done) / t_end
+        s = res.summary()
+        print(f"{name:14s} {tput:11.2f} {s['mean_jct_s']:9.2f} "
+              f"{s['norm_latency_s_per_tok']:9.3f} {s['ssr']:6.3f} "
+              f"{s['kvc_util']:9.3f} {s['fwd_size']:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: serve a small model with batched requests under the
+EconoServe scheduler (the paper's system, end to end, on CPU).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+def main():
+    # a reduced (2-layer) qwen3-family model — same code path as the
+    # full config, which is exercised by the multi-pod dry-run
+    cfg = get_config("qwen3-8b").reduced().with_(dtype="float32",
+                                                 param_dtype="float32")
+    engine = ServingEngine(cfg, max_batch=4, capacity=128)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, n)),
+                   params=SamplingParams(max_new_tokens=m))
+        for n, m in [(12, 8), (20, 6), (7, 10), (15, 4), (9, 12), (18, 7)]
+    ]
+    engine.run(requests)
+
+    for g in requests:
+        print(f"request {g.rid}: prompt {len(g.prompt):3d} tokens -> "
+              f"{len(g.output):2d} generated {g.output[:8]}...")
+    s = engine.scheduler
+    print(f"\nscheduler: {s.name} | completed={len(s.completed)} "
+          f"| KVC alloc failures={s.kvc.n_failures} "
+          f"| hosted (KVCPipe)={s.n_hosted}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: EconoServe (Shen & Sen, 2024) on JAX/TPU — serving framework."""
+__version__ = "0.1.0"

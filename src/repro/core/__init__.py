@@ -1,0 +1,1 @@
+"""EconoServe core: the paper's scheduler, baselines, and simulator."""

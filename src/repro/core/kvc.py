@@ -1,0 +1,177 @@
+"""Block-based KV-cache manager (the paper's allocation substrate).
+
+Supports every allocation discipline the paper compares:
+  * exact-allocation  (EconoServe/MultiRes: prompt + padded predicted RL)
+  * max-allocation    (ORCA/FastServe/SRTF: prompt + model max RL)
+  * block-allocation  (vLLM/Sarathi: one block at a time, can fail mid-run)
+
+The EconoServe PT reserve (§3.3) is a *watermark*, not a physical
+partition — blocks are fungible pages. GT-side allocations must leave
+``reserve_target`` blocks effectively set aside; PT admissions may dip into
+that set-aside (tracked by ``reserve_in_use``). When a PT-phase request is
+scheduled as a GT, its reserve charge is released (pure bookkeeping), which
+gives freed blocks first-dibs back to the reserve — the rolling budget that
+lets EconoServe add PTs every iteration.
+
+Accounting distinguishes *allocated* from *used* tokens: KVC utilization
+(the paper's headline metric) is used/capacity; exact-allocation's gap
+between the two is exactly what KVCPipe closes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+class AllocationError(Exception):
+    pass
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    return -(-max(0, tokens) // block_size)
+
+
+@dataclass
+class Allocation:
+    blocks: int = 0
+    reserve_blocks: int = 0     # portion charged against the PT reserve
+    used_tokens: int = 0
+    lent_tokens: int = 0        # KVCPipe: capacity granted inside a host span
+
+
+class BlockKVC:
+    def __init__(self, capacity_tokens: int, block_size: int = 32,
+                 reserve_frac: float = 0.0):
+        self.block_size = block_size
+        self.total_blocks = capacity_tokens // block_size
+        self.reserve_target = int(self.total_blocks * reserve_frac)
+        self.free_blocks = self.total_blocks
+        self.reserve_in_use = 0
+        self.allocs: Dict[int, Allocation] = {}
+        self.n_failures = 0
+        self.n_allocs = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def capacity_tokens(self) -> int:
+        return self.total_blocks * self.block_size
+
+    @property
+    def reserve_set_aside(self) -> int:
+        """Blocks currently held back for PT admission."""
+        return max(0, self.reserve_target - self.reserve_in_use)
+
+    @property
+    def free_general(self) -> int:
+        """Blocks a GT-side allocation may take."""
+        return max(0, self.free_blocks - self.reserve_set_aside)
+
+    @property
+    def free_reserve(self) -> int:
+        """Reserve headroom a PT admission may take (bounded by real free)."""
+        return min(self.reserve_set_aside, self.free_blocks)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.total_blocks - self.free_blocks
+
+    @property
+    def used_tokens(self) -> int:
+        return sum(a.used_tokens for a in self.allocs.values())
+
+    @property
+    def utilization(self) -> float:
+        return self.used_tokens / max(1, self.capacity_tokens)
+
+    @property
+    def allocated_frac(self) -> float:
+        return self.allocated_blocks / max(1, self.total_blocks)
+
+    def free_tokens(self) -> int:
+        return self.free_general * self.block_size
+
+    # ------------------------------------------------------------------ #
+    # GT-side (general pool, respects the reserve watermark)
+    # ------------------------------------------------------------------ #
+    def can_allocate(self, tokens: int) -> bool:
+        return blocks_for(tokens, self.block_size) <= self.free_general
+
+    def allocate(self, rid: int, tokens: int) -> bool:
+        """Exact/max allocation. All-or-nothing."""
+        b = blocks_for(tokens, self.block_size)
+        if b > self.free_general:
+            self.n_failures += 1
+            return False
+        self.free_blocks -= b
+        self.allocs.setdefault(rid, Allocation()).blocks += b
+        self.n_allocs += 1
+        return True
+
+    def extend(self, rid: int, blocks: int = 1) -> bool:
+        """vLLM-style incremental growth (counted as an allocation op)."""
+        if blocks > self.free_general:
+            self.n_failures += 1
+            return False
+        self.free_blocks -= blocks
+        self.allocs.setdefault(rid, Allocation()).blocks += blocks
+        self.n_allocs += 1
+        return True
+
+    # ------------------------------------------------------------------ #
+    # PT-side (may dip into the reserve set-aside)
+    # ------------------------------------------------------------------ #
+    def allocate_reserve(self, rid: int, blocks: int = 1) -> bool:
+        if blocks > self.free_reserve:
+            return False
+        self.free_blocks -= blocks
+        self.reserve_in_use += blocks
+        self.allocs.setdefault(rid, Allocation()).reserve_blocks += blocks
+        return True
+
+    def release_reserve(self, rid: int) -> None:
+        """The request left the PT phase: stop charging its blocks to the
+        reserve (pure bookkeeping; freed blocks will replenish it)."""
+        a = self.allocs.get(rid)
+        if a is None or a.reserve_blocks == 0:
+            return
+        self.reserve_in_use -= a.reserve_blocks
+        a.blocks += a.reserve_blocks
+        a.reserve_blocks = 0
+
+    # ------------------------------------------------------------------ #
+    def set_used(self, rid: int, tokens: int) -> None:
+        a = self.allocs.get(rid)
+        if a is not None:
+            a.used_tokens = tokens
+
+    def add_used(self, rid: int, tokens: int = 1) -> None:
+        a = self.allocs.get(rid)
+        if a is not None:
+            a.used_tokens += tokens
+
+    def allocated_tokens(self, rid: int) -> int:
+        a = self.allocs.get(rid)
+        return 0 if a is None else (a.blocks + a.reserve_blocks) * self.block_size
+
+    def free(self, rid: int) -> int:
+        """Release a request's allocation. Returns tokens freed."""
+        a = self.allocs.pop(rid, None)
+        if a is None:
+            return 0
+        self.free_blocks += a.blocks + a.reserve_blocks
+        self.reserve_in_use -= a.reserve_blocks
+        return (a.blocks + a.reserve_blocks) * self.block_size
+
+    # ------------------------------------------------------------------ #
+    def check_invariants(self) -> None:
+        held = sum(a.blocks + a.reserve_blocks for a in self.allocs.values())
+        assert self.free_blocks + held == self.total_blocks, \
+            (self.free_blocks, held, self.total_blocks)
+        res_held = sum(a.reserve_blocks for a in self.allocs.values())
+        assert res_held == self.reserve_in_use, \
+            (res_held, self.reserve_in_use)
+        assert 0 <= self.free_blocks <= self.total_blocks
+        assert 0 <= self.reserve_in_use <= self.reserve_target
+        for rid, a in self.allocs.items():
+            assert a.used_tokens <= (a.blocks + a.reserve_blocks) \
+                * self.block_size + a.lent_tokens, rid

@@ -1,0 +1,65 @@
+"""Prompt and Generation Task Ordering (§3.4).
+
+Three factors, in order:
+  1. JCT-SLO deadline  — ascending, bucketed into magnitude ranges;
+  2. occupied KVC      — descending, bucketed (release KVC earlier, O5);
+  3. predicted RL (GTs) / prompt length (PTs) — descending (fast near-exact
+     fits when filling KVC / TFS via binary search).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import List, Optional, Sequence, Tuple
+
+from .request import Request
+
+DEADLINE_EDGES = (0.2, 0.5, 2.0)          # s, paper's example ranges
+KVC_BUCKET = 128                          # tokens per occupied-KVC range
+LEN_BUCKET = 128                          # tokens per RL/prompt-length range
+
+
+def deadline_bucket(req: Request, now: float) -> int:
+    slack = req.slo_deadline - now
+    return bisect.bisect_left(DEADLINE_EDGES, slack)
+
+
+def order_key(req: Request, now: float, is_gt: bool) -> Tuple[int, int, int]:
+    length = req.remaining_predicted if is_gt else req.prompt_len
+    return (deadline_bucket(req, now),
+            -(req.occupied_kvc // KVC_BUCKET),
+            -length)
+
+
+def sort_queue(queue: List[Request], now: float, is_gt: bool) -> List[Request]:
+    return sorted(queue, key=lambda r: order_key(r, now, is_gt))
+
+
+def pick_fit(sorted_reqs: Sequence[Request], budget: int, now: float,
+             is_gt: bool) -> Optional[int]:
+    """Within the highest-priority (deadline, kvc) range, binary-search the
+    task whose length best fits ``budget`` (§3.4 'binary search to find a
+    task ... close to the required length'). Returns an index or None."""
+    if not sorted_reqs:
+        return None
+    head = sorted_reqs[0]
+    hk = order_key(head, now, is_gt)[:2]
+    # the slice sharing the head's (deadline, kvc) buckets, ordered by
+    # descending length -> find first entry with length <= budget
+    lo, hi = 0, len(sorted_reqs)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        r = sorted_reqs[mid]
+        if order_key(r, now, is_gt)[:2] != hk:
+            hi = mid
+            continue
+        length = r.remaining_predicted if is_gt else r.prompt_len
+        if length > budget:
+            lo = mid + 1
+        else:
+            hi = mid
+    if lo < len(sorted_reqs):
+        r = sorted_reqs[lo]
+        length = r.remaining_predicted if is_gt else r.prompt_len
+        if length <= budget:
+            return lo
+    return None

@@ -1,0 +1,554 @@
+"""EconoServe scheduler family (§3) on a shared single-engine substrate.
+
+``BaseScheduler`` owns the mechanics every policy shares: queues, the block
+KVC, iteration bookkeeping (token generation, PT→GT transition, completion,
+preemption). Policies override batch formation.
+
+The EconoServe variants map to the paper's ablation:
+  EconoServe-D    decoupled PT/GT queues, exact-allocation, iteration-level
+  EconoServe-SD   + time-synced same-RL groups
+  EconoServe-SDO  + Ordering
+  EconoServe      + KVC pipelining  (the full system)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .costmodel import CostModel
+from .kvc import Allocation, BlockKVC, blocks_for
+from .ordering import order_key, pick_fit, sort_queue
+from .pipelining import PipeBook
+from .predictor import DEFAULT_BUCKET, bucketize
+from .request import Request, State
+
+
+@dataclass
+class IterationPlan:
+    prompt_items: List[Tuple[Request, int]] = field(default_factory=list)
+    decode_reqs: List[Request] = field(default_factory=list)
+    sched_time: float = 0.0
+    extra_time: float = 0.0        # swap-in/out, KV transfer, ...
+
+    @property
+    def prompt_tokens(self) -> int:
+        return sum(c for _, c in self.prompt_items)
+
+    @property
+    def forward_size(self) -> int:
+        return self.prompt_tokens + len(self.decode_reqs)
+
+    @property
+    def empty(self) -> bool:
+        return not self.prompt_items and not self.decode_reqs
+
+
+@dataclass
+class Group:
+    key: int                      # synced (padded) remaining RL at formation
+    members: List[Request] = field(default_factory=list)
+    age: int = 0                  # iterations since the group started
+
+
+@dataclass
+class SchedulerConfig:
+    kvc_tokens: int = 14_336
+    block_size: int = 32
+    tfs: int = 2048
+    max_model_len: int = 2048     # max RL for max-allocation policies
+    reserve_frac: float = 0.03
+    pad_ratio: float = 0.15
+    buffer_frac: float = 0.15     # KVCPipe buffer b, fraction of RL
+    bucket: int = DEFAULT_BUCKET
+    max_batch_reqs: int = 512
+    # feature toggles (ablation)
+    sync_groups: bool = True
+    ordering: bool = True
+    pipelining: bool = True
+    offload_free: bool = True     # preemption style for under-provision
+
+
+class BaseScheduler:
+    name = "base"
+
+    def __init__(self, cfg: SchedulerConfig, cost: CostModel):
+        self.cfg = cfg
+        self.cost = cost
+        self.kvc = BlockKVC(cfg.kvc_tokens, cfg.block_size, cfg.reserve_frac)
+        self.pt_queue: List[Request] = []
+        self.gt_queue: List[Request] = []
+        self.running_groups: List[Group] = []
+        self.current_plan: Optional[IterationPlan] = None
+        self.completed: List[Request] = []
+        # events/stats
+        self.group_completed = True     # trigger initial GT fill
+        self.n_preempt_swap = 0
+        self.n_preempt_free = 0
+        self.n_underprov = 0
+        self.n_reserve_rescues = 0
+        self.n_hosted = 0
+        self.pending_extra_time = 0.0
+        self.iter_completion_counts: List[int] = []
+
+    # ---------------------------------------------------------------- #
+    def on_arrival(self, req: Request, t: float) -> None:
+        req.set_state(State.QUEUED_PT, t)
+        self.pt_queue.append(req)
+
+    @property
+    def running_gts(self) -> List[Request]:
+        return [m for g in self.running_groups for m in g.members]
+
+    def has_work(self) -> bool:
+        return bool(self.pt_queue or self.gt_queue or self.running_groups)
+
+    # ---------------------------------------------------------------- #
+    # shared mechanics
+    # ---------------------------------------------------------------- #
+    def _admit_pt(self, req: Request, t: float, use_reserve: bool = True) -> bool:
+        """Allocate prompt KVC (exact) for a PT about to run. A probe that
+        does not fit is a batching decision, not a runtime allocation
+        failure (those are what Table 1 counts)."""
+        need = req.prompt_len - self.kvc.allocated_tokens(req.rid)
+        if need <= 0:
+            return True
+        if self.kvc.can_allocate(need):
+            return self.kvc.allocate(req.rid, need)
+        if use_reserve and self.kvc.allocate_reserve(
+                req.rid, blocks_for(need, self.cfg.block_size)):
+            return True
+        return False
+
+    def _grant_pt_capacity(self, req: Request, want: int,
+                           allow_general: bool) -> int:
+        """Allocate capacity for up to `want` more prompt tokens, block-
+        granular, reserve first (the reserve exists to admit PTs, §3.3);
+        the general pool is touched only when no GT is waiting for it —
+        that is the resource-responsibility decoupling. Chunked prompts
+        hold KVC only for processed chunks (§2.4 / fig 6)."""
+        slack = self.kvc.allocated_tokens(req.rid) - req.prompt_done
+        if slack >= want:
+            return want
+        need_blocks = blocks_for(want - slack, self.cfg.block_size)
+        from_res = min(need_blocks, self.kvc.free_reserve)
+        if from_res > 0:
+            self.kvc.allocate_reserve(req.rid, from_res)
+        if allow_general:
+            from_gen = min(need_blocks - from_res, self.kvc.free_general)
+            if from_gen > 0:
+                self.kvc.extend(req.rid, from_gen)
+        return min(want,
+                   self.kvc.allocated_tokens(req.rid) - req.prompt_done)
+
+    def _schedule_gt_member(self, req: Request, t: float) -> bool:
+        """Exact-allocate the remaining padded RL for a GT (plus restoring
+        prompt+generated KV space if it was swapped out)."""
+        total = req.prompt_len + req.generated + req.remaining_predicted
+        need = total - self.kvc.allocated_tokens(req.rid)
+        if need > 0:
+            if not self.kvc.can_allocate(need):
+                return False
+            self.kvc.allocate(req.rid, need)
+        # recycle the PT-admission reserve (§3.3: reserve is for adding PTs)
+        self.kvc.release_reserve(req.rid)
+        req.alloc_rl = req.generated + req.remaining_predicted
+        self.kvc.set_used(req.rid, req.prompt_len + req.generated)
+        req._run_start = req.generated
+        req.set_state(State.RUNNING_GT, t)
+        return True
+
+    def _complete(self, req: Request, t: float) -> None:
+        req.set_state(State.COMPLETED, t)
+        req.t_complete = t
+        self.kvc.free(req.rid)
+        self.completed.append(req)
+
+    def _pt_finished(self, req: Request, t: float) -> None:
+        """Prompt fully processed → request becomes a queued GT. The PT
+        iteration itself produces the first response token (§1)."""
+        req.prompt_done = req.prompt_len
+        if req.generated == 0:
+            req.generated = 1
+        req.occupied_kvc = req.prompt_len + req.generated
+        self.kvc.set_used(req.rid, req.occupied_kvc)
+        if req.t_first_token is None:
+            req.t_first_token = t
+        if req.done:
+            self._complete(req, t)
+            return
+        req.set_state(State.QUEUED_GT, t)
+        self.gt_queue.append(req)
+
+    # ---------------------------------------------------------------- #
+    # to be provided by policies
+    # ---------------------------------------------------------------- #
+    def form_batch(self, t: float) -> IterationPlan:
+        raise NotImplementedError
+
+    def finish_iteration(self, t: float) -> None:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------------- #
+class EconoServeScheduler(BaseScheduler):
+    """The full system; feature flags reproduce -D / -SD / -SDO."""
+    def __init__(self, cfg: SchedulerConfig, cost: CostModel,
+                 name: str = "econoserve"):
+        super().__init__(cfg, cost)
+        self.name = name
+        self.pipe = PipeBook(buffer_tokens=0, min_size=cfg.block_size)
+        self.zombies: Dict[int, List[Request]] = {}   # host rid -> children
+        self.host_of: Dict[int, Request] = {}
+
+    @staticmethod
+    def _age_of(req: Request) -> int:
+        """Tokens the request has grown into its current allocation span."""
+        return req.generated - getattr(req, "_run_start", 0)
+
+    # -------------------------------------------------------------- #
+    def _buffer_tokens(self, rl: int) -> int:
+        return max(self.cfg.block_size,
+                   int(math.ceil(rl * self.cfg.buffer_frac)))
+
+    def _sorted_gt_queue(self, t: float) -> List[Request]:
+        if self.cfg.ordering:
+            return sort_queue(self.gt_queue, t, is_gt=True)
+        return sorted(self.gt_queue, key=lambda r: r.arrival)
+
+    def _sorted_pt_queue(self, t: float) -> List[Request]:
+        if self.cfg.ordering:
+            return sort_queue(self.pt_queue, t, is_gt=False)
+        return sorted(self.pt_queue, key=lambda r: r.arrival)
+
+    # -------------------------------------------------------------- #
+    def _fill_gts(self, t: float) -> int:
+        """①: select GT groups (or single GTs) until KVC fully allocated."""
+        n_sel = 0
+        q = self._sorted_gt_queue(t)
+        while q:
+            free_tok = self.kvc.free_tokens()
+            if free_tok < self.cfg.block_size:
+                break
+            i = pick_fit(q, free_tok, t, is_gt=True) \
+                if self.cfg.ordering else 0
+            if i is None:
+                i = 0
+            head = q[i]
+            if head.remaining_predicted > free_tok and not self.cfg.sync_groups:
+                break
+            if self.cfg.sync_groups:
+                key = bucketize(max(1, head.remaining_predicted),
+                                self.cfg.bucket)
+                same = [r for r in q if bucketize(
+                    max(1, r.remaining_predicted), self.cfg.bucket) == key]
+                grp = Group(key=key)
+                for r in same:
+                    if r.remaining_predicted > self.kvc.free_tokens():
+                        continue            # split the group to fit (§3.3.1)
+                    if self._schedule_gt_member(r, t):
+                        grp.members.append(r)
+                        self.gt_queue.remove(r)
+                        q.remove(r)
+                        n_sel += 1
+                        if self.cfg.pipelining:
+                            self.pipe.buffer_tokens = self._buffer_tokens(key)
+                            self.pipe.offer(r, r.remaining_predicted)
+                if grp.members:
+                    self.running_groups.append(grp)
+                else:
+                    break
+            else:
+                r = head
+                if r.remaining_predicted > free_tok:
+                    break
+                if self._schedule_gt_member(r, t):
+                    self.running_groups.append(Group(
+                        key=bucketize(max(1, r.remaining_predicted),
+                                      self.cfg.bucket), members=[r]))
+                    self.gt_queue.remove(r)
+                    q.remove(r)
+                    n_sel += 1
+                else:
+                    break
+        return n_sel
+
+    def _fill_hosted(self, t: float) -> int:
+        """②: KVC pipelining — place queued GTs into lent slots."""
+        if not self.cfg.pipelining:
+            return 0
+        n_sel = 0
+        q = self._sorted_gt_queue(t)
+        while q and self.pipe.open_slots:
+            cap = self.pipe.max_hostable(self._age_of)
+            if cap < 1:
+                break
+            i = pick_fit(q, cap, t, is_gt=True)
+            if i is None:
+                break
+            r = q[i]
+            need = max(1, r.remaining_predicted)
+            slot = self.pipe.place(r, need, self._age_of)
+            if slot is None:
+                break
+            # hosted GTs draw no new KVC; register usage under their rid
+            self.kvc.allocs.setdefault(r.rid, Allocation())
+            self.kvc.allocs[r.rid].lent_tokens = need
+            self.kvc.release_reserve(r.rid)   # left the PT phase
+            r.alloc_rl = r.generated + need
+            r._run_start = r.generated
+            r.set_state(State.RUNNING_GT, t)
+            self.host_of[r.rid] = slot.owner
+            self.running_groups.append(Group(key=bucketize(need,
+                                                           self.cfg.bucket),
+                                             members=[r]))
+            self.gt_queue.remove(r)
+            q.remove(r)
+            n_sel += 1
+            self.n_hosted += 1
+        return n_sel
+
+    def _fill_pts(self, t: float) -> List[Tuple[Request, int]]:
+        """③: add PTs (chunked if needed) until TFS is reached. KVC for a
+        chunked prompt is allocated chunk-by-chunk; a prompt that cannot get
+        capacity right now is skipped, not allowed to block the queue."""
+        items: List[Tuple[Request, int]] = []
+        budget = self.cfg.tfs - len(self.running_gts)
+        allow_general = not self.gt_queue     # GTs own the general pool
+        q = self._sorted_pt_queue(t)
+        while q and budget >= 1:
+            if len(self.kvc.allocs) + len(items) >= self.cfg.max_batch_reqs:
+                break                        # engine concurrency cap
+            kvc_avail = self.kvc.free_reserve * self.cfg.block_size \
+                + (self.kvc.free_tokens() if allow_general else 0)
+            if kvc_avail < 1:
+                break
+            limit = min(budget, kvc_avail)
+            i = pick_fit(q, limit, t, is_gt=False) \
+                if self.cfg.ordering else 0
+            if i is None:
+                i = 0                        # no perfect fit → chunk the head
+            r = q[i]
+            remaining = r.prompt_len - r.prompt_done
+            chunk = self._grant_pt_capacity(r, min(remaining, budget),
+                                            allow_general)
+            q.remove(r)
+            if chunk <= 0:
+                continue                     # cannot serve now; try others
+            r.set_state(State.RUNNING_PT, t)
+            if r.t_start_exec is None:
+                r.t_start_exec = t
+            items.append((r, chunk))
+            self.pt_queue.remove(r)
+            budget -= chunk
+        return items
+
+    # -------------------------------------------------------------- #
+    def _evict_waiting(self, t: float, need_tokens: int) -> bool:
+        """Deadlock relief: when nothing runs and nothing fits, swap out the
+        lowest-priority *waiting* GTs' KV until `need_tokens` are free."""
+        victims = list(reversed(self._sorted_gt_queue(t)))
+        freed = False
+        for v in victims:
+            if self.kvc.free_tokens() >= need_tokens:
+                break
+            if self.kvc.allocated_tokens(v.rid) == 0:
+                continue
+            tokens = v.prompt_len + v.generated
+            self.kvc.free(v.rid)
+            self.pending_extra_time += 2 * self.cost.swap_time(tokens)
+            v.swap_time += 2 * self.cost.swap_time(tokens)
+            v.occupied_kvc = tokens        # held in host memory now
+            v.prompt_done = v.prompt_len
+            self.n_preempt_swap += 1
+            freed = True
+        return freed
+
+    def form_batch(self, t: float) -> IterationPlan:
+        plan = IterationPlan()
+        n_gt_sel = 0
+        # GT-side fill: Algorithm 1 gates this on group completion; we also
+        # run it whenever queued GTs could be placed (free KVC or open lent
+        # slots) — same policy, lower GT queuing delay (see DESIGN.md).
+        if (self.group_completed or not self.running_groups
+                or (self.gt_queue and
+                    (self.kvc.free_tokens() >= self.cfg.block_size
+                     or self.pipe.open_slots))):
+            n_gt_sel += self._fill_gts(t)
+            n_gt_sel += self._fill_hosted(t)
+            self.group_completed = False
+        if not self.running_groups and n_gt_sel == 0 and self.gt_queue:
+            head = self._sorted_gt_queue(t)[0]
+            need = head.prompt_len + head.generated + head.remaining_predicted
+            if self._evict_waiting(t, need):
+                n_gt_sel += self._fill_gts(t)
+                n_gt_sel += self._fill_hosted(t)
+        plan.prompt_items = self._fill_pts(t)
+        plan.decode_reqs = self.running_gts
+        n_q = len(self.pt_queue) + len(self.gt_queue)
+        if self.cfg.sync_groups:
+            plan.sched_time = self.cost.sched_time_grouped(
+                n_q, n_gt_sel + len(plan.prompt_items))
+        else:
+            plan.sched_time = self.cost.sched_time_fcfs(
+                n_q, n_gt_sel + len(plan.prompt_items)) * 4
+        plan.extra_time = self.pending_extra_time
+        self.pending_extra_time = 0.0
+        self.current_plan = plan
+        return plan
+
+    # -------------------------------------------------------------- #
+    def _preempt(self, req: Request, t: float, offload_free: bool) -> None:
+        req.n_preemptions += 1
+        self.pipe.release_child(req)
+        orphans = self.pipe.drop_owner(req)
+        for o in orphans:
+            self._preempt(o, t, offload_free=False)   # children swap out
+        host = self.host_of.pop(req.rid, None)
+        if offload_free:
+            # drop KV — requeue as a PT that recomputes prompt + generated
+            self.n_preempt_free += 1
+            self.kvc.free(req.rid)
+            req.occupied_kvc = 0
+            req.prompt_done = 0
+            req.set_state(State.PREEMPTED, t)
+            self.pt_queue.append(req)
+        else:
+            # offload: KV moves to host memory; pay swap now + swap-in later
+            self.n_preempt_swap += 1
+            tokens = req.prompt_len + req.generated
+            self.pending_extra_time += 2 * self.cost.swap_time(tokens)
+            req.swap_time += 2 * self.cost.swap_time(tokens)
+            self.kvc.free(req.rid)
+            # the KV lives in host memory; the request still "occupies" it
+            # for ordering purposes (O5: release it earlier)
+            req.occupied_kvc = tokens
+            req.prompt_done = req.prompt_len
+            req.set_state(State.PREEMPTED, t)
+            # re-prediction of the remaining length (§3.3.2)
+            req.padded_rl = req.generated + bucketize(
+                max(1, req.padded_rl - req.generated) + self.cfg.bucket,
+                self.cfg.bucket)
+            self.gt_queue.append(req)
+        if host is not None:
+            self._maybe_free_zombie(host)
+
+    def _try_reserve_rescue(self, req: Request) -> bool:
+        """① on under-provision: extend from the reserved KVC (O4)."""
+        if req.hosted:
+            return False                 # lent space cannot be extended
+        if not self.kvc.allocate_reserve(req.rid, 1):
+            return False
+        self.n_reserve_rescues += 1
+        req.alloc_rl += self.cfg.block_size
+        req.padded_rl = req.alloc_rl
+        return True
+
+    def _handle_underprovision(self, req: Request, t: float) -> None:
+        """② no reserve left (or hosted): preempt (offload-free by default)."""
+        if req.hosted or not self.cfg.offload_free:
+            self._preempt(req, t, offload_free=False)
+        else:
+            self._preempt(req, t, offload_free=True)
+        # requeued with a fresh remaining estimate (L_new, §3.3.2); the
+        # offload-free path re-prefills, the swap path set L_new in _preempt
+        if req.prompt_done == 0:
+            req.padded_rl = req.generated + bucketize(
+                self.cfg.bucket, self.cfg.bucket)
+
+    def finish_iteration(self, t: float) -> None:
+        plan = self.current_plan
+        assert plan is not None
+        n_completed = 0
+        # ---- PTs -----------------------------------------------------
+        for req, chunk in plan.prompt_items:
+            req.prompt_done += chunk
+            req.occupied_kvc = req.prompt_done + req.generated
+            self.kvc.set_used(req.rid, req.occupied_kvc)
+            if req.prompt_done >= req.prompt_len:
+                self._pt_finished(req, t)
+            else:
+                req.set_state(State.QUEUED_PT, t)
+                self.pt_queue.append(req)      # chunked prompt continues
+        # ---- GTs -----------------------------------------------------
+        for grp in list(self.running_groups):
+            grp.age += 1
+            for m in list(grp.members):
+                m.generated += 1
+                m.occupied_kvc = m.prompt_len + m.generated
+                self.kvc.add_used(m.rid, 1)
+                if m.t_first_token is None:
+                    m.t_first_token = t
+                if m.done:
+                    grp.members.remove(m)
+                    self._finish_member(m, t)
+                    n_completed += 1
+                elif m.generated >= m.alloc_rl:
+                    self.n_underprov += 1
+                    if not self._try_reserve_rescue(m):
+                        grp.members.remove(m)
+                        self._handle_underprovision(m, t)
+            if not grp.members:
+                self.running_groups.remove(grp)
+                self.group_completed = True
+        # ---- KVCPipe deadline enforcement -----------------------------
+        expired = self.pipe.expired(self._age_of)
+        for slot in expired:
+            child = slot.child
+            self.pipe.release_child(child)
+            for g in self.running_groups:
+                if child in g.members:
+                    g.members.remove(child)
+            self._preempt(child, t, offload_free=False)
+        self.running_groups = [g for g in self.running_groups if g.members]
+        self.iter_completion_counts.append(n_completed)
+
+    def _finish_member(self, m: Request, t: float) -> None:
+        """Completion honoring zombie (lent-space) semantics."""
+        self.pipe.release_child(m)
+        host = self.host_of.pop(m.rid, None)
+        if host is not None:
+            # hosted GT: its RL KV lived in the host's span (lent), but its
+            # own prompt blocks are real — free them normally
+            self._complete(m, t)
+            self._maybe_free_zombie(host)
+            return
+        children = [s.child for s in self.pipe.active
+                    if s.owner is m and s.child is not None]
+        if children:
+            # defer the free until hosted children vacate
+            self.zombies[m.rid] = children
+            m.set_state(State.COMPLETED, t)
+            m.t_complete = t
+            self.completed.append(m)
+            self.pipe.open_slots = [s for s in self.pipe.open_slots
+                                    if s.owner is not m]
+        else:
+            self.pipe.drop_owner(m)
+            self._complete(m, t)
+
+    def _maybe_free_zombie(self, host: Request) -> None:
+        if host.rid in self.zombies:
+            kids = [c for c in self.zombies[host.rid]
+                    if c.state == State.RUNNING_GT]
+            if not kids:
+                del self.zombies[host.rid]
+                self.kvc.free(host.rid)
+
+
+def make_econoserve(cfg: SchedulerConfig, cost: CostModel,
+                    variant: str = "full") -> EconoServeScheduler:
+    """variant ∈ {'d', 'sd', 'sdo', 'full', 'oracle'} (ablation §4)."""
+    import dataclasses
+    flags = {
+        "d": dict(sync_groups=False, ordering=False, pipelining=False),
+        "sd": dict(sync_groups=True, ordering=False, pipelining=False),
+        "sdo": dict(sync_groups=True, ordering=True, pipelining=False),
+        "full": dict(sync_groups=True, ordering=True, pipelining=True),
+        "oracle": dict(sync_groups=True, ordering=True, pipelining=True),
+    }[variant]
+    cfg = dataclasses.replace(cfg, **flags)
+    names = {"d": "econoserve-d", "sd": "econoserve-sd",
+             "sdo": "econoserve-sdo", "full": "econoserve",
+             "oracle": "oracle"}
+    return EconoServeScheduler(cfg, cost, name=names[variant])

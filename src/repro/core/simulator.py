@@ -1,0 +1,67 @@
+"""Discrete-event serving simulator (single engine).
+
+Drives any BaseScheduler: deliver arrivals → form batch → advance the clock
+by scheduling + iteration time → commit iteration effects → repeat.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .costmodel import CostModel
+from .metrics import IterSample, SimResult
+from .request import Request
+from .scheduler import BaseScheduler
+
+
+def simulate(requests: Sequence[Request], scheduler: BaseScheduler,
+             cost: CostModel, max_time: Optional[float] = None,
+             max_iters: int = 2_000_000) -> SimResult:
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    n = len(reqs)
+    i_arr = 0
+    t = 0.0
+    samples: List[IterSample] = []
+    iters = 0
+
+    while iters < max_iters:
+        # deliver due arrivals
+        while i_arr < n and reqs[i_arr].arrival <= t + 1e-12:
+            scheduler.on_arrival(reqs[i_arr], t)
+            i_arr += 1
+        plan = scheduler.form_batch(t)
+        if plan.empty:
+            if i_arr < n:
+                t = max(t, reqs[i_arr].arrival)
+                continue
+            break                                    # drained
+        ctxs = [r.prompt_len + r.generated for r in plan.decode_reqs]
+        dt = cost.iteration_time(plan.prompt_tokens, ctxs)
+        t_end = t + plan.sched_time + plan.extra_time + dt
+        if max_time is not None and t_end > max_time:
+            break
+        for req, _ in plan.prompt_items:
+            req.sched_time += plan.sched_time
+        n_before = len(scheduler.completed)
+        scheduler.finish_iteration(t_end)
+        n_done = len(scheduler.completed) - n_before
+        samples.append(IterSample(
+            t=t_end, dt=dt, forward_size=plan.forward_size,
+            prompt_tokens=plan.prompt_tokens, n_decode=len(plan.decode_reqs),
+            kvc_used_frac=scheduler.kvc.utilization,
+            kvc_alloc_frac=scheduler.kvc.allocated_frac,
+            sched_time=plan.sched_time, extra_time=plan.extra_time,
+            n_completed=n_done))
+        t = t_end
+        iters += 1
+        if i_arr >= n and not scheduler.has_work():
+            break
+
+    return SimResult(
+        name=scheduler.name, requests=list(reqs), samples=samples,
+        wall_time=t, tfs=scheduler.cfg.tfs,
+        n_alloc_failures=scheduler.kvc.n_failures,
+        n_allocs=scheduler.kvc.n_allocs,
+        n_preempt_swap=getattr(scheduler, "n_preempt_swap", 0),
+        n_preempt_free=getattr(scheduler, "n_preempt_free", 0),
+        n_underprov=getattr(scheduler, "n_underprov", 0),
+        n_reserve_rescues=getattr(scheduler, "n_reserve_rescues", 0))

@@ -1,0 +1,164 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Parameters carry logical axis names (repro.models.common); this module maps
+them to PartitionSpecs for a given mesh:
+
+  * exactly one "model"-class logical axis per tensor is sharded over the
+    mesh "model" axis (priority: experts > vocab > heads/kv > mlp > inner);
+  * the d_model ("embed") axis is FSDP-sharded over "data" within a pod;
+  * the "pod" axis (multi-pod mesh) is pure data parallelism: parameters
+    replicated across pods, batch sharded over ("pod", "data").
+
+Head counts not divisible by the model-axis size (56 heads, kv=8 on a
+16-way axis) rely on GSPMD padding — the model body uses jit/GSPMD, not
+shard_map, exactly for this.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as C
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+# logical axes that map to the tensor-parallel "model" mesh axis, in
+# priority order (first match wins per tensor)
+MODEL_CLASS = (C.EXPERT, C.VOCAB, C.HEADS, C.KV, C.MLP, C.INNER)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], *,
+                  fsdp: bool = True) -> P:
+    out = []
+    model_used = False
+    data_used = False
+    # find the highest-priority model-class axis present
+    present = [a for a in axes if a in MODEL_CLASS]
+    chosen = None
+    for cls in MODEL_CLASS:
+        if cls in present:
+            chosen = cls
+            break
+    for a in axes:
+        if a == chosen and not model_used:
+            out.append("model")
+            model_used = True
+        elif a == C.EMBED and fsdp and not data_used:
+            out.append("data")
+            data_used = True
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None, *,
+                fsdp: bool = True) -> Dict[str, P]:
+    """Size-aware: any sharded dim that does not divide its mesh axis is
+    demoted to replicated (explicit input shardings must divide evenly)."""
+    tree = model_lib.param_tree(cfg)
+    out = {}
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh \
+        else {}
+    for k, m in tree.items():
+        spec = list(spec_for_axes(m.axes, fsdp=fsdp))
+        if mesh is not None:
+            for i, a in enumerate(spec):
+                if a is not None and m.shape[i] % axis_size[a] != 0:
+                    spec[i] = None
+        out[k] = P(*spec)
+    return out
+
+
+def batch_axes(mesh: Mesh):
+    """The data-parallel submesh axes for the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_params_abstract(cfg: ModelConfig, mesh: Mesh, *,
+                          fsdp: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract params with NamedShardings attached (for .lower())."""
+    import jax.numpy as jnp
+    tree = model_lib.param_tree(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = param_specs(cfg, mesh, fsdp=fsdp)
+    return {k: jax.ShapeDtypeStruct(m.shape, dt,
+                                    sharding=NamedSharding(mesh, specs[k]))
+            for k, m in tree.items()}
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int, capacity: int,
+                shard_batch: bool, shard_seq: bool) -> dict:
+    """PartitionSpec tree matching model.init_cache structure.
+
+    shard_batch: batch dim over ("pod","data") (decode_32k);
+    shard_seq: context dim over "data" instead (long_500k, batch=1).
+    Explicit input shardings must divide evenly, so every rule falls back
+    (kv-heads → head_dim → replicated) based on the actual dim sizes.
+    """
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = batch_axes(mesh)
+    ba_size = 1
+    for a in ba:
+        ba_size *= axis_size[a]
+
+    def div(n: int, axes) -> bool:
+        if axes is None:
+            return False
+        sz = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            sz *= axis_size[a]
+        return n % sz == 0
+
+    b = ba if (shard_batch and batch % ba_size == 0) else None
+    model_n = axis_size["model"]
+    data_n = axis_size["data"]
+
+    def kv_spec(n_kv: int, hd: int, C: int) -> P:
+        s = "data" if (shard_seq and C % data_n == 0) else None
+        if n_kv % model_n == 0:
+            return P(None, b, s, "model", None)
+        # GQA kv < model axis: shard the *sequence* dim over "model"
+        # (flash-decode/context-parallel style — the partial softmax merge
+        # lowers to small collectives, unlike gathering a hd-sharded cache)
+        if s is None and C % model_n == 0:
+            return P(None, b, "model", None, None)
+        if hd % model_n == 0:
+            return P(None, b, s, None, "model")
+        return P(None, b, s, None, None)
+
+    kinds = model_lib.kind_counts(cfg)
+    hd = cfg.resolved_head_dim
+    specs: dict = {}
+    if "A" in kinds:
+        C = min(capacity, cfg.sliding_window) if cfg.sliding_window \
+            else capacity
+        kv = kv_spec(cfg.num_kv_heads, hd, C)
+        specs["A"] = {"k": kv, "v": kv}
+    if "M" in kinds:
+        nh = cfg.ssm_heads
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        specs["M"] = {
+            "h": P(None, b, "model" if nh % model_n == 0 else None,
+                   None, None),
+            "conv": P(None, b, None,
+                      "model" if conv_dim % model_n == 0 else None)}
+    if "X" in kinds:
+        di = int(cfg.xlstm_proj_factor * cfg.d_model)
+        nh = cfg.num_heads
+        xhd = di // nh
+        h_ax = "model" if nh % model_n == 0 else None
+        d_ax = "model" if (h_ax is None and xhd % model_n == 0) else None
+        specs["X"] = {"C": P(None, b, h_ax, d_ax, None),
+                      "n": P(None, b, h_ax, d_ax),
+                      "m": P(None, b, h_ax)}
+    if "S" in kinds:
+        di = int(cfg.xlstm_proj_factor * cfg.d_model)
+        sl = P(None, b, "model" if di % model_n == 0 else None)
+        specs["S"] = {"c": sl, "n": sl, "h": sl, "m": sl}
+    if model_lib.num_shared_invocations(cfg):
+        kvh = cfg.shared_attn_kv_heads or cfg.num_kv_heads
+        kv = kv_spec(kvh, hd, capacity)
+        specs["shared"] = {"k": kv, "v": kv}
+    return specs

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the serving hot spots (validated in interpret
+mode on CPU): flash prefill attention and paged decode attention."""

@@ -1,0 +1,134 @@
+"""Flash attention (prefill/training) as a Pallas TPU kernel.
+
+Canonical TPU pattern: grid = (batch, q_head, q_blocks, k_blocks) with the
+k-block axis innermost; running max / sum / accumulator live in VMEM
+scratch that persists across the sequential k steps, and the output block
+is written on the last k step. BlockSpecs keep one (block_q, head_dim) Q
+tile and one (block_k, head_dim) K/V tile in VMEM per step — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, seq_len: int,
+            causal: bool, window: Optional[int], softcap: Optional[float],
+            num_kblocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # skip fully-masked tiles (causal: k block entirely after q block;
+    # window: k block entirely before the window)
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run,
+                              k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run if isinstance(run, jax.Array) else bool(run))
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        ii = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        jj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jj < seq_len
+        if causal:
+            mask &= jj <= ii
+        if window is not None:
+            mask &= jj > ii - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == num_kblocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,S,K,hd), H multiple of K (GQA).
+
+    The q-head grid axis indexes query heads; the K/V BlockSpec maps it to
+    the owning kv head (h // G), so GQA costs no extra K/V traffic.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    orig_S = S
+    pad = (-S) % max(block_q, block_k)
+    if pad:
+        zq = jnp.zeros((B, pad, H, hd), q.dtype)
+        zk = jnp.zeros((B, pad, K, hd), k.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+        S = q.shape[1]
+    nq = S // block_q
+    nk = S // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=orig_S, causal=causal, window=window, softcap=softcap,
+        num_kblocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :orig_S]

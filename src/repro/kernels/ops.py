@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends (this container is CPU-only) the kernels run in
+interpret mode, which executes the kernel body in Python — bit-accurate
+for correctness tests, not for speed. On TPU the same code lowers to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_prefill import flash_attention as _flash_pallas
+from .paged_attention import paged_decode_attention as _paged_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Prefill/training attention. q (B,S,H,hd); k/v (B,S,K,hd)."""
+    bq = min(block_q, max(16, q.shape[1]))
+    bk = min(block_k, max(16, q.shape[1]))
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         softcap=softcap, block_q=bq, block_k=bk,
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, context_lens,
+                           *, softcap: Optional[float] = None):
+    """Decode attention over an explicitly paged cache."""
+    return _paged_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                         softcap=softcap, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def decode_attention(q, cache_k, cache_v, context_lens, *,
+                     softcap: Optional[float] = None):
+    """Decode attention over a contiguous per-request cache row.
+
+    q (B,H,hd); cache_k/v (B,C,K,hd); context_lens (B,) — number of valid
+    slots (for ring buffers every written slot is valid; softmax is
+    permutation-invariant so slot order does not matter).
+
+    Implemented by viewing each row as pages of the paged kernel.
+    """
+    B, C, K, hd = cache_k.shape
+    for ps in (128, 64, 32, 16, 8):
+        if C % ps == 0:
+            break
+    else:
+        ps = C
+    mp = C // ps
+    kp = cache_k.reshape(B * mp, ps, K, hd)
+    vp = cache_v.reshape(B * mp, ps, K, hd)
+    bt = (jnp.arange(B)[:, None] * mp + jnp.arange(mp)[None, :]).astype(jnp.int32)
+    return _paged_pallas(q, kp, vp, bt, context_lens.astype(jnp.int32),
+                         softcap=softcap, interpret=_interpret())
+
+
+# re-export oracles for convenience
+flash_attention_ref = ref.flash_attention
+paged_decode_attention_ref = ref.paged_decode_attention
+kv_page_append = jax.jit(ref.kv_page_append)

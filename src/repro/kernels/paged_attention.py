@@ -1,0 +1,108 @@
+"""Paged decode attention as a Pallas TPU kernel — the serving hot spot.
+
+One query token per request attends to its paged KV cache. TPU adaptation
+of vLLM's CUDA paged-attention: instead of a thread block walking the page
+list, the *grid* walks (request, kv_head, page) with the page id resolved
+by a scalar-prefetched block table inside the K/V BlockSpec index_map —
+each step DMAs exactly one (page_size, head_dim) tile from HBM into VMEM.
+Flash-style running max/sum scratch merges pages; GQA query heads of one
+kv head are processed together as the tile's sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables, context_lens, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, scale: float,
+            softcap: Optional[float], max_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = context_lens[b]
+
+    @pl.when(p * page < ctx)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)           # (G, page)
+        tok = p * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tok < ctx, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(pexp, axis=1,
+                                                  keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           context_lens: jax.Array, *,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,H,hd); k/v_pages (P,page,K,hd); block_tables (B,MP) int32;
+    context_lens (B,) int32. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    P, page, K, _ = k_pages.shape
+    G = H // K
+    MP = block_tables.shape[1]
+    qg = q.reshape(B, K, G, hd)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, page=page, scale=scale,
+                               softcap=softcap, max_pages=MP)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, kh, p, bt, cl: (b, kh, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kh, p, bt, cl: (bt[b, p], 0, kh, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kh, p, bt, cl: (bt[b, p], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kh, p, bt, cl: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)

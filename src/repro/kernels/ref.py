@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels are tested against (tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap: Optional[float]):
+    return x if cap is None else cap * jnp.tanh(x / cap)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,S,K,hd) with H a multiple of K (GQA).
+    Causal (optionally sliding-window) attention. fp32 accumulation."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qf, kf) / jnp.sqrt(hd)
+    logits = _softcap(logits, softcap)
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= jj <= ii
+    if window is not None:
+        mask &= jj > ii - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           context_lens: jax.Array, *,
+                           softcap: Optional[float] = None) -> jax.Array:
+    """One-token decode attention over a paged KV cache.
+
+    q             (B, H, hd)
+    k_pages       (P, page_size, K, hd)   pooled pages
+    v_pages       (P, page_size, K, hd)
+    block_tables  (B, max_pages) int32    page ids per request (row-major)
+    context_lens  (B,) int32              valid tokens per request
+    returns       (B, H, hd)
+    """
+    B, H, hd = q.shape
+    P, page, K, _ = k_pages.shape
+    G = H // K
+    max_pages = block_tables.shape[1]
+
+    # gather each request's pages -> (B, max_pages*page, K, hd)
+    kg = k_pages[block_tables]                     # (B, mp, page, K, hd)
+    vg = v_pages[block_tables]
+    kg = kg.reshape(B, max_pages * page, K, hd).astype(jnp.float32)
+    vg = vg.reshape(B, max_pages * page, K, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qf, kg) / jnp.sqrt(hd)
+    logits = _softcap(logits, softcap)
+    valid = jnp.arange(max_pages * page)[None, :] < context_lens[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, vg)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def kv_page_append(k_pages: jax.Array, v_pages: jax.Array,
+                   k_new: jax.Array, v_new: jax.Array,
+                   block_tables: jax.Array, positions: jax.Array):
+    """Scatter one new token's K/V into the paged cache.
+
+    k_new/v_new (B, K, hd); positions (B,) absolute token index.
+    Returns updated (k_pages, v_pages)."""
+    page = k_pages.shape[1]
+    page_idx = positions // page
+    slot = positions % page
+    bidx = jnp.arange(k_new.shape[0])
+    pids = block_tables[bidx, page_idx]
+    k_pages = k_pages.at[pids, slot].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pids, slot].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages

@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo on
+# placeholder devices, print memory/cost analysis, and dump the roofline raw
+# terms to JSON for EXPERIMENTS.md.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k
+#   python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, applicable, build_step
+
+# roofline hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([0-9,]*)\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str, loop_trip: int = 1) -> Dict[str, int]:
+    """Sum result-tensor bytes of every collective op (per-device program).
+
+    XLA's post-optimization module counts a while-loop body once; passing
+    ``loop_trip`` (the layer count — the dominant loop) multiplies
+    collectives that live inside loop-body computations ("while"/"wide."
+    regions) by the trip count. Approximate but directionally exact: every
+    per-layer collective is restored, outside-loop ops stay x1.
+    """
+    out: Dict[str, int] = {}
+    mult = 1
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():       # computation header
+            mult = loop_trip if ("while" in line or "wide." in line) else 1
+        m = re.search(
+            r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|"
+            r"all-to-all|collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue                       # avoid double count of async pair
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _TUPLE_RE.findall(shapes_str))
+        out[kind] = out.get(kind, 0) + b * mult
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Optional[str] = None, verbose: bool = True) -> Dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        step_fn, args, jit_kw = build_step(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(step_fn, **jit_kw).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text(),
+                                loop_trip=cfg.num_layers)
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            chips=int(n_chips),
+            # memory_analysis is per-device
+            mem_bytes={
+                "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias": int(getattr(mem, "alias_size_in_bytes", 0)),
+            },
+            flops=float(cost.get("flops", 0.0)),
+            hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes=coll,
+        )
+        # raw HLO roofline terms (per-chip program → per-chip rates).
+        # CAVEAT (EXPERIMENTS.md §Roofline): XLA-CPU cost_analysis counts
+        # loop bodies once and charges in-place updates fully — compute is
+        # under-counted, decode memory over-counted. The analytic terms
+        # below are the calibrated numbers; collectives use the
+        # loop-corrected HLO parse.
+        coll_total = float(sum(coll.values()))
+        rec["roofline_hlo_raw"] = {
+            "compute_s": rec["flops"] / PEAK_FLOPS,
+            "memory_s": rec["hlo_bytes"] / HBM_BW,
+            "collective_s": coll_total / LINK_BW,
+        }
+        from repro.launch.analytic import analytic_roofline
+        ana = analytic_roofline(get_config(arch), shape,
+                                collective_bytes_per_chip=coll_total,
+                                chips=int(n_chips))
+        rec["roofline"] = ana.as_dict()
+        rec["bottleneck"] = ana.bottleneck
+        if verbose:
+            # memory_analysis is already per-device
+            per_dev = (rec["mem_bytes"]["argument"]
+                       + rec["mem_bytes"]["temp"]
+                       + rec["mem_bytes"]["output"]
+                       - rec["mem_bytes"]["alias"])
+            rec["mem_per_device"] = per_dev
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:8s} OK "
+                  f"compile={rec['compile_s']:6.1f}s "
+                  f"mem/dev={per_dev/2**30:6.2f}GiB "
+                  f"bottleneck={rec['bottleneck']}", flush=True)
+            print(f"  memory_analysis: {mem}", flush=True)
+            print(f"  cost_analysis: flops={rec['flops']:.3e} "
+                  f"bytes={rec['hlo_bytes']:.3e} coll={coll}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:8s} "
+                  f"FAIL {rec['error']}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch.replace('/', '_')}_{shape_name}_{mesh_name}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = list_archs(include_paper_model=False) if args.arch is None \
+        else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if not args.all and args.arch is None and args.shape is None:
+        ap.error("pass --all or --arch/--shape")
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, out_dir=args.out)
+                n_fail += rec["status"] == "fail"
+    print(f"[dryrun] done, failures={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

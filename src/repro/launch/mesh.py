@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A function, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per v5e pod; 2 pods over DCN for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    return jax.make_mesh((data, model), ("data", "model"))

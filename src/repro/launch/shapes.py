@@ -1,0 +1,167 @@
+"""Assigned input shapes × step builders for the dry-run and launchers.
+
+Shapes (assigned to this paper):
+  train_4k     seq 4,096   global_batch 256   train_step
+  prefill_32k  seq 32,768  global_batch 32    prefill step
+  decode_32k   seq 32,768  global_batch 128   serve_step (1 token vs cache)
+  long_500k    seq 524,288 global_batch 1     serve_step, sub-quadratic only
+
+``long_500k`` policy (DESIGN.md §4): SSM/hybrid run natively; dense/MoE/
+VLM/audio run the sliding-window (8192) attention variant; zamba2's 14
+shared-attention caches are sequence-sharded over the "data" axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, init_state
+from repro.training.train_loop import make_train_step
+
+LONG_WINDOW = 8192
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Per-shape config adaptation (window variant for long-context dense;
+    bf16 optimizer states for the 480B MoE — DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.has_attention \
+            and cfg.arch_type not in ("ssm", "hybrid") \
+            and cfg.sliding_window is None:
+        cfg = cfg.with_(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k":
+        c = adapt_config(cfg, shape)
+        if not c.supports_long_context:
+            return False, "pure full-attention arch at 500k context"
+    return True, ""
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    # 480B-scale MoE: bf16 moments to fit one pod (DESIGN.md §5)
+    if cfg.is_moe and cfg.num_experts >= 64:
+        return AdamWConfig(state_dtype="bfloat16")
+    return AdamWConfig()
+
+
+# --------------------------------------------------------------------------- #
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _batch_spec(mesh: Mesh) -> P:
+    return P(shd.batch_axes(mesh))
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, capacity: int,
+                   *, shard_batch: bool, shard_seq: bool):
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, capacity))
+    specs = shd.cache_specs(cfg, mesh, batch=batch, capacity=capacity,
+                            shard_batch=shard_batch, shard_seq=shard_seq)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=_named(mesh, p)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+               ) -> Tuple[Callable, tuple, dict]:
+    """Returns (step_fn, abstract_args, jit_kwargs) ready for
+    jax.jit(step_fn, **jit_kwargs).lower(*abstract_args)."""
+    cfg = adapt_config(cfg, shape)
+    from repro.models.common import set_mesh_axes
+    set_mesh_axes(mesh.axis_names,
+                  dict(zip(mesh.axis_names, mesh.devices.shape)), mesh=mesh)
+    bspec = _batch_spec(mesh)
+    # Serving (prefill/decode) replicates weights across the data axis when
+    # they fit model-parallel-only — FSDP all-gathers per layer are pure
+    # overhead for inference (§Perf iteration 2). Training always FSDPs.
+    from repro.core.costmodel import _param_count
+    model_axis = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    per_chip_gb = _param_count(cfg)["total"] * 2 / model_axis / 2 ** 30
+    fsdp = shape.kind == "train" or per_chip_gb > 8.0
+    params_abs = shd.shard_params_abstract(cfg, mesh, fsdp=fsdp)
+    F = cfg.frontend_tokens if cfg.frontend else 0
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        opt = opt_config_for(cfg)
+        step_fn = make_train_step(cfg, opt)
+        opt_abs = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(opt.state_dtype), sharding=p.sharding),
+            {"m": params_abs, "v": params_abs})
+        opt_abs["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        batch = {"tokens": jax.ShapeDtypeStruct(
+            (B, shape.seq_len - F), jnp.int32,
+            sharding=_named(mesh, bspec))}
+        if F:
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (B, F, cfg.d_model), jnp.dtype(cfg.dtype),
+                sharding=_named(mesh, P(bspec[0] if bspec else None,
+                                        None, None)))
+        return step_fn, (params_abs, opt_abs, batch), \
+            dict(donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = model.prefill(cfg, params, batch["tokens"],
+                                           batch.get("embeds"),
+                                           last_only=True)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+        batch = {"tokens": jax.ShapeDtypeStruct(
+            (B, shape.seq_len - F), jnp.int32,
+            sharding=_named(mesh, bspec))}
+        if F:
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (B, F, cfg.d_model), jnp.dtype(cfg.dtype),
+                sharding=_named(mesh, P(bspec[0] if bspec else None,
+                                        None, None)))
+        return prefill_step, (params_abs, batch), {}
+
+    # decode
+    shard_batch = B > 1
+    shard_seq = not shard_batch
+    capacity = shape.seq_len
+
+    def serve_step(params, tokens, pos, caches):
+        logits, caches = model.decode_step(cfg, params, tokens, pos, caches)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    tok_spec = bspec if shard_batch else P(None)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                  sharding=_named(mesh, P(tok_spec[0], None)))
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32,
+                               sharding=_named(mesh, P(tok_spec[0])))
+    caches = abstract_cache(cfg, mesh, B, capacity,
+                            shard_batch=shard_batch, shard_seq=shard_seq)
+    return serve_step, (params_abs, tokens, pos, caches), \
+        dict(donate_argnums=(3,))

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+On real hardware this runs the sharded train step on the production mesh;
+on CPU it runs reduced configs for smoke/integration. The mesh/sharding
+path is identical — only the device count differs.
+
+Usage:
+  python -m repro.launch.train --arch qwen3-8b --steps 50 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import model
+from repro.training.data import DataConfig, SyntheticDataset
+from repro.training.optimizer import AdamWConfig, init_state
+from repro.training.train_loop import make_train_step
+from repro.training import checkpoint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant of the family")
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().with_(dtype="float32", param_dtype="float32")
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    opt = AdamWConfig(lr=args.lr)
+    if args.data_axis * args.model_axis > 1:
+        from repro.models.common import set_mesh_axes
+        set_mesh_axes(mesh.axis_names,
+                      dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+    with mesh:
+        specs = shd.param_specs(cfg, mesh)
+        params = model.init(cfg, jax.random.PRNGKey(0))
+        params = {k: jax.device_put(
+            v, jax.sharding.NamedSharding(mesh, specs[k]))
+            for k, v in params.items()}
+        opt_state = init_state(params, opt)
+        step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+        dcfg = DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq,
+            batch_size=args.batch, seed=0,
+            frontend_tokens=cfg.frontend_tokens if cfg.frontend else 0,
+            d_model=cfg.d_model)
+        ds = SyntheticDataset(dcfg)
+        t0 = time.time()
+        for i, batch in enumerate(ds.batches()):
+            if i >= args.steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if "embeds" in batch:
+                batch["embeds"] = batch["embeds"].astype(cfg.dtype)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"({(time.time()-t0):.1f}s)", flush=True)
+    if args.save:
+        checkpoint.save(args.save, params,
+                        meta={"step": np.asarray(args.steps)})
+        print(f"saved {args.save}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

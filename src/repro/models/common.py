@@ -1,0 +1,181 @@
+"""Shared building blocks: parameter metadata, norms, rotary embeddings.
+
+The framework is pure JAX (no flax). Every module contributes parameter
+*metadata* — (shape, logical axes, init scale) — into a flat dict keyed by
+path. From that single source we derive:
+  * materialized params            (init_params)
+  * abstract ShapeDtypeStructs     (abstract_params, for the dry-run)
+  * PartitionSpecs                 (via distributed.sharding rules)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis names. distributed/sharding.py maps these to mesh axes.
+VOCAB = "vocab"
+EMBED = "embed"        # d_model
+HEADS = "heads"        # fused q heads * head_dim
+KV = "kv"              # fused kv heads * head_dim
+MLP = "mlp"            # ffn hidden
+EXPERT = "expert"
+INNER = "inner"        # ssm/xlstm inner width
+STATE = "state"        # ssm state dim
+LAYER = "layer"        # stacked-layer leading dim
+NUL = None
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Dict[str, ParamMeta]
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # last dim is fan-out by convention; everything before contracts
+    return int(np.prod(shape[:-1]))
+
+
+def materialize(meta: ParamMeta, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, dtype)
+    std = meta.scale / math.sqrt(max(1, _fan_in(meta.shape)))
+    if meta.init == "small":
+        std *= 0.1
+    return (std * jax.random.normal(key, meta.shape, jnp.float32)).astype(dtype)
+
+
+def init_params(tree: ParamTree, key: jax.Array, dtype) -> Dict[str, jax.Array]:
+    names = sorted(tree)
+    keys = jax.random.split(key, len(names))
+    return {n: materialize(tree[n], k, dtype) for n, k in zip(names, keys)}
+
+
+def abstract_params(tree: ParamTree, dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {n: jax.ShapeDtypeStruct(m.shape, dtype) for n, m in tree.items()}
+
+
+def param_axes(tree: ParamTree) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {n: m.axes for n, m in tree.items()}
+
+
+# --------------------------------------------------------------------------- #
+# numerics
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., :, None, :]                      # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) float; labels (...) int.
+
+    The label term uses a one-hot contraction instead of take_along_axis —
+    a gather across a vocab-sharded logits tensor would force GSPMD to
+    replicate it; the einsum keeps the sharding.
+    """
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.einsum("...v,...v->...", logits, onehot).astype(jnp.float32)
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+_ACTIVE_MESH_AXES: tuple = ()
+_ACTIVE_MESH_SIZES: dict = {}
+_ACTIVE_MESH = None
+
+
+def set_mesh_axes(axes, sizes: dict | None = None, mesh=None) -> None:
+    """Declare the mesh axis names (and sizes) activation constraints may
+    reference. Called by the launchers (build_step / train) — empty in CPU
+    tests, in which case maybe_constrain is a no-op."""
+    global _ACTIVE_MESH_AXES, _ACTIVE_MESH_SIZES, _ACTIVE_MESH
+    _ACTIVE_MESH_AXES = tuple(axes)
+    _ACTIVE_MESH_SIZES = dict(sizes or {})
+    _ACTIVE_MESH = mesh
+
+
+def active_mesh():
+    return _ACTIVE_MESH
+
+
+def data_shards() -> int:
+    """Product of the batch-axis sizes of the active mesh (1 in tests)."""
+    n = 1
+    for a in BATCH_AXES:
+        n *= _ACTIVE_MESH_SIZES.get(a, 1)
+    return n
+
+
+def maybe_constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the declared mesh axes; no-op when
+    none are declared. axes entries may be None / str / tuple."""
+    names = set(_ACTIVE_MESH_AXES)
+    if not names:
+        return x
+
+    def ok(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            picked = tuple(x_ for x_ in a if x_ in names)
+            return picked or None
+        return a if a in names else None
+
+    spec = jax.sharding.PartitionSpec(*[ok(a) for a in axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+BATCH_AXES = ("pod", "data")

@@ -1,0 +1,444 @@
+"""Model assembly: pattern-driven block stacks with scanned homogeneous
+segments, shared-attention (Zamba2-style) support, prefill/decode/train paths.
+
+Params live in a flat dict ``{path: array}``. Layers of the same kind are
+stacked along a leading LAYER axis and executed with ``lax.scan`` over
+contiguous segments of the layer pattern — this keeps compile time sane for
+80-layer models while supporting interleaved patterns.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mlp, moe, ssm, xlstm
+from .common import (BATCH_AXES, EMBED, LAYER, NUL, VOCAB, ParamMeta,
+                     ParamTree, abstract_params, init_params,
+                     maybe_constrain, rms_norm)
+from .config import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+
+Params = Dict[str, jax.Array]
+Cache = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# parameter tree
+# --------------------------------------------------------------------------- #
+def _block_tree(cfg: ModelConfig, kind: str) -> ParamTree:
+    """Per-layer (unstacked) parameter tree for one block kind."""
+    d = cfg.d_model
+    t: ParamTree = {}
+    if kind == ATTN:
+        t["norm1"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in attention.attn_params(cfg).items():
+            t[f"attn/{k}"] = m
+        t["norm2"] = ParamMeta((d,), (EMBED,), init="ones")
+        if cfg.is_moe:
+            for k, m in moe.moe_params(cfg).items():
+                t[f"moe/{k}"] = m
+            if cfg.moe_dense_residual:
+                for k, m in mlp.mlp_params(cfg).items():
+                    t[f"mlp/{k}"] = m
+        else:
+            for k, m in mlp.mlp_params(cfg).items():
+                t[f"mlp/{k}"] = m
+    elif kind == MAMBA:
+        t["norm"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in ssm.ssm_params(cfg).items():
+            t[f"ssm/{k}"] = m
+    elif kind == SLSTM:
+        t["norm"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in xlstm.slstm_params(cfg).items():
+            t[f"cell/{k}"] = m
+    elif kind == MLSTM:
+        t["norm"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in xlstm.mlstm_params(cfg).items():
+            t[f"cell/{k}"] = m
+    else:
+        raise ValueError(kind)
+    return t
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[str, int, int]]:
+    """Contiguous same-kind runs of the pattern: (kind, offset_in_kind, len).
+
+    ``offset_in_kind`` indexes into the stacked params of that kind.
+    """
+    pat = cfg.pattern()
+    segs: List[Tuple[str, int, int]] = []
+    counts: Dict[str, int] = {}
+    i = 0
+    while i < len(pat):
+        j = i
+        while j < len(pat) and pat[j] == pat[i]:
+            j += 1
+        k = pat[i]
+        segs.append((k, counts.get(k, 0), j - i))
+        counts[k] = counts.get(k, 0) + (j - i)
+        i = j
+    return segs
+
+
+def kind_counts(cfg: ModelConfig) -> Dict[str, int]:
+    c: Dict[str, int] = {}
+    for ch in cfg.pattern():
+        c[ch] = c.get(ch, 0) + 1
+    return c
+
+
+def num_shared_invocations(cfg: ModelConfig) -> int:
+    if not cfg.shared_attention_every:
+        return 0
+    return cfg.num_layers // cfg.shared_attention_every
+
+
+def param_tree(cfg: ModelConfig) -> ParamTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    t: ParamTree = {"embed/tok": ParamMeta((v, d), (VOCAB, EMBED))}
+    for kind, n in kind_counts(cfg).items():
+        for k, m in _block_tree(cfg, kind).items():
+            t[f"{kind}/{k}"] = ParamMeta((n,) + m.shape, (LAYER,) + m.axes,
+                                         init=m.init, scale=m.scale)
+    if num_shared_invocations(cfg):
+        scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
+            num_kv_heads=cfg.shared_attn_kv_heads)
+        t["shared/norm1"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in attention.attn_params(scfg).items():
+            t[f"shared/attn/{k}"] = m
+        t["shared/norm2"] = ParamMeta((d,), (EMBED,), init="ones")
+        for k, m in mlp.mlp_params(cfg).items():
+            t[f"shared/mlp/{k}"] = m
+    t["final_norm"] = ParamMeta((d,), (EMBED,), init="ones")
+    if not cfg.tie_embeddings:
+        t["head"] = ParamMeta((d, v), (EMBED, VOCAB))
+    return t
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    return init_params(param_tree(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    return abstract_params(param_tree(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def _sub(params: Params, prefix: str) -> Params:
+    pl = len(prefix)
+    return {k[pl:]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _constrain_acts(x: jax.Array) -> jax.Array:
+    """Residual-stream sharding: batch over (pod,data); sequence over
+    "model" (Megatron-style sequence parallelism) — without it the remat-
+    saved per-layer activations are replicated across the model axis."""
+    seq = "model" if x.shape[1] > 1 else None
+    return maybe_constrain(x, BATCH_AXES, seq, None)
+
+
+# --------------------------------------------------------------------------- #
+# block application
+# --------------------------------------------------------------------------- #
+def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
+                         impl: str):
+    """Returns (x_out, cache_slice, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == ATTN:
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        y, (k, v) = attention.attn_prefill(_sub(p, "attn/"), cfg, h, positions,
+                                           impl=impl)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        if cfg.is_moe:
+            y, aux = moe.moe_apply(_sub(p, "moe/"), cfg, h)
+            if cfg.moe_dense_residual:
+                y = y + mlp.mlp_apply(_sub(p, "mlp/"), h)
+        else:
+            y = mlp.mlp_apply(_sub(p, "mlp/"), h)
+        return x + y, {"k": k, "v": v}, aux
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    if kind == MAMBA:
+        y, cache = ssm.ssm_prefill(_sub(p, "ssm/"), cfg, h)
+    elif kind == MLSTM:
+        y, cache = xlstm.mlstm_prefill(_sub(p, "cell/"), cfg, h)
+    elif kind == SLSTM:
+        y, cache = xlstm.slstm_prefill(_sub(p, "cell/"), cfg, h)
+    else:
+        raise ValueError(kind)
+    return x + y, cache, aux
+
+
+def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, pos,
+                        cache, impl: str):
+    if kind == ATTN:
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        y, (ck, cv) = attention.attn_decode(_sub(p, "attn/"), cfg, h, pos,
+                                            cache["k"], cache["v"], impl=impl)
+        x = x + y
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        if cfg.is_moe:
+            y, _ = moe.moe_apply(_sub(p, "moe/"), cfg, h)
+            if cfg.moe_dense_residual:
+                y = y + mlp.mlp_apply(_sub(p, "mlp/"), h)
+        else:
+            y = mlp.mlp_apply(_sub(p, "mlp/"), h)
+        return x + y, {"k": ck, "v": cv}
+    h = rms_norm(x, p["norm"], cfg.rms_eps)
+    if kind == MAMBA:
+        y, cache = ssm.ssm_decode(_sub(p, "ssm/"), cfg, h, cache)
+    elif kind == MLSTM:
+        y, cache = xlstm.mlstm_decode(_sub(p, "cell/"), cfg, h, cache)
+    elif kind == SLSTM:
+        y, cache = xlstm.slstm_decode(_sub(p, "cell/"), cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    return x + y, cache
+
+
+def _shared_attn_prefill(cfg, params, x, positions, impl):
+    scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
+        num_kv_heads=cfg.shared_attn_kv_heads)
+    p = _sub(params, "shared/")
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    y, (k, v) = attention.attn_prefill(
+        _sub(p, "attn/"), scfg, h, positions,
+        kv_heads=scfg.num_kv_heads, impl=impl)
+    x = x + y
+    h = rms_norm(x, p["norm2"], cfg.rms_eps)
+    return x + mlp.mlp_apply(_sub(p, "mlp/"), h), (k, v)
+
+
+def _shared_attn_decode(cfg, params, x, pos, ck, cv, impl):
+    scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
+        num_kv_heads=cfg.shared_attn_kv_heads)
+    p = _sub(params, "shared/")
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    y, (ck, cv) = attention.attn_decode(
+        _sub(p, "attn/"), scfg, h, pos, ck, cv,
+        kv_heads=scfg.num_kv_heads, impl=impl)
+    x = x + y
+    h = rms_norm(x, p["norm2"], cfg.rms_eps)
+    return x + mlp.mlp_apply(_sub(p, "mlp/"), h), (ck, cv)
+
+
+# --------------------------------------------------------------------------- #
+# embeddings & logits
+# --------------------------------------------------------------------------- #
+def embed_inputs(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 embeds: Optional[jax.Array]) -> jax.Array:
+    x = jnp.take(params["embed/tok"], tokens, axis=0).astype(cfg.dtype)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def logits_fn(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed/tok"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("...d,dv->...v", x, head)
+    # batch over (pod, data), vocab over model — keeps CE sharded
+    return maybe_constrain(logits, BATCH_AXES,
+                           *([None] * (logits.ndim - 2)), "model")
+
+
+# --------------------------------------------------------------------------- #
+# full passes
+# --------------------------------------------------------------------------- #
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+               positions: jax.Array, impl: str,
+               decode: bool = False, pos=None, caches: Optional[Cache] = None):
+    """Shared driver for prefill (decode=False) and decode (decode=True)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, List] = {k: [] for k in cfg.block_kinds()}
+    shared_caches: List = []
+    every = cfg.shared_attention_every
+    n_done = 0          # pattern layers consumed
+    shared_i = 0
+
+    for kind, off, length in segments(cfg):
+        stacked = _sub(params, f"{kind}/")
+        # split the segment at shared-attention insertion points
+        sub_start = 0
+        while sub_start < length:
+            if every:
+                upto = (n_done // every + 1) * every - n_done
+                run = min(length - sub_start, upto)
+            else:
+                run = length - sub_start
+            seg_params = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, off + sub_start,
+                                               off + sub_start + run, axis=0),
+                stacked)
+            # --- scan over the run ---
+            x = _constrain_acts(x)
+            if decode:
+                cache_off = _cache_offset(new_caches[kind])
+                seg_cache = jax.tree.map(
+                    lambda a: jax.lax.slice_in_dim(a, cache_off,
+                                                   cache_off + run, axis=0),
+                    caches[kind])
+
+                def body_d(carry, xs):
+                    xc = carry
+                    lp, lc = xs
+                    y, c2 = _apply_block_decode(cfg, kind, lp, xc, pos, lc,
+                                                impl)
+                    return y, c2
+
+                body = jax.checkpoint(body_d) if cfg.remat else body_d
+                x, seg_cache_out = jax.lax.scan(body, x,
+                                                (seg_params, seg_cache))
+                new_caches[kind].append(seg_cache_out)
+            else:
+                def body_p(carry, lp):
+                    xc, aux = carry
+                    y, c2, a = _apply_block_prefill(cfg, kind, lp, xc,
+                                                    positions, impl)
+                    return (y, aux + a), c2
+
+                body = jax.checkpoint(body_p) if cfg.remat else body_p
+                (x, aux_total), seg_cache_out = jax.lax.scan(
+                    body, (x, aux_total), seg_params)
+                new_caches[kind].append(seg_cache_out)
+            n_done += run
+            sub_start += run
+            if every and n_done % every == 0 and shared_i < num_shared_invocations(cfg):
+                if decode:
+                    ck = caches["shared"]["k"][shared_i]
+                    cv = caches["shared"]["v"][shared_i]
+                    x, (ck, cv) = _shared_attn_decode(cfg, params, x, pos,
+                                                      ck, cv, impl)
+                    shared_caches.append((ck, cv))
+                else:
+                    x, (k, v) = _shared_attn_prefill(cfg, params, x,
+                                                     positions, impl)
+                    shared_caches.append((k, v))
+                shared_i += 1
+
+    out_caches: Cache = {}
+    for kind, lst in new_caches.items():
+        if lst:
+            out_caches[kind] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *lst) \
+                if len(lst) > 1 else lst[0]
+    if shared_caches:
+        out_caches["shared"] = {
+            "k": jnp.stack([c[0] for c in shared_caches]),
+            "v": jnp.stack([c[1] for c in shared_caches]),
+        }
+    return x, out_caches, aux_total
+
+
+def _cache_offset(collected: List) -> int:
+    off = 0
+    for c in collected:
+        leaf = jax.tree.leaves(c)[0]
+        off += leaf.shape[0]
+    return off
+
+
+def forward_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  embeds: Optional[jax.Array] = None, impl: str = "xla"
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_total, V), moe aux loss)."""
+    x = embed_inputs(cfg, params, tokens, embeds)
+    x = _constrain_acts(x)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _, aux = _run_stack(cfg, params, x, positions, impl)
+    return logits_fn(cfg, params, x), aux
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            embeds: Optional[jax.Array] = None, impl: str = "xla",
+            last_only: bool = False) -> Tuple[jax.Array, Cache]:
+    """Returns (logits, caches seeded with the prompt). ``last_only``
+    projects only the final position — serving prefill never needs the
+    (B, S, vocab) tensor."""
+    x = embed_inputs(cfg, params, tokens, embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, caches, _ = _run_stack(cfg, params, x, positions, impl)
+    if last_only:
+        return logits_fn(cfg, params, x[:, -1]), caches
+    return logits_fn(cfg, params, x), caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                pos: jax.Array, caches: Cache, impl: str = "xla"
+                ) -> Tuple[jax.Array, Cache]:
+    """tokens (B,1); pos (B,) absolute positions. Returns (logits (B,V), caches)."""
+    x = jnp.take(params["embed/tok"], tokens, axis=0).astype(cfg.dtype)
+    x, new_caches, _ = _run_stack(cfg, params, x, None, impl,
+                                  decode=True, pos=pos, caches=caches)
+    return logits_fn(cfg, params, x[:, 0]), new_caches
+
+
+def seed_cache(cfg: ModelConfig, cache: Cache, prefill_caches: Cache,
+               prompt_len: int) -> Cache:
+    """Copy prefill outputs into a decode cache of larger capacity.
+
+    Attention K/V from the prompt land at their absolute positions (ring-
+    buffer slots for windowed attention); recurrent states are taken as-is.
+    """
+    out = dict(cache)
+
+    def _place_kv(dst, src):
+        # dst (L,B,C,K,hd), src (L,B,S,K,hd)
+        C = dst.shape[2]
+        S = src.shape[2]
+        if S <= C:
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, 0, axis=2)
+        # windowed: last C tokens, rotated so token p sits at slot p % C
+        tail = src[:, :, S - C:]
+        start = (S - C) % C
+        rolled = jnp.roll(tail, shift=start, axis=2)
+        return rolled
+
+    for kind in (ATTN, "shared"):
+        if kind in cache and kind in prefill_caches:
+            out[kind] = {
+                "k": _place_kv(cache[kind]["k"], prefill_caches[kind]["k"]),
+                "v": _place_kv(cache[kind]["v"], prefill_caches[kind]["v"]),
+            }
+    for kind in (MAMBA, MLSTM, SLSTM):
+        if kind in cache and kind in prefill_caches:
+            out[kind] = prefill_caches[kind]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# cache init
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=None) -> Cache:
+    """Decode caches at a given context capacity (window-clamped for attn)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kc = kind_counts(cfg)
+    hd = cfg.resolved_head_dim
+    caches: Cache = {}
+    if ATTN in kc:
+        C = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+        shape = (kc[ATTN], batch, C, cfg.num_kv_heads, hd)
+        caches[ATTN] = {"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)}
+    if MAMBA in kc:
+        one = ssm.ssm_init_cache(cfg, batch, dtype)
+        caches[MAMBA] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (kc[MAMBA],) + a.shape).copy(), one)
+    if MLSTM in kc:
+        one = xlstm.mlstm_init_cache(cfg, batch)
+        caches[MLSTM] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (kc[MLSTM],) + a.shape).copy(), one)
+    if SLSTM in kc:
+        one = xlstm.slstm_init_cache(cfg, batch)
+        caches[SLSTM] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (kc[SLSTM],) + a.shape).copy(), one)
+    n_inv = num_shared_invocations(cfg)
+    if n_inv:
+        kv = cfg.shared_attn_kv_heads or cfg.num_kv_heads
+        shape = (n_inv, batch, capacity, kv, hd)
+        caches["shared"] = {"k": jnp.zeros(shape, dtype),
+                            "v": jnp.zeros(shape, dtype)}
+    return caches

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block — chunked matmul form for training/prefill (TPU-native:
+the recurrence becomes MXU matmuls over chunk-local decay matrices plus a
+short inter-chunk scan), single-step recurrent form for decode.
+
+Layout follows the Mamba2 paper with n_groups = 1:
+  in_proj -> [z (di), x (di), B (n), C (n), dt (nh)]
+  causal conv1d over [x, B, C]; SSD; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, INNER, NUL, STATE, ParamMeta, ParamTree, rms_norm
+from .config import ModelConfig
+
+
+def ssm_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = di + 2 * n
+    return di, nh, n, conv_dim
+
+
+def ssm_params(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    di, nh, n, conv_dim = ssm_dims(cfg)
+    w = cfg.ssm_conv_width
+    return {
+        "in_proj": ParamMeta((d, 2 * di + 2 * n + nh), (EMBED, INNER)),
+        "conv_w": ParamMeta((w, conv_dim), (NUL, INNER), init="small"),
+        "conv_b": ParamMeta((conv_dim,), (INNER,), init="zeros"),
+        "A_log": ParamMeta((nh,), (NUL,), init="ones"),
+        "D": ParamMeta((nh,), (NUL,), init="ones"),
+        "dt_bias": ParamMeta((nh,), (NUL,), init="zeros"),
+        "norm": ParamMeta((di,), (INNER,), init="ones"),
+        "out_proj": ParamMeta((di, d), (INNER, EMBED)),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, u: jax.Array):
+    di, nh, n, _ = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., l) -> (..., l, l) lower-tri seg[i,j] = sum_{j+1..i} a."""
+    cum = jnp.cumsum(a, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    l = a.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssm_prefill(p, cfg: ModelConfig, u: jax.Array,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """u (B,S,d) with S a multiple of ssm_chunk (pad upstream).
+
+    Returns (y (B,S,d), cache {h, conv}).
+    """
+    B, S0, _ = u.shape
+    di, nh, n, conv_dim = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S0)
+    # pad the sequence to a chunk multiple; padded steps get dt = 0, which
+    # leaves the state untouched (dA = exp(0) = 1, input weight dt = 0)
+    S = -(-S0 // Q) * Q
+    nc = S // Q
+
+    z, xs, Bm, Cm, dt = _split_proj(p, cfg, u)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)               # (B,S0,conv)
+    w = cfg.ssm_conv_width
+    conv_cache = xbc[:, max(0, S0 - (w - 1)):, :]
+    if conv_cache.shape[1] < w - 1:
+        conv_cache = jnp.pad(conv_cache,
+                             ((0, 0), (w - 1 - conv_cache.shape[1], 0), (0, 0)))
+    if S != S0:
+        z, xs, Bm, Cm, dt, xbc = (
+            jnp.pad(t, ((0, 0), (0, S - S0), (0, 0)))
+            for t in (z, xs, Bm, Cm, dt, xbc))
+    pad = jnp.zeros((B, w - 1, conv_dim), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_pad[:, i:i + S] * p["conv_w"][w - 1 - i]
+               for i in range(w)) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if S != S0:
+        valid = (jnp.arange(S) < S0)[None, :, None]
+        dt = dt * valid
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (nh,)
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+
+    # chunked SSD
+    c = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    dt_c, x_c = c(dt), c(xh)                                   # (B,nc,Q,nh[,hd])
+    B_c, C_c = c(Bm.astype(jnp.float32)), c(Cm.astype(jnp.float32))  # (B,nc,Q,n)
+    a_c = dt_c * A                                             # (B,nc,Q,nh)
+    a_cum = jnp.cumsum(a_c, axis=2)
+    L = jnp.exp(_segsum(jnp.moveaxis(a_c, -1, 2)))             # (B,nc,nh,Q,Q)
+    xdt = x_c * dt_c[..., None]                                # (B,nc,Q,nh,hd)
+
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        C_c, B_c, L, xdt)
+    decay_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)           # (B,nc,Q,nh)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", B_c, decay_end, xdt)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                  # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # (B,nc,nh,hd,n)
+
+    in_decay = jnp.exp(a_cum)                                  # (B,nc,Q,nh)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", C_c, h_prevs, in_decay)
+    y = (y_diag + y_off).reshape(B, S, nh, hd) \
+        + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(u.dtype)[:, :S0]
+
+    y = rms_norm(y * jax.nn.silu(z[:, :S0]), p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    cache = {"h": h_last.astype(jnp.float32), "conv": conv_cache}
+    return out, cache
+
+
+def ssm_decode(p, cfg: ModelConfig, u: jax.Array, cache: Dict[str, jax.Array],
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """u (B,1,d); cache {'h': (B,nh,hd,n) fp32, 'conv': (B,w-1,conv_dim)}."""
+    B = u.shape[0]
+    di, nh, n, conv_dim = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+
+    z, xs, Bm, Cm, dt = _split_proj(p, cfg, u)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]         # (B,conv)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,w,conv)
+    # prefill convention: conv_w[0] weights the newest token — flip history
+    conv = jnp.einsum("bwc,wc->bc", jnp.flip(hist, axis=1),
+                      p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                       # (B,nh)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)    # (B,n)
+
+    h = cache["h"] * dA[:, :, None, None] \
+        + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, nh, n, conv_dim = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype)}

@@ -1,0 +1,225 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel training form) and sLSTM
+(scalar memory with exponential gating, sequential scan).
+
+Training/prefill uses the stabilized parallel form from the xLSTM paper
+(arXiv:2405.04517); decode uses the recurrent update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, INNER, NUL, ParamMeta, ParamTree, rms_norm
+from .config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def mlstm_params(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    di, nh, hd = _dims(cfg)
+    return {
+        "wq": ParamMeta((d, di), (EMBED, INNER)),
+        "wk": ParamMeta((d, di), (EMBED, INNER)),
+        "wv": ParamMeta((d, di), (EMBED, INNER)),
+        "wi": ParamMeta((d, nh), (EMBED, NUL), init="small"),
+        "wf": ParamMeta((d, nh), (EMBED, NUL), init="small"),
+        "bf": ParamMeta((nh,), (NUL,), init="ones"),
+        "wo": ParamMeta((d, di), (EMBED, INNER), init="small"),
+        "norm": ParamMeta((di,), (INNER,), init="ones"),
+        "down": ParamMeta((di, d), (INNER, EMBED)),
+    }
+
+
+def _qkvif(p, cfg, x):
+    B, S, _ = x.shape
+    di, nh, hd = _dims(cfg)
+    q = jnp.einsum("bsd,di->bsi", x, p["wq"]).reshape(B, S, nh, hd)
+    k = jnp.einsum("bsd,di->bsi", x, p["wk"]).reshape(B, S, nh, hd) / jnp.sqrt(hd)
+    v = jnp.einsum("bsd,di->bsi", x, p["wv"]).reshape(B, S, nh, hd)
+    i_raw = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    f_raw = (jnp.einsum("bsd,dh->bsh", x, p["wf"]) + p["bf"]).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_prefill(p, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunkwise-parallel stabilized mLSTM (xLSTM paper App. form): a
+    lax.scan over chunks carries (C, n, m); within a chunk the quadratic
+    decay matrix is only (Q, Q). O(S·Q) memory, not O(S^2); the chunk body
+    is rematerialized in the backward pass."""
+    B, S0, _ = x.shape
+    di, nh, hd = _dims(cfg)
+    q, k, v, i_raw, f_raw = _qkvif(p, cfg, x)
+    Q = min(cfg.ssm_chunk, S0)
+    S = -(-S0 // Q) * Q
+    if S != S0:
+        pad = ((0, 0), (0, S - S0), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+        # padded steps: f-gate -> 1 (log_f 0), i-gate -> -inf (no input)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, S - S0), (0, 0)),
+                        constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, S - S0), (0, 0)),
+                        constant_values=40.0)
+    nc = S // Q
+    cs = lambda t: jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+    qs, ks, vs = cs(q.astype(jnp.float32)), cs(k.astype(jnp.float32)), \
+        cs(v.astype(jnp.float32))
+    is_, fs = cs(i_raw), cs(jax.nn.log_sigmoid(f_raw))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk(carry, inp):
+        C_prev, n_prev, m_prev = carry                # (B,nh,hd,hd) ...
+        qc, kc, vc, ic, fc = inp                      # (B,Q,nh,hd) / (B,Q,nh)
+        bcum = jnp.cumsum(fc, axis=1)                 # (B,Q,nh)
+        total = bcum[:, -1]                           # (B,nh)
+        # intra-chunk decay matrix  logD[i,j] = bcum_i - bcum_j + i_j
+        seg = bcum[:, :, None, :] - bcum[:, None, :, :] + ic[:, None, :, :]
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        m_intra = jnp.maximum(jnp.max(seg, axis=2), -1e30)    # (B,Q,nh)
+        m_inter = bcum + m_prev[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)                   # (B,Q,nh)
+        D = jnp.exp(seg - m_t[:, :, None, :])                 # (B,Q,Q,nh)
+        qk = jnp.einsum("bshd,bthd->bsth", qc, kc)            # (B,Q,Q,nh)
+        w = qk * D
+        h_intra = jnp.einsum("bsth,bthd->bshd", w, vc)
+        scale_in = jnp.exp(m_inter - m_t)                     # (B,Q,nh)
+        h_inter = jnp.einsum("bshd,bhed->bshe", qc, C_prev) \
+            * scale_in[..., None]
+        num = h_intra + h_inter                               # (B,Q,nh,hd)
+        # denominator n_t·q_t: intra = sum_j w[s,j]; inter = (q·n_prev)·decay
+        dq = w.sum(axis=2) \
+            + jnp.einsum("bshd,bhd->bsh", qc, n_prev) * scale_in
+        denom = jnp.maximum(jnp.abs(dq), jnp.exp(-m_t))
+        y = num / jnp.maximum(denom, 1e-6)[..., None]
+        # ---- state update to chunk end -----------------------------------
+        wk = jnp.exp(total[:, None, :] - bcum + ic)           # unstabilized
+        m_candidates = total[:, None, :] - bcum + ic          # (B,Q,nh)
+        m_next = jnp.maximum(total + m_prev,
+                             jnp.max(m_candidates, axis=1))   # (B,nh)
+        wk = jnp.exp(m_candidates - m_next[:, None, :])
+        C_new = jnp.exp(total + m_prev - m_next)[:, :, None, None] * C_prev \
+            + jnp.einsum("bth,bthd,bthe->bhde", wk, vc, kc)
+        n_new = jnp.exp(total + m_prev - m_next)[:, :, None] * n_prev \
+            + jnp.einsum("bth,bthd->bhd", wk, kc)
+        return (C_new, n_new, m_next), y
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    (C, nvec, m_end), ys = jax.lax.scan(jax.checkpoint(chunk), (C0, n0, m0),
+                                        (qs, ks, vs, is_, fs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)[:, :S0].astype(x.dtype)
+    cache = {"C": C, "n": nvec, "m": m_end}
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    y = y * jax.nn.sigmoid(jnp.einsum("bsd,di->bsi", x, p["wo"]))
+    return jnp.einsum("bsi,id->bsd", y, p["down"]), cache
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    di, nh, hd = _dims(cfg)
+    q, k, v, i_raw, f_raw = _qkvif(p, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    i_raw, log_f = i_raw[:, 0], jax.nn.log_sigmoid(f_raw[:, 0])  # (B,nh)
+    m_old, C_old, n_old = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(log_f + m_old, i_raw)
+    a = jnp.exp(log_f + m_old - m_new)                        # (B,nh)
+    b = jnp.exp(i_raw - m_new)
+    C = a[:, :, None, None] * C_old \
+        + b[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", v.astype(jnp.float32),
+                                           k.astype(jnp.float32))
+    n = a[:, :, None] * n_old + b[:, :, None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(jnp.float32))),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / jnp.maximum(den, 1e-6)).reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    y = y * jax.nn.sigmoid(jnp.einsum("bsd,di->bsi", x, p["wo"]))
+    return jnp.einsum("bsi,id->bsd", y, p["down"]), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, nh, hd = _dims(cfg)
+    return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def slstm_params(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    di, nh, hd = _dims(cfg)
+    return {
+        "w_in": ParamMeta((d, 4 * di), (EMBED, INNER)),
+        "r": ParamMeta((nh, hd, 4 * hd), (NUL, NUL, INNER), init="small"),
+        "b": ParamMeta((4 * di,), (INNER,), init="zeros"),
+        "norm": ParamMeta((di,), (INNER,), init="ones"),
+        "down": ParamMeta((di, d), (INNER, EMBED)),
+    }
+
+
+def _slstm_step(p, cfg, xt, state):
+    """xt (B, 4*di) pre-projected input; state dict of (B, di) fp32."""
+    di, nh, hd = _dims(cfg)
+    B = xt.shape[0]
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hdk->bhk", h.reshape(B, nh, hd).astype(xt.dtype),
+                     p["r"]).reshape(B, 4 * di)
+    zifo = (xt + rec).astype(jnp.float32) + p["b"].astype(jnp.float32)
+    z, i_raw, f_raw, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    a = jnp.exp(log_f + m - m_new)
+    b = jnp.exp(i_raw - m_new)
+    c_new = a * c + b * z
+    n_new = a * n + b
+    h_new = jnp.tanh(c_new / jnp.maximum(n_new, 1e-6)) * jax.nn.sigmoid(o)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, _, _ = _dims(cfg)
+    z = jnp.zeros((batch, di), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, di), -1e30, jnp.float32)}
+
+
+def slstm_prefill(p, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    di, nh, hd = _dims(cfg)
+    xproj = jnp.einsum("bsd,dk->bsk", x, p["w_in"])            # (B,S,4di)
+
+    def step(state, xt):
+        new = _slstm_step(p, cfg, xt, state)
+        return new, new["h"]
+
+    state, hs = jax.lax.scan(step, slstm_init_cache(cfg, B),
+                             jnp.moveaxis(xproj, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,di)
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["down"]), state
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jax.Array, cache
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xproj = jnp.einsum("bsd,dk->bsk", x, p["w_in"])[:, 0]
+    state = _slstm_step(p, cfg, xproj, cache)
+    y = state["h"][:, None].astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["down"]), state

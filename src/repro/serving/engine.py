@@ -1,0 +1,210 @@
+"""Continuous-batching serving engine: real JAX model execution driven by
+any `repro.core` scheduler (EconoServe by default).
+
+The scheduler owns KVC block accounting, batching policy, SLO ordering,
+and KVC pipelining; the engine owns slots, caches, jitted prefill/decode
+steps and sampling. Completion is EOS- or max-tokens-driven; when EOS
+fires early the request's `true_rl` is clamped so the scheduler sees the
+real completion (the RL predictor only ever saw the prompt).
+
+Scope note: the engine runs whole prompts as single PT items (it sizes TFS
+to the longest prompt) — chunked-prefill policy is exercised by the
+discrete-event simulator, not the CPU engine.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import CostModel, ModelProfile
+from repro.core.predictor import NoisyPredictor, apply_padding
+from repro.core.request import Request, State
+from repro.core.scheduler import SchedulerConfig, make_econoserve
+from repro.models import model
+from repro.models.config import ModelConfig
+
+from .sampling import SamplingParams, sample
+
+
+@dataclass
+class GenRequest:
+    prompt: List[int]
+    params: SamplingParams = field(default_factory=SamplingParams)
+    rid: int = -1
+    output: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_done: Optional[float] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Optional[dict] = None, *,
+                 max_batch: int = 8, capacity: int = 512,
+                 scheduler_cfg: Optional[SchedulerConfig] = None,
+                 variant: str = "full", impl: str = "xla",
+                 rl_accuracy: float = 0.8, seed: int = 0):
+        self.cfg = cfg
+        self.impl = impl
+        self.max_batch = max_batch
+        self.capacity = capacity
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else model.init(cfg, key)
+        self.key = jax.random.PRNGKey(seed + 1)
+
+        scfg = scheduler_cfg or SchedulerConfig(
+            kvc_tokens=max_batch * capacity, block_size=32,
+            tfs=capacity, max_model_len=capacity,
+            max_batch_reqs=max_batch)
+        cost = CostModel(model=ModelProfile.from_config(cfg))
+        self.scheduler = make_econoserve(scfg, cost, variant)
+        self.predictor = NoisyPredictor(accuracy=rl_accuracy, seed=seed,
+                                        bucket=scfg.bucket)
+
+        # slot-based caches
+        self.caches = model.init_cache(cfg, max_batch, capacity)
+        self.slot_of: Dict[int, int] = {}
+        self.free_slots = list(range(max_batch))
+        self.pos = np.zeros(max_batch, np.int64)      # next absolute position
+        self.last_tok = np.zeros(max_batch, np.int64)
+        self.requests: Dict[int, GenRequest] = {}
+        self._rid = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: model.decode_step(
+                cfg, p, tok, pos, caches, impl=impl))
+        self._prefill = jax.jit(
+            lambda p, tok: model.prefill(cfg, p, tok, impl=impl))
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: GenRequest, now: float) -> int:
+        req.rid = self._rid
+        self._rid += 1
+        req.t_submit = now
+        r = Request(rid=req.rid, prompt_len=len(req.prompt),
+                    true_rl=req.params.max_new_tokens, arrival=now)
+        r.predicted_rl = self.predictor.predict(r)
+        r.padded_rl = apply_padding(r.predicted_rl,
+                                    self.scheduler.cfg.pad_ratio,
+                                    self.scheduler.cfg.bucket)
+        self.requests[req.rid] = req
+        self.scheduler.on_arrival(r, now)
+        return req.rid
+
+    # ------------------------------------------------------------------ #
+    def _run_prefill(self, items, now: float) -> None:
+        """Execute PT items (whole prompts) and seed their cache slots."""
+        for r, chunk in items:
+            assert chunk == r.prompt_len, \
+                "engine runs whole prompts; size TFS >= max prompt length"
+            g = self.requests[r.rid]
+            slot = self.free_slots.pop()
+            self.slot_of[r.rid] = slot
+            # after an offload-free preemption the context to recompute is
+            # prompt + everything generated so far
+            ctx = list(g.prompt) + g.output[:r.generated]
+            toks = jnp.asarray(ctx, jnp.int32)[None, :]
+            logits, pf_caches = self._prefill(self.params, toks)
+            self._seed_slot(slot, pf_caches, len(ctx))
+            self.pos[slot] = len(ctx)
+            if r.generated == 0:
+                # the PT iteration produces the first response token (§1)
+                self.key, sk = jax.random.split(self.key)
+                tok = int(sample(logits[:, -1], sk, g.params.temperature,
+                                 g.params.top_k)[0])
+                g.output.append(tok)
+                self.last_tok[slot] = tok
+            else:
+                self.last_tok[slot] = g.output[r.generated - 1]
+
+    def _seed_slot(self, slot: int, pf_caches, plen: int) -> None:
+        def put(dst, src, seq_axis: Optional[int]):
+            # dst (L, B, ...); src (L, 1, ...) or (L,1,S,...)
+            idx = [slice(None)] * dst.ndim
+            idx[1] = slice(slot, slot + 1)
+            if seq_axis is not None:
+                C = dst.shape[seq_axis]
+                if src.shape[seq_axis] > C:     # sliding window: keep tail
+                    src = jax.lax.slice_in_dim(
+                        src, src.shape[seq_axis] - C, src.shape[seq_axis],
+                        axis=seq_axis)
+                    start = (plen - C) % C
+                    src = jnp.roll(src, start, axis=seq_axis)
+                idx[seq_axis] = slice(0, src.shape[seq_axis])
+            dst = dst.at[tuple(idx)].set(src.astype(dst.dtype))
+            return dst
+
+        new = {}
+        for kind, sub in self.caches.items():
+            if kind in ("A", "shared"):
+                new[kind] = {
+                    "k": put(sub["k"], pf_caches[kind]["k"], 2),
+                    "v": put(sub["v"], pf_caches[kind]["v"], 2),
+                }
+            else:
+                new[kind] = jax.tree.map(
+                    lambda d, s: put(d, s, None), sub, pf_caches[kind])
+        self.caches = new
+
+    # ------------------------------------------------------------------ #
+    def _run_decode(self, reqs: Sequence[Request], now: float) -> None:
+        if not reqs:
+            return
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.caches = self._decode(self.params, toks, pos,
+                                           self.caches)
+        self.key, sk = jax.random.split(self.key)
+        temps = max((self.requests[r.rid].params.temperature for r in reqs),
+                    default=0.0)
+        new_toks = np.asarray(sample(logits, sk, temps))
+        for r in reqs:
+            slot = self.slot_of[r.rid]
+            g = self.requests[r.rid]
+            tok = int(new_toks[slot])
+            g.output.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            if g.params.eos_token is not None and tok == g.params.eos_token:
+                r.true_rl = r.generated + 1     # EOS: clamp for the scheduler
+
+    # ------------------------------------------------------------------ #
+    def step(self, now: Optional[float] = None) -> int:
+        """One engine iteration. Returns number of completions."""
+        now = time.monotonic() if now is None else now
+        plan = self.scheduler.form_batch(now)
+        if plan.empty:
+            return 0
+        self._run_prefill(plan.prompt_items, now)
+        self._run_decode(plan.decode_reqs, now)
+        before = len(self.scheduler.completed)
+        self.scheduler.finish_iteration(time.monotonic()
+                                        if now is None else now)
+        done = self.scheduler.completed[before:]
+        for r in done:
+            g = self.requests[r.rid]
+            g.t_done = r.t_complete
+            slot = self.slot_of.pop(r.rid, None)
+            if slot is not None:
+                self.free_slots.append(slot)
+        # preempted/evicted requests (KVC freed by the scheduler) lose
+        # their slot; queued GTs keep theirs — their KV is live
+        for rid in list(self.slot_of):
+            if rid not in self.scheduler.kvc.allocs:
+                self.free_slots.append(self.slot_of.pop(rid))
+        return len(done)
+
+    def run(self, gen_requests: Sequence[GenRequest],
+            max_steps: int = 100_000) -> List[GenRequest]:
+        t = 0.0
+        for g in gen_requests:
+            self.submit(g, t)
+        steps = 0
+        while (self.scheduler.has_work() and steps < max_steps):
+            t += 1.0
+            self.step(t)
+            steps += 1
+        return list(gen_requests)

@@ -1,0 +1,29 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # 0 → greedy
+    top_k: int = 0                # 0 → disabled
+    max_new_tokens: int = 64
+    eos_token: Optional[int] = None
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> token ids (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Checkpointing: flat param/opt-state dicts → msgpack + raw numpy buffers."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+# parameter names themselves contain "/", so nested-dict paths are joined
+# with the ASCII unit separator instead
+_SEP = "\x1f"
+
+
+def _pack(tree: Dict[str, Any]) -> bytes:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}{_SEP}{k}" if prefix else k, v)
+        else:
+            arr = np.asarray(node)
+            flat[prefix] = {
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "data": arr.tobytes(),
+            }
+
+    walk("", tree)
+    return msgpack.packb(flat, use_bin_type=True)
+
+
+def _unpack(blob: bytes) -> Dict[str, Any]:
+    flat = msgpack.unpackb(blob, raw=False)
+    tree: Dict[str, Any] = {}
+    for path, rec in flat.items():
+        arr = np.frombuffer(rec["data"],
+                            dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        node = tree
+        parts = path.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return tree
+
+
+def save(path: str, params: Dict[str, Any],
+         opt_state: Dict[str, Any] | None = None,
+         meta: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"params": params}
+    if opt_state is not None:
+        payload["opt_state"] = opt_state
+    if meta is not None:
+        payload["__meta__"] = {k: np.asarray(v) for k, v in meta.items()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(_pack(payload))
+    os.replace(tmp, path)
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path, "rb") as f:
+        return _unpack(f.read())

@@ -1,0 +1,71 @@
+"""AdamW in pure JAX with configurable state dtype.
+
+bf16 moments (``state_dtype='bfloat16'``) are what lets arctic-480b train on
+a single 256-chip v5e pod (see DESIGN.md §5); fp32 is the default for the
+smaller models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def init_state(params: Params, cfg: AdamWConfig) -> Dict[str, Params]:
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def apply_updates(params: Params, grads: Params, state: Dict,
+                  cfg: AdamWConfig) -> Tuple[Params, Dict, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state["step"] + 1
+    # global-norm clip in fp32
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    lr = _schedule(cfg, step)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * jnp.square(g)
+        mh = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p = params
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = upd(params[k], grads[k],
+                                           state["m"][k], state["v"][k])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,76 @@
+"""Training step + loop (pure JAX, remat inside the model's layer scans)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.common import cross_entropy
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, apply_updates, init_state
+
+
+def make_loss_fn(cfg: ModelConfig):
+    F = cfg.frontend_tokens if cfg.frontend else 0
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        embeds = batch.get("embeds")
+        logits, aux = model.forward_train(cfg, params, tokens, embeds)
+        logits = logits[:, F:]                       # text positions only
+        loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        if cfg.is_moe:
+            loss = loss + cfg.aux_loss_coef * aux
+        return loss, aux
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, gnorm = apply_updates(params, grads, opt_state,
+                                                 opt)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, steps: int, *, opt: Optional[AdamWConfig] = None,
+          batch_size: int = 8, seq_len: int = 128, seed: int = 0,
+          log_every: int = 10, callback=None):
+    """Single-host training loop used by examples/tests."""
+    from .data import DataConfig, SyntheticDataset
+
+    opt = opt or AdamWConfig()
+    key = jax.random.PRNGKey(seed)
+    params = model.init(cfg, key)
+    opt_state = init_state(params, opt)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      batch_size=batch_size, seed=seed,
+                      frontend_tokens=cfg.frontend_tokens if cfg.frontend else 0,
+                      d_model=cfg.d_model)
+    ds = SyntheticDataset(dcfg)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    history = []
+    for i, batch in enumerate(ds.batches()):
+        if i >= steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if "embeds" in batch:
+            batch["embeds"] = batch["embeds"].astype(cfg.dtype)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return params, opt_state, history

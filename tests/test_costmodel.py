@@ -1,0 +1,58 @@
+"""Cost model sanity: regimes and monotonicity the simulator relies on."""
+from repro.core.costmodel import (A100, TPU_V5E, CostModel, ModelProfile,
+                                  OPT_13B, tfs_for)
+from repro.configs import get_config
+
+
+def test_iteration_time_monotonic_in_tokens():
+    cm = CostModel()
+    t1 = cm.iteration_time(100, [])
+    t2 = cm.iteration_time(1000, [])
+    assert t2 > t1 > 0
+
+
+def test_decode_is_memory_bound_small_batch():
+    cm = CostModel()
+    # one decode token: weights stream dominates -> adding a second token
+    # barely changes the iteration time
+    t1 = cm.token_time()
+    t2 = cm.iteration_time(0, [512, 512])
+    assert t2 < 1.5 * t1
+
+
+def test_prefill_compute_bound():
+    cm = CostModel()
+    # 4096 prompt tokens: doubling tokens ~doubles time (compute-bound)
+    t1 = cm.iteration_time(4096, [])
+    t2 = cm.iteration_time(8192, [])
+    assert 1.7 < t2 / t1 < 2.3
+
+
+def test_tfs_reasonable():
+    tfs = tfs_for(A100, OPT_13B)
+    # A100: peak/bw * dtype/2 = 312e12*2/(2e12*2) = 312 -> rounded to 320
+    assert 128 <= tfs <= 512
+    tfs_tpu = tfs_for(TPU_V5E, OPT_13B)
+    assert 128 <= tfs_tpu <= 512
+
+
+def test_swap_slower_than_recompute_for_short_contexts():
+    """O4: offload-free preemption beats swap for typical contexts."""
+    cm = CostModel()
+    tokens = 500
+    assert cm.recompute_time(tokens) < 2 * cm.swap_time(tokens)
+
+
+def test_model_profile_from_config():
+    prof = ModelProfile.from_config(get_config("qwen3_8b"))
+    assert 6e9 < prof.n_params < 11e9
+    assert prof.n_active == prof.n_params
+    moe = ModelProfile.from_config(get_config("phi3.5-moe-42b-a6.6b"))
+    assert moe.n_active < 0.3 * moe.n_params
+
+
+def test_sched_time_orderings():
+    cm = CostModel()
+    n = 500
+    assert cm.sched_time_fcfs(n, 10) < cm.sched_time_grouped(n, 10) \
+        < cm.sched_time_quadratic(n, 10)

@@ -1,0 +1,83 @@
+"""BlockKVC unit + property tests (allocation invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvc import BlockKVC, blocks_for
+
+
+def test_blocks_for():
+    assert blocks_for(0, 32) == 0
+    assert blocks_for(1, 32) == 1
+    assert blocks_for(32, 32) == 1
+    assert blocks_for(33, 32) == 2
+
+
+def test_exact_allocation_and_free():
+    kvc = BlockKVC(1024, block_size=32)
+    assert kvc.allocate(1, 100)            # 4 blocks
+    assert kvc.allocated_tokens(1) == 128
+    assert kvc.free_blocks == 32 - 4
+    assert kvc.free(1) == 128
+    assert kvc.free_blocks == 32
+    kvc.check_invariants()
+
+
+def test_allocation_failure_counted():
+    kvc = BlockKVC(64, block_size=32)
+    assert kvc.allocate(1, 64)
+    assert not kvc.allocate(2, 1)
+    assert kvc.n_failures == 1
+    kvc.check_invariants()
+
+
+def test_reserve_watermark():
+    kvc = BlockKVC(320, block_size=32, reserve_frac=0.2)   # 10 blocks, 2 res
+    assert kvc.reserve_target == 2
+    # GT side cannot touch the last 2 blocks
+    assert kvc.allocate(1, 8 * 32)
+    assert not kvc.can_allocate(32)
+    # PT side can
+    assert kvc.allocate_reserve(2, 1)
+    assert kvc.free_reserve == 1
+    # releasing the reserve charge is pure bookkeeping
+    kvc.release_reserve(2)
+    assert kvc.reserve_in_use == 0
+    assert kvc.allocs[2].blocks == 1
+    kvc.check_invariants()
+
+
+def test_reserve_release_restores_watermark_pressure():
+    kvc = BlockKVC(320, block_size=32, reserve_frac=0.2)
+    kvc.allocate_reserve(1, 2)
+    # reserve fully dipped -> GT may take everything that is left
+    assert kvc.free_general == 8
+    kvc.release_reserve(1)
+    # watermark restored -> GT must leave 2 blocks free again
+    assert kvc.free_general == 6
+    kvc.check_invariants()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "reserve",
+                                           "release", "free"]),
+                          st.integers(0, 19), st.integers(1, 300)),
+                max_size=60))
+def test_property_never_leaks_or_oversubscribes(ops):
+    kvc = BlockKVC(2048, block_size=32, reserve_frac=0.1)
+    for op, rid, tokens in ops:
+        if op == "alloc":
+            kvc.allocate(rid, tokens)
+        elif op == "extend":
+            kvc.extend(rid, blocks_for(tokens, 32))
+        elif op == "reserve":
+            kvc.allocate_reserve(rid, blocks_for(tokens, 32))
+        elif op == "release":
+            kvc.release_reserve(rid)
+        else:
+            kvc.free(rid)
+        kvc.check_invariants()
+    for rid in list(kvc.allocs):
+        kvc.free(rid)
+    kvc.check_invariants()
+    assert kvc.free_blocks == kvc.total_blocks
+    assert kvc.reserve_in_use == 0

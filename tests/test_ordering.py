@@ -1,0 +1,44 @@
+"""Task ordering (§3.4) tests."""
+from repro.core.ordering import order_key, pick_fit, sort_queue
+from repro.core.request import Request
+
+
+def _req(rid, deadline=100.0, occupied=0, rl=64, plen=64):
+    r = Request(rid=rid, prompt_len=plen, true_rl=rl, arrival=0.0,
+                slo_deadline=deadline)
+    r.padded_rl = rl
+    r.occupied_kvc = occupied
+    return r
+
+
+def test_deadline_dominates():
+    urgent = _req(1, deadline=0.1, occupied=0, rl=32)
+    lazy = _req(2, deadline=50.0, occupied=10_000, rl=512)
+    q = sort_queue([lazy, urgent], now=0.0, is_gt=True)
+    assert q[0] is urgent
+
+
+def test_occupied_kvc_breaks_ties():
+    small = _req(1, occupied=10)
+    big = _req(2, occupied=400)
+    q = sort_queue([small, big], now=0.0, is_gt=True)
+    assert q[0] is big
+
+
+def test_length_breaks_remaining_ties():
+    short = _req(1, rl=32)
+    long = _req(2, rl=512)
+    q = sort_queue([short, long], now=0.0, is_gt=True)
+    assert q[0] is long
+
+
+def test_pick_fit_finds_near_exact():
+    reqs = [_req(i, rl=rl) for i, rl in enumerate((512, 384, 256, 128, 64))]
+    q = sort_queue(reqs, now=0.0, is_gt=True)
+    i = pick_fit(q, budget=300, now=0.0, is_gt=True)
+    assert q[i].padded_rl == 256
+
+
+def test_pick_fit_none_when_nothing_fits():
+    q = sort_queue([_req(1, rl=512)], now=0.0, is_gt=True)
+    assert pick_fit(q, budget=100, now=0.0, is_gt=True) is None

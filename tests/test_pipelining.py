@@ -1,0 +1,64 @@
+"""KVCPipe slot-tree tests (§3.2 semantics)."""
+from repro.core.pipelining import PipeBook, dyadic_slots
+from repro.core.request import Request
+
+
+def _req(rid, rl=100):
+    return Request(rid=rid, prompt_len=10, true_rl=rl, arrival=0.0)
+
+
+def test_dyadic_slots():
+    r = _req(1)
+    slots = dyadic_slots(r, 256, min_size=32)
+    assert [(s.offset, s.size) for s in slots] == \
+        [(128, 128), (64, 64), (32, 32)]
+
+
+def test_place_best_fit_and_recursion():
+    book = PipeBook(buffer_tokens=8, min_size=32)
+    host = _req(1)
+    book.offer(host, 256)
+    child = _req(2)
+    slot = book.place(child, 100)           # fits 128-slot (eff 120)
+    assert slot is not None and slot.size == 128
+    assert child.hosted
+    # the child's own span offered sub-slots (100 -> 50 ... below min 32 -> 50)
+    sizes = sorted(s.size for s in book.open_slots)
+    assert 50 in sizes and 64 in sizes and 32 in sizes
+
+
+def test_aging_shrinks_effective_capacity():
+    book = PipeBook(buffer_tokens=0, min_size=32)
+    host = _req(1)
+    book.offer(host, 256)
+    age = {1: 100}
+    cap = book.max_hostable(lambda r: age[r.rid])
+    assert cap == 128 - 100                 # owner grew 100 toward the slot
+    assert book.place(_req(2), 100, lambda r: age[r.rid]) is None
+    assert book.place(_req(3), 28, lambda r: age[r.rid]) is not None
+
+
+def test_expiry_and_release():
+    book = PipeBook(buffer_tokens=0, min_size=32)
+    host = _req(1)
+    book.offer(host, 128)
+    child = _req(2)
+    slot = book.place(child, 60)
+    assert slot.deadline_age == 64
+    assert not book.expired(lambda r: 63)
+    exp = book.expired(lambda r: 64 if r is host else 0)
+    assert exp and exp[0].child is child
+    book.release_child(child)
+    assert not book.active and not child.hosted
+
+
+def test_drop_owner_orphans_children():
+    book = PipeBook(buffer_tokens=0, min_size=32)
+    host = _req(1)
+    book.offer(host, 128)
+    child = _req(2)
+    book.place(child, 60)
+    orphans = book.drop_owner(host)
+    assert orphans == [child]
+    assert not book.open_slots or all(s.owner is not host
+                                      for s in book.open_slots)

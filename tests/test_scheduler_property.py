@@ -1,0 +1,50 @@
+"""Hypothesis property tests over the simulator: for random small traces
+and any scheduler, every request completes exactly once and no KVC leaks."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor, simulator
+from repro.core.costmodel import CostModel
+from repro.core.registry import make_scheduler
+from repro.core.request import Request, State
+from repro.core.scheduler import SchedulerConfig
+
+SCHEDS = ["orca", "vllm", "sarathi", "multires", "econoserve",
+          "econoserve-d"]
+
+
+@st.composite
+def small_trace(draw):
+    n = draw(st.integers(3, 25))
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.0, 1.0))
+        reqs.append(Request(
+            rid=i,
+            prompt_len=draw(st.integers(1, 900)),
+            true_rl=draw(st.integers(1, 700)),
+            arrival=t,
+            slo_deadline=t + draw(st.floats(0.1, 100.0))))
+    return reqs
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=small_trace(), sched_name=st.sampled_from(SCHEDS),
+       acc=st.floats(0.3, 1.0))
+def test_complete_exactly_once_no_leak(trace, sched_name, acc):
+    cfg = SchedulerConfig(kvc_tokens=4096, max_model_len=1024)
+    cost = CostModel()
+    predictor.annotate(trace, predictor.NoisyPredictor(accuracy=acc, seed=0),
+                       pad_ratio=0.15)
+    sched = make_scheduler(sched_name, cfg, cost)
+    res = simulator.simulate(trace, sched, cost, max_iters=200_000)
+    done = [r for r in trace if r.t_complete is not None]
+    assert len(done) == len(trace), (sched_name, len(done), len(trace))
+    assert len(sched.completed) == len(trace)
+    assert all(r.state == State.COMPLETED for r in done)
+    sched.kvc.check_invariants()
+    assert sched.kvc.free_blocks == sched.kvc.total_blocks
+    # time accounting: component times are non-negative
+    for r in done:
+        assert r.waiting_time >= 0 and r.exec_time >= 0
+        assert r.preempt_time >= 0 and r.gt_queue_time >= 0

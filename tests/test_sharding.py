@@ -1,0 +1,71 @@
+"""Sharding rules + a small-mesh dry-run in a subprocess (device count must
+be set before jax init, so it cannot run in the main test process)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.models import model as model_lib
+from repro.models.common import EMBED, EXPERT, HEADS, MLP, VOCAB
+
+
+def test_spec_priority_model_axis():
+    assert shd.spec_for_axes((EMBED, HEADS)) == \
+        shd.spec_for_axes((EMBED, HEADS))
+    p = shd.spec_for_axes((EMBED, HEADS))
+    assert tuple(p) == ("data", "model")
+    p = shd.spec_for_axes((EXPERT, EMBED, MLP))
+    assert tuple(p) == ("model", "data", None)
+    p = shd.spec_for_axes((VOCAB, EMBED))
+    assert tuple(p) == ("model", "data")
+
+
+def test_param_specs_cover_every_param():
+    for arch in ("qwen3_8b", "arctic_480b", "zamba2_7b", "xlstm_125m"):
+        cfg = get_config(arch)
+        tree = model_lib.param_tree(cfg)
+        specs = shd.param_specs(cfg)
+        assert set(specs) == set(tree)
+        for k, meta in tree.items():
+            assert len(tuple(specs[k])) <= len(meta.shape)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json, jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.shapes import ShapeSpec, build_step
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    out = {}
+    for arch, kind in [("qwen3-8b", "train"), ("zamba2-7b", "decode"),
+                       ("phi3.5-moe-42b-a6.6b", "prefill")]:
+        cfg = get_config(arch).reduced(d_model=256).with_(vocab_size=512)
+        shape = {"train": ShapeSpec("t", "train", 256, 8),
+                 "prefill": ShapeSpec("p", "prefill", 256, 8),
+                 "decode": ShapeSpec("d", "decode", 512, 16)}[kind]
+        step, args, kw = build_step(cfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(step, **kw).lower(*args).compile()
+        cost = compiled.cost_analysis() or {}
+        out[arch] = {"flops": float(cost.get("flops", 0))}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert len(out) == 3
+    for arch, rec in out.items():
+        assert rec["flops"] > 0

@@ -1,0 +1,44 @@
+"""End-to-end behaviour tests for the EconoServe system: trace in, SLO-
+accounted responses out, on both the simulator and the real CPU engine."""
+import numpy as np
+
+from repro.core import registry, traces
+from repro.core.costmodel import CostModel, ModelProfile
+from repro.core.scheduler import SchedulerConfig
+from repro.configs import get_config
+
+
+def test_paper_pipeline_simulator():
+    """The full paper pipeline: calibrated trace -> RL prediction with
+    sweet-spot padding -> EconoServe scheduling -> SLO accounting."""
+    reqs = traces.generate(traces.SHAREGPT, 200, seed=0, rate=2.0)
+    cost = CostModel(model=ModelProfile.from_config(get_config("opt-13b")))
+    res = registry.run_one("econoserve", reqs, SchedulerConfig(), cost,
+                           pad_ratio=0.15, accuracy=0.732)
+    s = res.summary()
+    assert s["completed"] == 200
+    assert s["ssr"] > 0.5
+    assert s["alloc_fail_rate"] < 0.01
+    assert 0 < s["kvc_util"] <= 1
+    assert res.jct_breakdown()["exec"] > 0
+
+
+def test_engine_end_to_end_under_econoserve():
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+    cfg = get_config("stablelm-12b").reduced().with_(dtype="float32",
+                                                     param_dtype="float32")
+    eng = ServingEngine(cfg, max_batch=4, capacity=128)
+    rng = np.random.default_rng(0)
+    reqs = [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 8)),
+                       params=SamplingParams(max_new_tokens=6))
+            for _ in range(5)]
+    eng.run(reqs)
+    assert all(g.t_done is not None for g in reqs)
+    assert all(len(g.output) == 6 for g in reqs)
+
+
+def test_every_paper_scheduler_available():
+    assert set(registry.SCHEDULERS) >= {
+        "orca", "srtf", "fastserve", "vllm", "sarathi", "multires",
+        "synccoupled", "econoserve", "econoserve-d", "econoserve-sd",
+        "econoserve-sdo", "oracle", "distserve"}

@@ -1,0 +1,70 @@
+"""Training substrate: loss decreases, checkpoint roundtrip, data pipeline."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.training import checkpoint
+from repro.training.data import DataConfig, SyntheticDataset
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def test_loss_decreases_dense():
+    cfg = get_config("qwen3_8b").reduced(layers=2, d_model=128).with_(
+        dtype="float32", param_dtype="float32", vocab_size=256)
+    _, _, hist = train(cfg, steps=30, opt=AdamWConfig(lr=3e-3,
+                                                      warmup_steps=5),
+                       batch_size=8, seq_len=64, log_every=1)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first * 0.9, (first, last)
+
+
+def test_loss_decreases_moe():
+    cfg = get_config("phi3_5_moe_42b").reduced(layers=2, d_model=128).with_(
+        dtype="float32", param_dtype="float32", vocab_size=256)
+    _, _, hist = train(cfg, steps=25, opt=AdamWConfig(lr=3e-3,
+                                                      warmup_steps=5),
+                       batch_size=8, seq_len=64, log_every=1)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_data_pipeline_deterministic_and_structured():
+    cfg = DataConfig(vocab_size=128, seq_len=32, batch_size=4, seed=7)
+    ds = SyntheticDataset(cfg)
+    b1 = next(ds.batches())
+    b2 = next(ds.batches())
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # markov structure: successor matches the permutation most of the time
+    t = b1["tokens"]
+    hits = np.mean(ds.perm[t[:, :-1]] == t[:, 1:])
+    assert hits > 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("stablelm_12b").reduced(layers=2, d_model=128).with_(
+        param_dtype="float32", vocab_size=128)
+    from repro.models import model
+    import jax
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    checkpoint.save(path, params, meta={"step": np.asarray(7)})
+    loaded = checkpoint.load(path)
+    assert int(loaded["__meta__"]["step"]) == 7
+    for k, v in params.items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(loaded["params"][k]))
+
+
+def test_bf16_optimizer_states():
+    cfg = get_config("xlstm_125m").reduced(layers=2, d_model=128).with_(
+        dtype="float32", param_dtype="float32", vocab_size=128)
+    _, opt_state, hist = train(
+        cfg, steps=6, opt=AdamWConfig(lr=1e-3, state_dtype="bfloat16"),
+        batch_size=4, seq_len=32, log_every=1)
+    leaf = next(iter(opt_state["m"].values()))
+    assert leaf.dtype == jnp.bfloat16
+    assert np.isfinite(hist[-1]["loss"])
