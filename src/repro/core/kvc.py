@@ -15,7 +15,9 @@ lets EconoServe add PTs every iteration.
 
 Accounting distinguishes *allocated* from *used* tokens: KVC utilization
 (the paper's headline metric) is used/capacity; exact-allocation's gap
-between the two is exactly what KVCPipe closes.
+between the two is exactly what KVCPipe closes. Both are maintained as
+running counters — the simulator reads them every iteration, so they must
+be O(1), not O(#allocations).
 """
 from __future__ import annotations
 
@@ -50,6 +52,7 @@ class BlockKVC:
         self.allocs: Dict[int, Allocation] = {}
         self.n_failures = 0
         self.n_allocs = 0
+        self._used_tokens = 0          # running sum of per-alloc used_tokens
 
     # ------------------------------------------------------------------ #
     @property
@@ -77,7 +80,7 @@ class BlockKVC:
 
     @property
     def used_tokens(self) -> int:
-        return sum(a.used_tokens for a in self.allocs.values())
+        return self._used_tokens
 
     @property
     def utilization(self) -> float:
@@ -142,12 +145,14 @@ class BlockKVC:
     def set_used(self, rid: int, tokens: int) -> None:
         a = self.allocs.get(rid)
         if a is not None:
+            self._used_tokens += tokens - a.used_tokens
             a.used_tokens = tokens
 
     def add_used(self, rid: int, tokens: int = 1) -> None:
         a = self.allocs.get(rid)
         if a is not None:
             a.used_tokens += tokens
+            self._used_tokens += tokens
 
     def allocated_tokens(self, rid: int) -> int:
         a = self.allocs.get(rid)
@@ -160,6 +165,7 @@ class BlockKVC:
             return 0
         self.free_blocks += a.blocks + a.reserve_blocks
         self.reserve_in_use -= a.reserve_blocks
+        self._used_tokens -= a.used_tokens
         return (a.blocks + a.reserve_blocks) * self.block_size
 
     # ------------------------------------------------------------------ #
@@ -170,6 +176,9 @@ class BlockKVC:
         res_held = sum(a.reserve_blocks for a in self.allocs.values())
         assert res_held == self.reserve_in_use, \
             (res_held, self.reserve_in_use)
+        used_held = sum(a.used_tokens for a in self.allocs.values())
+        assert used_held == self._used_tokens, \
+            (used_held, self._used_tokens)
         assert 0 <= self.free_blocks <= self.total_blocks
         assert 0 <= self.reserve_in_use <= self.reserve_target
         for rid, a in self.allocs.items():

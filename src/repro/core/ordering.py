@@ -5,11 +5,22 @@ Three factors, in order:
   2. occupied KVC      — descending, bucketed (release KVC earlier, O5);
   3. predicted RL (GTs) / prompt length (PTs) — descending (fast near-exact
      fits when filling KVC / TFS via binary search).
+
+Two ways to consume the ordering:
+  * ``sort_queue``   — full re-sort (reference semantics, O(n log n) per
+    iteration with a Python key function on every element);
+  * ``OrderedQueue`` — a drop-in list replacement that maintains the same
+    ordering incrementally: keys are computed once on append (insort), and
+    only requests whose deadline bucket has actually rolled over are
+    re-keyed (a time-ordered heap makes that O(log n) amortized).
+    ``sorted_view(now)`` is guaranteed to return exactly what
+    ``sort_queue(queue, now)`` would, including stable tie-breaking.
 """
 from __future__ import annotations
 
 import bisect
-from typing import List, Optional, Sequence, Tuple
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .request import Request
 
@@ -32,6 +43,114 @@ def order_key(req: Request, now: float, is_gt: bool) -> Tuple[int, int, int]:
 
 def sort_queue(queue: List[Request], now: float, is_gt: bool) -> List[Request]:
     return sorted(queue, key=lambda r: order_key(r, now, is_gt))
+
+
+def _next_bucket_change(req: Request, bucket: int) -> float:
+    """Time at which the request's deadline bucket next decrements: the
+    moment its slack drops to the edge below its current bucket."""
+    if bucket <= 0:
+        return float("inf")
+    return req.slo_deadline - DEADLINE_EDGES[bucket - 1]
+
+
+class OrderedQueue(list):
+    """A request queue that is simultaneously a plain list (append order —
+    what FCFS paths and stable-sort tie-breaks see) and a priority index
+    kept in ``sort_queue`` order without per-iteration re-sorts.
+
+    Only ``append`` and ``remove`` are intercepted — the scheduler mutates
+    queues through nothing else. Keys are assigned lazily at the first
+    ``sorted_view`` after an append (the key needs ``now``); each keyed
+    entry carries a monotone sequence number so equal keys order exactly
+    like Python's stable sort over append order.
+    """
+
+    def __init__(self, is_gt: bool):
+        super().__init__()
+        self.is_gt = is_gt
+        self._seq = 0
+        self._entries: List[list] = []    # sorted [key, seq, req]
+        self._keyed: Dict[int, Tuple[Tuple, int]] = {}  # rid -> (key, seq)
+        self._rekey: List[Tuple[float, int, int]] = []  # heap (t, seq, rid)
+        self._pending: List[Request] = []
+        self._view: Optional[List[Request]] = None
+
+    # -- list interface ------------------------------------------------- #
+    def append(self, req: Request) -> None:
+        list.append(self, req)
+        self._pending.append(req)
+
+    def remove(self, req: Request) -> None:
+        list.remove(self, req)
+        self._view = None
+        for i, p in enumerate(self._pending):
+            if p is req:
+                del self._pending[i]
+                return
+        key, seq = self._keyed.pop(req.rid)
+        # the stored key always matches the stored entry (written together
+        # in _insert/_bulk_key), so the bisect is exact
+        i = bisect.bisect_left(self._entries, [key, seq])
+        assert self._entries[i][1] == seq, (req.rid, key, seq)
+        del self._entries[i]
+
+    # -- priority view -------------------------------------------------- #
+    def _insert(self, req: Request, now: float,
+                seq: Optional[int] = None) -> None:
+        key = order_key(req, now, self.is_gt)
+        if seq is None:                    # re-keys keep their seq so ties
+            seq = self._seq                # still break by append order
+            self._seq += 1
+        bisect.insort(self._entries, [key, seq, req])
+        self._keyed[req.rid] = (key, seq)
+        t_next = _next_bucket_change(req, key[0])
+        if t_next < float("inf"):
+            heapq.heappush(self._rekey, (t_next, seq, req.rid))
+
+    def _bulk_key(self, now: float) -> None:
+        """Key a large pending batch with one sort + merge instead of
+        per-element insort (Timsort gallops over the two sorted runs)."""
+        new = []
+        for req in self._pending:
+            key = order_key(req, now, self.is_gt)
+            seq = self._seq
+            self._seq += 1
+            new.append([key, seq, req])
+            self._keyed[req.rid] = (key, seq)
+            t_next = _next_bucket_change(req, key[0])
+            if t_next < float("inf"):
+                heapq.heappush(self._rekey, (t_next, seq, req.rid))
+        new.sort(key=lambda e: (e[0], e[1]))
+        self._entries = list(heapq.merge(self._entries, new,
+                                         key=lambda e: (e[0], e[1])))
+        self._pending.clear()
+
+    def sorted_view(self, now: float) -> List[Request]:
+        """The queue in ``sort_queue(queue, now)`` order (a fresh list —
+        callers mutate their copy)."""
+        if self._pending:
+            self._view = None
+            if len(self._pending) > 64:
+                self._bulk_key(now)
+            else:
+                for req in self._pending:
+                    self._insert(req, now)
+                self._pending.clear()
+        while self._rekey and self._rekey[0][0] <= now:
+            _, seq, rid = heapq.heappop(self._rekey)
+            cur = self._keyed.get(rid)
+            if cur is None or cur[1] != seq:
+                continue                   # removed or re-appended since
+            key = cur[0]
+            i = bisect.bisect_left(self._entries, [key, seq])
+            req = self._entries[i][2]
+            del self._entries[i]
+            del self._keyed[rid]
+            self._insert(req, now, seq=seq)
+            self._view = None
+        if self._view is None:
+            self._view = [e[2] for e in self._entries]
+        return list(self._view)
 
 
 def pick_fit(sorted_reqs: Sequence[Request], budget: int, now: float,

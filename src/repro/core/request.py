@@ -21,8 +21,8 @@ class State(enum.Enum):
     COMPLETED = "completed"
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)          # identity equality: queue membership tests and
+class Request:                # removals must not deep-compare every field
     rid: int
     prompt_len: int
     true_rl: int                     # ground-truth response length

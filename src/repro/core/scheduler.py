@@ -18,7 +18,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .costmodel import CostModel
 from .kvc import Allocation, BlockKVC, blocks_for
-from .ordering import order_key, pick_fit, sort_queue
+from .ordering import OrderedQueue, order_key, pick_fit, sort_queue
 from .pipelining import PipeBook
 from .predictor import DEFAULT_BUCKET, bucketize
 from .request import Request, State
@@ -67,6 +67,10 @@ class SchedulerConfig:
     ordering: bool = True
     pipelining: bool = True
     offload_free: bool = True     # preemption style for under-provision
+    # incremental queue index (OrderedQueue) instead of per-iteration full
+    # re-sorts; batch decisions are identical either way (tested) — False
+    # keeps the reference path for determinism checks and benchmarks
+    incremental_queues: bool = True
 
 
 class BaseScheduler:
@@ -200,6 +204,9 @@ class EconoServeScheduler(BaseScheduler):
         self.pipe = PipeBook(buffer_tokens=0, min_size=cfg.block_size)
         self.zombies: Dict[int, List[Request]] = {}   # host rid -> children
         self.host_of: Dict[int, Request] = {}
+        if cfg.ordering and cfg.incremental_queues:
+            self.pt_queue = OrderedQueue(is_gt=False)
+            self.gt_queue = OrderedQueue(is_gt=True)
 
     @staticmethod
     def _age_of(req: Request) -> int:
@@ -213,11 +220,15 @@ class EconoServeScheduler(BaseScheduler):
 
     def _sorted_gt_queue(self, t: float) -> List[Request]:
         if self.cfg.ordering:
+            if isinstance(self.gt_queue, OrderedQueue):
+                return self.gt_queue.sorted_view(t)
             return sort_queue(self.gt_queue, t, is_gt=True)
         return sorted(self.gt_queue, key=lambda r: r.arrival)
 
     def _sorted_pt_queue(self, t: float) -> List[Request]:
         if self.cfg.ordering:
+            if isinstance(self.pt_queue, OrderedQueue):
+                return self.pt_queue.sorted_view(t)
             return sort_queue(self.pt_queue, t, is_gt=False)
         return sorted(self.pt_queue, key=lambda r: r.arrival)
 

@@ -15,7 +15,11 @@ from .scheduler import BaseScheduler
 
 def simulate(requests: Sequence[Request], scheduler: BaseScheduler,
              cost: CostModel, max_time: Optional[float] = None,
-             max_iters: int = 2_000_000) -> SimResult:
+             max_iters: int = 2_000_000,
+             collect_samples: bool = True) -> SimResult:
+    """``collect_samples=False`` skips per-iteration IterSample records —
+    for production-size traces where only aggregate results matter the
+    sample list (and its per-iteration KVC snapshots) is pure overhead."""
     reqs = sorted(requests, key=lambda r: r.arrival)
     n = len(reqs)
     i_arr = 0
@@ -44,13 +48,15 @@ def simulate(requests: Sequence[Request], scheduler: BaseScheduler,
         n_before = len(scheduler.completed)
         scheduler.finish_iteration(t_end)
         n_done = len(scheduler.completed) - n_before
-        samples.append(IterSample(
-            t=t_end, dt=dt, forward_size=plan.forward_size,
-            prompt_tokens=plan.prompt_tokens, n_decode=len(plan.decode_reqs),
-            kvc_used_frac=scheduler.kvc.utilization,
-            kvc_alloc_frac=scheduler.kvc.allocated_frac,
-            sched_time=plan.sched_time, extra_time=plan.extra_time,
-            n_completed=n_done))
+        if collect_samples:
+            samples.append(IterSample(
+                t=t_end, dt=dt, forward_size=plan.forward_size,
+                prompt_tokens=plan.prompt_tokens,
+                n_decode=len(plan.decode_reqs),
+                kvc_used_frac=scheduler.kvc.utilization,
+                kvc_alloc_frac=scheduler.kvc.allocated_frac,
+                sched_time=plan.sched_time, extra_time=plan.extra_time,
+                n_completed=n_done))
         t = t_end
         iters += 1
         if i_arr >= n and not scheduler.has_work():

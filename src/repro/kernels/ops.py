@@ -36,17 +36,20 @@ def flash_attention(q, k, v, *, causal: bool = True,
                          interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("softcap",))
+@functools.partial(jax.jit, static_argnames=("softcap", "pages_per_step"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, context_lens,
-                           *, softcap: Optional[float] = None):
+                           *, softcap: Optional[float] = None,
+                           pages_per_step: int = 8):
     """Decode attention over an explicitly paged cache."""
     return _paged_pallas(q, k_pages, v_pages, block_tables, context_lens,
-                         softcap=softcap, interpret=_interpret())
+                         softcap=softcap, pages_per_step=pages_per_step,
+                         interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("softcap",))
+@functools.partial(jax.jit, static_argnames=("softcap", "pages_per_step"))
 def decode_attention(q, cache_k, cache_v, context_lens, *,
-                     softcap: Optional[float] = None):
+                     softcap: Optional[float] = None,
+                     pages_per_step: int = 8):
     """Decode attention over a contiguous per-request cache row.
 
     q (B,H,hd); cache_k/v (B,C,K,hd); context_lens (B,) — number of valid
@@ -66,7 +69,8 @@ def decode_attention(q, cache_k, cache_v, context_lens, *,
     vp = cache_v.reshape(B * mp, ps, K, hd)
     bt = (jnp.arange(B)[:, None] * mp + jnp.arange(mp)[None, :]).astype(jnp.int32)
     return _paged_pallas(q, kp, vp, bt, context_lens.astype(jnp.int32),
-                         softcap=softcap, interpret=_interpret())
+                         softcap=softcap, pages_per_step=pages_per_step,
+                         interpret=_interpret())
 
 
 # re-export oracles for convenience

@@ -1,12 +1,25 @@
 """Paged decode attention as a Pallas TPU kernel — the serving hot spot.
 
 One query token per request attends to its paged KV cache. TPU adaptation
-of vLLM's CUDA paged-attention: instead of a thread block walking the page
-list, the *grid* walks (request, kv_head, page) with the page id resolved
-by a scalar-prefetched block table inside the K/V BlockSpec index_map —
-each step DMAs exactly one (page_size, head_dim) tile from HBM into VMEM.
-Flash-style running max/sum scratch merges pages; GQA query heads of one
-kv head are processed together as the tile's sublane dimension.
+of vLLM's CUDA paged-attention: the grid walks (request, kv_head,
+page-tile) with page ids resolved from a scalar-prefetched block table.
+GQA query heads of one kv head are processed together as the tile's
+sublane dimension; flash-style running max/sum scratch merges tiles.
+
+Each grid step processes ``pages_per_step`` pages: the K/V pages live in
+HBM (``memory_space=ANY``) and the kernel issues one manual async copy per
+needed page into a double-buffered VMEM scratch tile, so
+
+  * a step whose tile lies fully past ``context_lens[b]`` issues *no* DMA
+    at all (the old BlockSpec pipeline prefetched every page of every
+    request up to ``max_pages`` regardless of context length),
+  * short contexts stop paying per-page grid-step overhead, and
+  * tile ``s+1``'s copies are issued before tile ``s`` is consumed
+    (revolving buffers), keeping the DMA/compute overlap the BlockSpec
+    pipeline provided.
+
+The per-page flash update loop is ordered exactly like the one-page-per-
+step kernel, so results are bit-identical for any ``pages_per_step``.
 """
 from __future__ import annotations
 
@@ -21,44 +34,86 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(block_tables, context_lens, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, page: int, scale: float,
-            softcap: Optional[float], max_pages: int):
+def _kernel(block_tables, context_lens, q_ref, k_hbm, v_hbm, o_ref,
+            m_scr, l_scr, acc_scr, k_tile, v_tile, sem, *,
+            page: int, pages_per_step: int, scale: float,
+            softcap: Optional[float], max_pages: int, n_steps: int):
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    kh = pl.program_id(1)
+    s = pl.program_id(2)
+    ctx = context_lens[b]
 
-    @pl.when(p == 0)
+    def tile_dma(t, buf, start):
+        """Issue (or wait on) the copies for page tile ``t`` into revolving
+        buffer ``buf``. Pages past the context or the table issue nothing —
+        ``t == n_steps`` (the last step's prefetch) self-guards because its
+        page indices are all >= max_pages."""
+        for i in range(pages_per_step):
+            pi = t * pages_per_step + i
+
+            @pl.when((pi * page < ctx) & (pi < max_pages))
+            def _(i=i, pi=pi):
+                pid = block_tables[b, pi]
+                ck = pltpu.make_async_copy(k_hbm.at[pid, :, kh, :],
+                                           k_tile.at[buf, i],
+                                           sem.at[buf, 0, i])
+                cv = pltpu.make_async_copy(v_hbm.at[pid, :, kh, :],
+                                           v_tile.at[buf, i],
+                                           sem.at[buf, 1, i])
+                if start:
+                    ck.start()
+                    cv.start()
+                else:
+                    ck.wait()
+                    cv.wait()
+
+    @pl.when(s == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        tile_dma(0, 0, start=True)
 
-    ctx = context_lens[b]
+    base = s * pages_per_step * page
 
-    @pl.when(p * page < ctx)
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, hd)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)           # (G, page)
-        tok = p * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(tok < ctx, s, NEG_INF)
+    @pl.when(base < ctx)
+    def _work():
+        buf = jax.lax.rem(s, 2)
+        tile_dma(s + 1, jax.lax.rem(s + 1, 2), start=True)   # prefetch
+        tile_dma(s, buf, start=False)                        # arrive
 
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        pexp = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = alpha * l_scr[...] + jnp.sum(pexp, axis=1,
-                                                  keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            pexp, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        # flash updates page-by-page, in the exact op order of the
+        # single-page kernel -> bit-identical output for any tile size
+        for i in range(pages_per_step):
+            pi = s * pages_per_step + i
 
-    @pl.when(p == max_pages - 1)
+            @pl.when((pi * page < ctx) & (pi < max_pages))
+            def _step(i=i, pi=pi):
+                q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+                k = k_tile[buf, i].astype(jnp.float32)        # (page, hd)
+                v = v_tile[buf, i].astype(jnp.float32)
+                s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                         preferred_element_type=jnp.float32
+                                         ) * scale
+                if softcap is not None:
+                    s_ = softcap * jnp.tanh(s_ / softcap)     # (G, page)
+                tok = pi * page + jax.lax.broadcasted_iota(jnp.int32,
+                                                           s_.shape, 1)
+                s_ = jnp.where(tok < ctx, s_, NEG_INF)
+
+                m_prev = m_scr[...]
+                m_new = jnp.maximum(m_prev,
+                                    jnp.max(s_, axis=1, keepdims=True))
+                pexp = jnp.exp(s_ - m_new)
+                alpha = jnp.exp(m_prev - m_new)
+                l_scr[...] = alpha * l_scr[...] + jnp.sum(pexp, axis=1,
+                                                          keepdims=True)
+                acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+                    pexp, v, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                m_scr[...] = m_new
+
+    @pl.when(s == n_steps - 1)
     def _finish():
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
@@ -68,6 +123,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
                            context_lens: jax.Array, *,
                            softcap: Optional[float] = None,
+                           pages_per_step: int = 8,
                            interpret: bool = False) -> jax.Array:
     """q (B,H,hd); k/v_pages (P,page,K,hd); block_tables (B,MP) int32;
     context_lens (B,) int32. Returns (B,H,hd)."""
@@ -75,28 +131,32 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     P, page, K, _ = k_pages.shape
     G = H // K
     MP = block_tables.shape[1]
+    pps = max(1, min(pages_per_step, MP))
+    n_steps = -(-MP // pps)
     qg = q.reshape(B, K, G, hd)
     scale = 1.0 / (hd ** 0.5)
 
-    kernel = functools.partial(_kernel, page=page, scale=scale,
-                               softcap=softcap, max_pages=MP)
+    kernel = functools.partial(_kernel, page=page, pages_per_step=pps,
+                               scale=scale, softcap=softcap,
+                               max_pages=MP, n_steps=n_steps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, MP),
+        grid=(B, K, n_steps),
         in_specs=[
             pl.BlockSpec((1, 1, G, hd),
-                         lambda b, kh, p, bt, cl: (b, kh, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, kh, p, bt, cl: (bt[b, p], 0, kh, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, kh, p, bt, cl: (bt[b, p], 0, kh, 0)),
+                         lambda b, kh, s, bt, cl: (b, kh, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, kh, p, bt, cl: (b, kh, 0, 0)),
+                               lambda b, kh, s, bt, cl: (b, kh, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((2, pps, page, hd), k_pages.dtype),   # double buffer
+            pltpu.VMEM((2, pps, page, hd), v_pages.dtype),
+            pltpu.SemaphoreType.DMA((2, 2, pps)),
         ],
     )
     out = pl.pallas_call(

@@ -7,6 +7,20 @@ steps and sampling. Completion is EOS- or max-tokens-driven; when EOS
 fires early the request's `true_rl` is clamped so the scheduler sees the
 real completion (the RL predictor only ever saw the prompt).
 
+Hot-path layout (why the shapes look the way they do):
+
+  * Prefill is *bucketed and batched*: all PT items of an iteration run as
+    one padded (max_batch, pow2-bucketed-seq) call, so XLA compiles at
+    most one program per sequence bucket (<= ceil(log2(max_prompt))
+    programs per engine lifetime) instead of retracing per unique prompt
+    length. Right-padding is exact for causal attention stacks; models
+    with recurrent blocks (SSM/xLSTM) fall back to exact-shape prefill,
+    where padding would corrupt the recurrent state.
+  * Cache seeding is one jitted, buffer-donated scatter over the whole
+    item batch — not a per-layer host-side pytree rebuild.
+  * Sampling is vectorized with per-slot temperature / top-k vectors (one
+    fused kernel, no per-request collapse to a single scalar).
+
 Scope note: the engine runs whole prompts as single PT items (it sizes TFS
 to the longest prompt) — chunked-prefill policy is exercised by the
 discrete-event simulator, not the CPU engine.
@@ -15,7 +29,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,12 +37,22 @@ import numpy as np
 
 from repro.core.costmodel import CostModel, ModelProfile
 from repro.core.predictor import NoisyPredictor, apply_padding
-from repro.core.request import Request, State
+from repro.core.request import Request
 from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.models import model
-from repro.models.config import ModelConfig
+from repro.models.config import ATTN, ModelConfig
 
-from .sampling import SamplingParams, sample
+from .sampling import SamplingParams, sample_per_request
+
+MIN_SEQ_BUCKET = 16
+
+
+def seq_bucket(n: int) -> int:
+    """Power-of-two padded length (floor MIN_SEQ_BUCKET)."""
+    b = MIN_SEQ_BUCKET
+    while b < n:
+        b <<= 1
+    return b
 
 
 @dataclass
@@ -70,14 +94,45 @@ class ServingEngine:
         self.free_slots = list(range(max_batch))
         self.pos = np.zeros(max_batch, np.int64)      # next absolute position
         self.last_tok = np.zeros(max_batch, np.int64)
+        self.temps = np.zeros(max_batch, np.float32)  # per-slot sampling
+        self.top_ks = np.zeros(max_batch, np.int32)
         self.requests: Dict[int, GenRequest] = {}
         self._rid = 0
 
-        self._decode = jax.jit(
-            lambda p, tok, pos, caches: model.decode_step(
-                cfg, p, tok, pos, caches, impl=impl))
-        self._prefill = jax.jit(
-            lambda p, tok: model.prefill(cfg, p, tok, impl=impl))
+        # right-padded prefill is exact only for pure-attention stacks
+        # (causal masking ignores pad positions); recurrent blocks would
+        # fold pad tokens into their state, so they get exact shapes
+        self._pad_prefill = set(cfg.pattern()) <= {ATTN}
+        self._prefill_shapes: Set[Tuple[int, int]] = set()
+
+        def _decode_fn(p, tok, pos, caches, active):
+            """Decode step with inactive slots masked out of the cache
+            update. Attention writes to idle slots were merely wasteful
+            (idempotent); recurrent states (SSM/xLSTM) would be silently
+            corrupted by spurious h <- f(h, x) advances."""
+            logits, new_caches = model.decode_step(cfg, p, tok, pos, caches,
+                                                   impl=impl)
+
+            def sel(old, new):
+                m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+
+            return logits, jax.tree.map(sel, caches, new_caches)
+
+        self._decode = jax.jit(_decode_fn)
+
+        def _prefill_fn(p, toks, lens):
+            logits, caches = model.prefill(cfg, p, toks, impl=impl)
+            last = logits[jnp.arange(toks.shape[0]), lens - 1]
+            return last, caches
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._seed = jax.jit(self._seed_fn, donate_argnums=(0,))
+
+    @property
+    def n_prefill_compiles(self) -> int:
+        """Distinct (batch, seq) prefill shapes traced so far."""
+        return len(self._prefill_shapes)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: GenRequest, now: float) -> int:
@@ -95,72 +150,139 @@ class ServingEngine:
         return req.rid
 
     # ------------------------------------------------------------------ #
+    def _seed_fn(self, caches, pf_caches, slots, lens):
+        """Scatter a whole prefill batch into the decode caches at once.
+
+        slots (Bb,) int32 destination rows; pad rows carry ``max_batch``
+        (past-the-end, dropped via mode="drop"); lens (Bb,) true context
+        lengths (pad positions beyond them carry junk that decode masking
+        never reads).
+        """
+        def seq_scatter(dst, src, ring):
+            # dst (L, B, C, K, hd); src (L, Bb, S, K, hd)
+            C, S = dst.shape[2], src.shape[2]
+            s_idx = jnp.arange(C)[None, :]                      # (1, C)
+            plen = lens[:, None]                                # (Bb, 1)
+            if ring and S > C:
+                # sliding window: token p of the real tail lands at ring
+                # slot p % C; rows with plen <= C keep identity placement
+                j = jnp.where(plen > C,
+                              (plen - C) + jnp.mod(s_idx - plen, C),
+                              jnp.minimum(s_idx, S - 1))
+            else:
+                # identity placement; slots beyond S (or beyond plen, for
+                # padded prefill) hold junk that decode masking never reads
+                j = jnp.broadcast_to(jnp.minimum(s_idx, S - 1),
+                                     (src.shape[1], C))
+            rows = jnp.take_along_axis(
+                src, j[None, :, :, None, None], axis=2)
+            return dst.at[:, slots].set(rows.astype(dst.dtype), mode="drop")
+
+        def plain_scatter(dst, src):
+            return dst.at[:, slots].set(src.astype(dst.dtype), mode="drop")
+
+        win = self.cfg.sliding_window
+        out = {}
+        for kind, sub in caches.items():
+            if kind in (ATTN, "shared"):
+                ring = (kind == ATTN and win is not None
+                        and sub["k"].shape[2] == win)
+                out[kind] = {n: seq_scatter(sub[n], pf_caches[kind][n], ring)
+                             for n in ("k", "v")}
+            else:
+                out[kind] = jax.tree.map(plain_scatter, sub, pf_caches[kind])
+        return out
+
     def _run_prefill(self, items, now: float) -> None:
-        """Execute PT items (whole prompts) and seed their cache slots."""
-        for r, chunk in items:
+        """Execute PT items (whole prompts) and seed their cache slots.
+
+        All items run as one padded (max_batch, seq_bucket) call when the
+        model tolerates padding; otherwise one exact-shape call per item.
+        """
+        if not items:
+            return
+        groups = [list(items)] if self._pad_prefill \
+            else [[it] for it in items]
+        for group in groups:
+            self._prefill_group(group, now)
+
+    def _prefill_group(self, group, now: float) -> None:
+        ctxs, slots = [], []
+        for r, chunk in group:
             assert chunk == r.prompt_len, \
                 "engine runs whole prompts; size TFS >= max prompt length"
             g = self.requests[r.rid]
-            slot = self.free_slots.pop()
-            self.slot_of[r.rid] = slot
             # after an offload-free preemption the context to recompute is
             # prompt + everything generated so far
-            ctx = list(g.prompt) + g.output[:r.generated]
-            toks = jnp.asarray(ctx, jnp.int32)[None, :]
-            logits, pf_caches = self._prefill(self.params, toks)
-            self._seed_slot(slot, pf_caches, len(ctx))
-            self.pos[slot] = len(ctx)
+            ctxs.append(list(g.prompt) + g.output[:r.generated])
+            slot = self.free_slots.pop()
+            self.slot_of[r.rid] = slot
+            self.temps[slot] = g.params.temperature
+            self.top_ks[slot] = g.params.top_k
+            slots.append(slot)
+        n = len(group)
+        maxlen = max(len(c) for c in ctxs)
+        if self._pad_prefill:
+            Bb = self.max_batch
+            # pow2 bucket, clamped to capacity (a single extra bucket shape)
+            # so the padded shape never exceeds the cache it seeds
+            Sb = seq_bucket(maxlen)
+            if Sb > self.capacity:
+                Sb = max(maxlen, self.capacity)
+        else:
+            Bb, Sb = n, maxlen
+        toks = np.zeros((Bb, Sb), np.int32)
+        lens = np.ones(Bb, np.int32)        # pad rows: len 1 (safe gather)
+        # pad rows scatter to row `max_batch` — out of bounds, mode="drop"
+        slot_arr = np.full(Bb, self.max_batch, np.int32)
+        for i, ctx in enumerate(ctxs):
+            toks[i, :len(ctx)] = ctx
+            lens[i] = len(ctx)
+            slot_arr[i] = slots[i]
+        self._prefill_shapes.add((Bb, Sb))
+        last_logits, pf_caches = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        self.caches = self._seed(self.caches, pf_caches,
+                                 jnp.asarray(slot_arr), jnp.asarray(lens))
+        self.key, sk = jax.random.split(self.key)
+        temps = np.zeros(Bb, np.float32)
+        top_ks = np.zeros(Bb, np.int32)
+        for i, (r, _) in enumerate(group):
+            g = self.requests[r.rid]
+            temps[i] = g.params.temperature
+            top_ks[i] = g.params.top_k
+        first = np.asarray(sample_per_request(
+            last_logits, sk, jnp.asarray(temps), jnp.asarray(top_ks)))
+        for i, (r, _) in enumerate(group):
+            g = self.requests[r.rid]
+            slot = slots[i]
+            self.pos[slot] = lens[i]
             if r.generated == 0:
                 # the PT iteration produces the first response token (§1)
-                self.key, sk = jax.random.split(self.key)
-                tok = int(sample(logits[:, -1], sk, g.params.temperature,
-                                 g.params.top_k)[0])
+                tok = int(first[i])
                 g.output.append(tok)
                 self.last_tok[slot] = tok
             else:
                 self.last_tok[slot] = g.output[r.generated - 1]
 
-    def _seed_slot(self, slot: int, pf_caches, plen: int) -> None:
-        def put(dst, src, seq_axis: Optional[int]):
-            # dst (L, B, ...); src (L, 1, ...) or (L,1,S,...)
-            idx = [slice(None)] * dst.ndim
-            idx[1] = slice(slot, slot + 1)
-            if seq_axis is not None:
-                C = dst.shape[seq_axis]
-                if src.shape[seq_axis] > C:     # sliding window: keep tail
-                    src = jax.lax.slice_in_dim(
-                        src, src.shape[seq_axis] - C, src.shape[seq_axis],
-                        axis=seq_axis)
-                    start = (plen - C) % C
-                    src = jnp.roll(src, start, axis=seq_axis)
-                idx[seq_axis] = slice(0, src.shape[seq_axis])
-            dst = dst.at[tuple(idx)].set(src.astype(dst.dtype))
-            return dst
-
-        new = {}
-        for kind, sub in self.caches.items():
-            if kind in ("A", "shared"):
-                new[kind] = {
-                    "k": put(sub["k"], pf_caches[kind]["k"], 2),
-                    "v": put(sub["v"], pf_caches[kind]["v"], 2),
-                }
-            else:
-                new[kind] = jax.tree.map(
-                    lambda d, s: put(d, s, None), sub, pf_caches[kind])
-        self.caches = new
-
     # ------------------------------------------------------------------ #
     def _run_decode(self, reqs: Sequence[Request], now: float) -> None:
         if not reqs:
             return
+        active = np.zeros(self.max_batch, bool)
+        for r in reqs:
+            active[self.slot_of[r.rid]] = True
         toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.caches = self._decode(self.params, toks, pos,
-                                           self.caches)
+                                           self.caches, jnp.asarray(active))
         self.key, sk = jax.random.split(self.key)
-        temps = max((self.requests[r.rid].params.temperature for r in reqs),
-                    default=0.0)
-        new_toks = np.asarray(sample(logits, sk, temps))
+        # inactive slots are likewise masked to greedy (temp 0) sampling
+        # and their tokens never read back
+        temps = np.where(active, self.temps, 0.0).astype(np.float32)
+        top_ks = np.where(active, self.top_ks, 0).astype(np.int32)
+        new_toks = np.asarray(sample_per_request(
+            logits, sk, jnp.asarray(temps), jnp.asarray(top_ks)))
         for r in reqs:
             slot = self.slot_of[r.rid]
             g = self.requests[r.rid]
@@ -181,8 +303,7 @@ class ServingEngine:
         self._run_prefill(plan.prompt_items, now)
         self._run_decode(plan.decode_reqs, now)
         before = len(self.scheduler.completed)
-        self.scheduler.finish_iteration(time.monotonic()
-                                        if now is None else now)
+        self.scheduler.finish_iteration(now)
         done = self.scheduler.completed[before:]
         for r in done:
             g = self.requests[r.rid]

@@ -74,3 +74,56 @@ def test_scheduler_stats_exposed(engine):
     s = engine.scheduler
     s.kvc.check_invariants()
     assert s.completed
+
+
+def test_prefill_compile_count_bounded(engine):
+    """Bucketed prefill: distinct traced shapes <= ceil(log2(max_prompt))
+    (power-of-two sequence buckets at a fixed batch dimension)."""
+    import math
+    assert engine._pad_prefill
+    max_ctx = max(len(g.prompt) + len(g.output)
+                  for g in engine.requests.values())
+    bound = max(1, math.ceil(math.log2(max(2, max_ctx))))
+    assert engine.n_prefill_compiles <= bound
+    assert len({b for b, _ in engine._prefill_shapes}) == 1  # one batch dim
+
+
+def test_per_request_temperatures_not_collapsed():
+    """Mixed greedy + hot-temperature batches: the greedy request must
+    decode exactly its isolated greedy sequence (the old engine collapsed
+    all temperatures to max(), breaking greedy requests)."""
+    cfg = get_config("qwen3_8b").reduced().with_(dtype="float32",
+                                                 param_dtype="float32")
+    eng = ServingEngine(cfg, max_batch=4, capacity=128, rl_accuracy=1.0,
+                        seed=3)
+    rng = np.random.default_rng(5)
+    greedy = GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size, 9)),
+        params=SamplingParams(max_new_tokens=8, temperature=0.0))
+    hot = [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size, 7)),
+        params=SamplingParams(max_new_tokens=8, temperature=1.5, top_k=3))
+        for _ in range(2)]
+    eng.run([greedy] + hot)
+    want = _ref_greedy(cfg, eng.params, greedy.prompt, 8)
+    assert greedy.output == want
+    for g in hot:
+        assert len(g.output) == 8
+
+
+def test_recurrent_model_exact_prefill_fallback():
+    """Models with recurrent blocks cannot take padded prefill (pad tokens
+    would corrupt the state) — the engine must fall back and still serve."""
+    cfg = get_config("xlstm_125m").reduced().with_(dtype="float32",
+                                                   param_dtype="float32")
+    eng = ServingEngine(cfg, max_batch=2, capacity=64, rl_accuracy=1.0)
+    assert not eng._pad_prefill
+    rng = np.random.default_rng(2)
+    reqs = [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 5 + i)),
+                       params=SamplingParams(max_new_tokens=4))
+            for i in range(2)]
+    eng.run(reqs)
+    for g, n in zip(reqs, (5, 6)):
+        assert g.t_done is not None
+        assert len(g.output) == 4
+        assert g.output == _ref_greedy(cfg, eng.params, g.prompt, 4)

@@ -55,6 +55,66 @@ def test_paged_decode_matches_ref(B, H, K, hd, page, MP, dtype):
         atol=TOLS[dtype], rtol=TOLS[dtype])
 
 
+def _paged_case(B, H, K, hd, page, MP, dtype=jnp.float32, seed=1):
+    P = B * MP + 3
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (P, page, K, hd), dtype)
+    vp = jax.random.normal(ks[2], (P, page, K, hd), dtype)
+    rng = np.random.default_rng(seed)
+    bt = jnp.array(rng.permutation(P)[:B * MP].reshape(B, MP).astype(np.int32))
+    return q, kp, vp, bt
+
+
+@pytest.mark.parametrize("pps", [2, 3, 8])
+def test_paged_decode_multipage_bit_identical_to_single_page(pps):
+    """The pages_per_step tiling only batches DMA — the flash update order
+    is unchanged, so outputs must be *bitwise* equal to one page per step."""
+    B, H, K, hd, page, MP = 3, 8, 2, 64, 16, 5
+    q, kp, vp, bt = _paged_case(B, H, K, hd, page, MP)
+    cl = jnp.array([7, 40, MP * page], jnp.int32)
+    one = paged_decode_attention(q, kp, vp, bt, cl, pages_per_step=1,
+                                 interpret=True)
+    many = paged_decode_attention(q, kp, vp, bt, cl, pages_per_step=pps,
+                                  interpret=True)
+    assert np.array_equal(np.asarray(one), np.asarray(many))
+
+
+@pytest.mark.parametrize("softcap", [None, 25.0])
+def test_paged_decode_gqa_softcap(softcap):
+    """GQA (H > K) with softcap on/off, multi-page tile."""
+    B, H, K, hd, page, MP = 2, 8, 2, 64, 16, 6
+    q, kp, vp, bt = _paged_case(B, H, K, hd, page, MP, seed=4)
+    cl = jnp.array([50, 90], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, cl, softcap=softcap,
+                                 pages_per_step=4, interpret=True)
+    want = ref.paged_decode_attention(q, kp, vp, bt, cl, softcap=softcap)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_context_shorter_than_one_page():
+    """Contexts inside the first page: every later grid step must early-exit
+    without touching its pages."""
+    B, H, K, hd, page, MP = 3, 4, 4, 32, 32, 8
+    q, kp, vp, bt = _paged_case(B, H, K, hd, page, MP, seed=5)
+    cl = jnp.array([1, 5, 31], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, cl, pages_per_step=4,
+                                 interpret=True)
+    want = ref.paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_context_equals_capacity():
+    """context == max_pages * page: the final (partial) tile is exercised."""
+    B, H, K, hd, page, MP = 2, 4, 2, 64, 16, 5   # 5 pages, pps 2 -> tail 1
+    q, kp, vp, bt = _paged_case(B, H, K, hd, page, MP, seed=6)
+    cl = jnp.array([MP * page, MP * page], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, cl, pages_per_step=2,
+                                 interpret=True)
+    want = ref.paged_decode_attention(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
 def test_decode_attention_contiguous_wrapper():
     from repro.kernels import ops
     B, C, K, hd, H = 2, 96, 2, 64, 4

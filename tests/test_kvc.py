@@ -1,5 +1,8 @@
 """BlockKVC unit + property tests (allocation invariants)."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kvc import BlockKVC, blocks_for

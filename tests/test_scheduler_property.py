@@ -1,5 +1,9 @@
 """Hypothesis property tests over the simulator: for random small traces
 and any scheduler, every request completes exactly once and no KVC leaks."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import predictor, simulator

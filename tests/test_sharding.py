@@ -37,6 +37,7 @@ def test_param_specs_cover_every_param():
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    os.environ["JAX_PLATFORMS"] = "cpu"   # no accelerator probing
     import json, jax
     import jax.numpy as jnp
     from repro.configs import get_config
@@ -53,6 +54,8 @@ _SUBPROC = textwrap.dedent("""
         with mesh:
             compiled = jax.jit(step, **kw).lower(*args).compile()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older jax: list of dicts
+            cost = cost[0] if cost else {}
         out[arch] = {"flops": float(cost.get("flops", 0))}
     print("RESULT" + json.dumps(out))
 """)
