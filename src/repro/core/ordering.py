@@ -9,9 +9,10 @@ Three factors, in order:
 Two ways to consume the ordering:
   * ``sort_queue``   — full re-sort (reference semantics, O(n log n) per
     iteration with a Python key function on every element);
-  * ``OrderedQueue`` — a drop-in list replacement that maintains the same
-    ordering incrementally: keys are computed once on append (insort), and
-    only requests whose deadline bucket has actually rolled over are
+  * ``OrderedQueue`` — a drop-in queue replacement (append / remove / len /
+    iteration) that maintains the same ordering incrementally: keys are
+    computed once on append (insort), removal is O(1) via an rid index map,
+    and only requests whose deadline bucket has actually rolled over are
     re-keyed (a time-ordered heap makes that O(log n) amortized).
     ``sorted_view(now)`` is guaranteed to return exactly what
     ``sort_queue(queue, now)`` would, including stable tie-breaking.
@@ -53,40 +54,53 @@ def _next_bucket_change(req: Request, bucket: int) -> float:
     return req.slo_deadline - DEADLINE_EDGES[bucket - 1]
 
 
-class OrderedQueue(list):
-    """A request queue that is simultaneously a plain list (append order —
-    what FCFS paths and stable-sort tie-breaks see) and a priority index
-    kept in ``sort_queue`` order without per-iteration re-sorts.
+class OrderedQueue:
+    """A request queue that preserves append order (what FCFS paths and
+    stable-sort tie-breaks see) and a priority index kept in ``sort_queue``
+    order without per-iteration re-sorts.
 
-    Only ``append`` and ``remove`` are intercepted — the scheduler mutates
-    queues through nothing else. Keys are assigned lazily at the first
-    ``sorted_view`` after an append (the key needs ``now``); each keyed
-    entry carries a monotone sequence number so equal keys order exactly
-    like Python's stable sort over append order.
+    The append-order backing is an insertion-ordered dict keyed by rid, so
+    ``remove`` is O(1) — the previous list-subclass representation paid an
+    O(n) identity scan (``list.remove``) per removal, which dominated
+    batch-formation time on large standing queues. Iteration, ``len`` and
+    truthiness behave like the old list view. Keys are assigned lazily at
+    the first ``sorted_view`` after an append (the key needs ``now``); each
+    keyed entry carries a monotone sequence number so equal keys order
+    exactly like Python's stable sort over append order.
     """
 
     def __init__(self, is_gt: bool):
-        super().__init__()
         self.is_gt = is_gt
         self._seq = 0
+        self._order: Dict[int, Request] = {}  # rid -> req, append order
         self._entries: List[list] = []    # sorted [key, seq, req]
         self._keyed: Dict[int, Tuple[Tuple, int]] = {}  # rid -> (key, seq)
         self._rekey: List[Tuple[float, int, int]] = []  # heap (t, seq, rid)
-        self._pending: List[Request] = []
+        self._pending: Dict[int, Request] = {}          # rid -> req
         self._view: Optional[List[Request]] = None
 
-    # -- list interface ------------------------------------------------- #
+    # -- list-like interface -------------------------------------------- #
+    def __iter__(self):
+        return iter(self._order.values())
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def __contains__(self, req: Request) -> bool:
+        return self._order.get(req.rid) is req
+
+    def __repr__(self) -> str:
+        return f"OrderedQueue({list(self._order.values())!r})"
+
     def append(self, req: Request) -> None:
-        list.append(self, req)
-        self._pending.append(req)
+        self._order[req.rid] = req
+        self._pending[req.rid] = req
 
     def remove(self, req: Request) -> None:
-        list.remove(self, req)
+        del self._order[req.rid]           # O(1) index-map removal
         self._view = None
-        for i, p in enumerate(self._pending):
-            if p is req:
-                del self._pending[i]
-                return
+        if self._pending.pop(req.rid, None) is not None:
+            return
         key, seq = self._keyed.pop(req.rid)
         # the stored key always matches the stored entry (written together
         # in _insert/_bulk_key), so the bisect is exact
@@ -111,7 +125,7 @@ class OrderedQueue(list):
         """Key a large pending batch with one sort + merge instead of
         per-element insort (Timsort gallops over the two sorted runs)."""
         new = []
-        for req in self._pending:
+        for req in self._pending.values():
             key = order_key(req, now, self.is_gt)
             seq = self._seq
             self._seq += 1
@@ -133,7 +147,7 @@ class OrderedQueue(list):
             if len(self._pending) > 64:
                 self._bulk_key(now)
             else:
-                for req in self._pending:
+                for req in self._pending.values():
                     self._insert(req, now)
                 self._pending.clear()
         while self._rekey and self._rekey[0][0] <= now:

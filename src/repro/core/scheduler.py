@@ -168,6 +168,16 @@ class BaseScheduler:
         self.kvc.free(req.rid)
         self.completed.append(req)
 
+    def notify_eos(self, req: Request, at_generated: int) -> None:
+        """The engine observed EOS at response token ``at_generated``
+        (1-based count). Clamps the ground-truth RL so ``finish_iteration``
+        completes the request. Tolerant of *lagged* delivery (an async
+        engine may drain sampled tokens iterations after they were
+        produced): clamping at or below tokens already accounted simply
+        completes the request at the next ``finish_iteration`` — the
+        completion check is ``generated >= true_rl``, not equality."""
+        req.true_rl = min(req.true_rl, max(1, at_generated))
+
     def _pt_finished(self, req: Request, t: float) -> None:
         """Prompt fully processed → request becomes a queued GT. The PT
         iteration itself produces the first response token (§1)."""
@@ -237,6 +247,18 @@ class EconoServeScheduler(BaseScheduler):
         """①: select GT groups (or single GTs) until KVC fully allocated."""
         n_sel = 0
         q = self._sorted_gt_queue(t)
+        # remaining_predicted is constant within one _fill_gts call (it only
+        # moves in finish_iteration), so the RL bucket of each candidate is
+        # computed at most once per call instead of O(queue) per group
+        buckets: Dict[int, int] = {}
+
+        def rl_bucket(r: Request) -> int:
+            b = buckets.get(r.rid)
+            if b is None:
+                b = bucketize(max(1, r.remaining_predicted), self.cfg.bucket)
+                buckets[r.rid] = b
+            return b
+
         while q:
             free_tok = self.kvc.free_tokens()
             if free_tok < self.cfg.block_size:
@@ -249,10 +271,8 @@ class EconoServeScheduler(BaseScheduler):
             if head.remaining_predicted > free_tok and not self.cfg.sync_groups:
                 break
             if self.cfg.sync_groups:
-                key = bucketize(max(1, head.remaining_predicted),
-                                self.cfg.bucket)
-                same = [r for r in q if bucketize(
-                    max(1, r.remaining_predicted), self.cfg.bucket) == key]
+                key = rl_bucket(head)
+                same = [r for r in q if rl_bucket(r) == key]
                 grp = Group(key=key)
                 for r in same:
                     if r.remaining_predicted > self.kvc.free_tokens():

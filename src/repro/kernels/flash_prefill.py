@@ -19,10 +19,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _kernel(q_ref, k_ref, v_ref, *rest,
             scale: float, block_q: int, block_k: int, seq_len: int,
             causal: bool, window: Optional[int], softcap: Optional[float],
-            num_kblocks: int):
+            num_kblocks: int, has_segments: bool):
+    if has_segments:
+        sq_ref, sk_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        sq_ref = sk_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -59,6 +64,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             mask &= jj <= ii
         if window is not None:
             mask &= jj > ii - window
+        if has_segments:
+            # block-diagonal (token-packed) masking: tokens attend only
+            # within their own segment; global iota order == within-segment
+            # order, so the causal/window terms above stay exact
+            mask &= sq_ref[0, :][:, None] == sk_ref[0, :][None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                                # (bq, 1)
@@ -83,12 +93,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
+                    segment_ids: Optional[jax.Array] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False) -> jax.Array:
     """q (B,S,H,hd); k/v (B,S,K,hd), H multiple of K (GQA).
 
     The q-head grid axis indexes query heads; the K/V BlockSpec maps it to
     the owning kv head (h // G), so GQA costs no extra K/V traffic.
+
+    ``segment_ids`` (B,S) int32 restricts attention to equal segments
+    (block-diagonal mask for token-packed prefill). Padded tail positions
+    get segment -1, which still never leaks into real rows because the
+    ``jj < seq_len`` bound masks them first.
     """
     B, S, H, hd = q.shape
     K = k.shape[2]
@@ -101,26 +117,42 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         q = jnp.concatenate([q, zq], axis=1)
         k = jnp.concatenate([k, zk], axis=1)
         v = jnp.concatenate([v, zk], axis=1)
+        if segment_ids is not None:
+            segment_ids = jnp.concatenate(
+                [segment_ids.astype(jnp.int32),
+                 jnp.full((B, pad), -1, jnp.int32)], axis=1)
         S = q.shape[1]
     nq = S // block_q
     nk = S // block_k
     scale = 1.0 / (hd ** 0.5)
+    has_segments = segment_ids is not None
 
     kernel = functools.partial(
         _kernel, scale=scale, block_q=block_q, block_k=block_k,
         seq_len=orig_S, causal=causal, window=window, softcap=softcap,
-        num_kblocks=nk)
+        num_kblocks=nk, has_segments=has_segments)
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, hd),
+                     lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, h, i, j, G=G: (b, j, h // G, 0)),
+    ]
+    operands = [q, k, v]
+    if has_segments:
+        # the same (B,S) array is fed twice: once tiled along the q-block
+        # axis, once along the k-block axis
+        in_specs.append(pl.BlockSpec((1, block_q),
+                                     lambda b, h, i, j: (b, i)))
+        in_specs.append(pl.BlockSpec((1, block_k),
+                                     lambda b, h, i, j: (b, j)))
+        operands += [segment_ids.astype(jnp.int32),
+                     segment_ids.astype(jnp.int32)]
     out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, hd),
-                         lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, h, i, j, G=G: (b, j, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, 1, hd),
                                lambda b, h, i, j: (b, i, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
@@ -130,5 +162,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)
     return out[:, :orig_S]

@@ -19,9 +19,11 @@ def _softcap(x, cap: Optional[float]):
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
-                    softcap: Optional[float] = None) -> jax.Array:
+                    softcap: Optional[float] = None,
+                    segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """q (B,S,H,hd); k/v (B,S,K,hd) with H a multiple of K (GQA).
-    Causal (optionally sliding-window) attention. fp32 accumulation."""
+    Causal (optionally sliding-window) attention. fp32 accumulation.
+    ``segment_ids`` (B,S) makes the mask block-diagonal (token packing)."""
     B, S, H, hd = q.shape
     K = k.shape[2]
     G = H // K
@@ -37,6 +39,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask &= jj <= ii
     if window is not None:
         mask &= jj > ii - window
+    if segment_ids is not None:
+        seg = segment_ids[:, :, None] == segment_ids[:, None, :]  # (B,S,S)
+        mask = mask[None] & seg
+        mask = mask[:, None, None, :, :]
     logits = jnp.where(mask, logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", w, vf)

@@ -59,11 +59,15 @@ def _project_qkv(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
 
 def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
                pos_q: jax.Array, pos_k: jax.Array, cfg: ModelConfig,
-               block_q: int = 512, block_k: int = 1024) -> jax.Array:
+               block_q: int = 512, block_k: int = 1024,
+               segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """Streaming (flash-style) attention in pure jnp: double lax.scan with
     online softmax — O(S) memory instead of the S^2 logits tensor, and the
     q-block body is rematerialized in the backward pass. This is the XLA
     fallback for long sequences; the Pallas kernel is the TPU fast path.
+
+    ``segment_ids`` (B, S) restricts attention to equal segments (token-
+    packed prefill: a block-diagonal mask over concatenated prompts).
     """
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
@@ -73,27 +77,39 @@ def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
     bk = min(block_k, Sk)
     pq = (-Sq) % bq
     pk = (-Sk) % bk
+    seg_q = seg_k = segment_ids
     if pq:
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
         pos_q = jnp.pad(pos_q, ((0, 0), (0, pq)), constant_values=-1)
+        if seg_q is not None:       # -1/-2: pad q never matches any pad k
+            seg_q = jnp.pad(seg_q, ((0, 0), (0, pq)), constant_values=-1)
     if pk:
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
         pos_k = jnp.pad(pos_k, ((0, 0), (0, pk)), constant_values=2**30)
+        if seg_k is not None:
+            seg_k = jnp.pad(seg_k, ((0, 0), (0, pk)), constant_values=-2)
     nq, nk = q.shape[1] // bq, k.shape[1] // bk
+    packed = seg_q is not None
     qs = jnp.moveaxis(q.reshape(B, nq, bq, K, G, hd), 1, 0)
     pqs = jnp.moveaxis(pos_q.reshape(B, nq, bq), 1, 0)
     ks = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
     vs = jnp.moveaxis(v.reshape(B, nk, bk, K, hd), 1, 0)
     pks = jnp.moveaxis(pos_k.reshape(B, nk, bk), 1, 0)
+    if packed:
+        sqs = jnp.moveaxis(seg_q.reshape(B, nq, bq), 1, 0)
+        sks = jnp.moveaxis(seg_k.reshape(B, nk, bk), 1, 0)
+    else:       # the scan operand structure must be static either way
+        sqs = jnp.zeros((nq, B, 0), jnp.int32)
+        sks = jnp.zeros((nk, B, 0), jnp.int32)
     scale = 1.0 / (hd ** 0.5)
 
     def q_step(_, inp):
-        qi, pqi = inp                               # (B,bq,K,G,hd), (B,bq)
+        qi, pqi, sqi = inp                          # (B,bq,K,G,hd), (B,bq)
 
         def k_step(carry, inp2):
             m, l, acc = carry
-            kj, vj, pkj = inp2
+            kj, vj, pkj, skj = inp2
             s = jnp.einsum("bskgh,btkh->bkgst", qi.astype(jnp.float32),
                            kj.astype(jnp.float32)) * scale
             s = softcap(s, cfg.attn_logit_softcap)
@@ -102,6 +118,9 @@ def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
             mask = jj <= ii
             if cfg.sliding_window is not None:
                 mask &= jj > ii - cfg.sliding_window
+            if packed:      # block-diagonal (token-packed) masking only
+                mask &= (sqi[:, None, None, :, None]
+                         == skj[:, None, None, None, :])
             s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -114,11 +133,12 @@ def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
         m0 = jnp.full((B, K, G, bq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, K, G, bq), jnp.float32)
         a0 = jnp.zeros((B, K, G, bq, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), (ks, vs, pks))
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (ks, vs, pks, sks))
         o = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,bq,hd)
         return None, jnp.moveaxis(o, 3, 1)          # (B,bq,K,G,hd)
 
-    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qs, pqs))
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qs, pqs, sqs))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, q.shape[1], H, hd)
     return out[:, :Sq].astype(q.dtype)
 
@@ -145,8 +165,12 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
 
 
 def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-                 *, kv_heads: Optional[int] = None, impl: str = "xla"
+                 *, segment_ids: Optional[jax.Array] = None,
+                 kv_heads: Optional[int] = None, impl: str = "xla"
                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """``segment_ids`` (B, S) enables token-packed prefill: several prompts
+    concatenated along the sequence axis attend block-diagonally (equal
+    segment only), with ``positions`` restarting per segment."""
     B, S, _ = x.shape
     nkv = kv_heads or cfg.num_kv_heads
     q, k, v = _project_qkv(p, cfg, x, positions, nkv)
@@ -154,15 +178,19 @@ def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         from repro.kernels import ops
         out = ops.flash_attention(q, k, v, causal=True,
                                   window=cfg.sliding_window,
-                                  softcap=cfg.attn_logit_softcap)
+                                  softcap=cfg.attn_logit_softcap,
+                                  segment_ids=segment_ids)
     elif S > FLASH_THRESHOLD:
-        out = _flash_jnp(q, k, v, positions, positions, cfg)
+        out = _flash_jnp(q, k, v, positions, positions, cfg,
+                         segment_ids=segment_ids)
     else:
         ii = positions[:, :, None]  # query positions (B,S,1)
         jj = positions[:, None, :]  # key positions (B,1,S)
         mask = jj <= ii
         if cfg.sliding_window is not None:
             mask &= jj > ii - cfg.sliding_window
+        if segment_ids is not None:
+            mask &= segment_ids[:, :, None] == segment_ids[:, None, :]
         out = _sdpa(q, k, v, mask, cfg)
     y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), p["wo"])
     return y, (k, v)

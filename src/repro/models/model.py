@@ -141,13 +141,13 @@ def _constrain_acts(x: jax.Array) -> jax.Array:
 # block application
 # --------------------------------------------------------------------------- #
 def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                         impl: str):
+                         impl: str, segment_ids=None):
     """Returns (x_out, cache_slice, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == ATTN:
         h = rms_norm(x, p["norm1"], cfg.rms_eps)
         y, (k, v) = attention.attn_prefill(_sub(p, "attn/"), cfg, h, positions,
-                                           impl=impl)
+                                           segment_ids=segment_ids, impl=impl)
         x = x + y
         h = rms_norm(x, p["norm2"], cfg.rms_eps)
         if cfg.is_moe:
@@ -196,14 +196,14 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, pos,
     return x + y, cache
 
 
-def _shared_attn_prefill(cfg, params, x, positions, impl):
+def _shared_attn_prefill(cfg, params, x, positions, impl, segment_ids=None):
     scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
         num_kv_heads=cfg.shared_attn_kv_heads)
     p = _sub(params, "shared/")
     h = rms_norm(x, p["norm1"], cfg.rms_eps)
     y, (k, v) = attention.attn_prefill(
         _sub(p, "attn/"), scfg, h, positions,
-        kv_heads=scfg.num_kv_heads, impl=impl)
+        segment_ids=segment_ids, kv_heads=scfg.num_kv_heads, impl=impl)
     x = x + y
     h = rms_norm(x, p["norm2"], cfg.rms_eps)
     return x + mlp.mlp_apply(_sub(p, "mlp/"), h), (k, v)
@@ -247,7 +247,8 @@ def logits_fn(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------- #
 def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                positions: jax.Array, impl: str,
-               decode: bool = False, pos=None, caches: Optional[Cache] = None):
+               decode: bool = False, pos=None, caches: Optional[Cache] = None,
+               segment_ids: Optional[jax.Array] = None):
     """Shared driver for prefill (decode=False) and decode (decode=True)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, List] = {k: [] for k in cfg.block_kinds()}
@@ -270,7 +271,10 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                 lambda a: jax.lax.slice_in_dim(a, off + sub_start,
                                                off + sub_start + run, axis=0),
                 stacked)
-            # --- scan over the run ---
+            # --- scan over the run (single-layer runs skip the scan: the
+            # XLA while-loop wrapper costs real per-step overhead on the
+            # decode hot path, and hybrid patterns produce many length-1
+            # segments; the unrolled call is mathematically identical) ---
             x = _constrain_acts(x)
             if decode:
                 cache_off = _cache_offset(new_caches[kind])
@@ -287,19 +291,31 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                     return y, c2
 
                 body = jax.checkpoint(body_d) if cfg.remat else body_d
-                x, seg_cache_out = jax.lax.scan(body, x,
-                                                (seg_params, seg_cache))
+                if run == 1:
+                    x, c1 = body(x, (jax.tree.map(lambda a: a[0], seg_params),
+                                     jax.tree.map(lambda a: a[0], seg_cache)))
+                    seg_cache_out = jax.tree.map(lambda a: a[None], c1)
+                else:
+                    x, seg_cache_out = jax.lax.scan(body, x,
+                                                    (seg_params, seg_cache))
                 new_caches[kind].append(seg_cache_out)
             else:
                 def body_p(carry, lp):
                     xc, aux = carry
                     y, c2, a = _apply_block_prefill(cfg, kind, lp, xc,
-                                                    positions, impl)
+                                                    positions, impl,
+                                                    segment_ids)
                     return (y, aux + a), c2
 
                 body = jax.checkpoint(body_p) if cfg.remat else body_p
-                (x, aux_total), seg_cache_out = jax.lax.scan(
-                    body, (x, aux_total), seg_params)
+                if run == 1:
+                    (x, aux_total), c1 = body(
+                        (x, aux_total),
+                        jax.tree.map(lambda a: a[0], seg_params))
+                    seg_cache_out = jax.tree.map(lambda a: a[None], c1)
+                else:
+                    (x, aux_total), seg_cache_out = jax.lax.scan(
+                        body, (x, aux_total), seg_params)
                 new_caches[kind].append(seg_cache_out)
             n_done += run
             sub_start += run
@@ -312,7 +328,8 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                     shared_caches.append((ck, cv))
                 else:
                     x, (k, v) = _shared_attn_prefill(cfg, params, x,
-                                                     positions, impl)
+                                                     positions, impl,
+                                                     segment_ids)
                     shared_caches.append((k, v))
                 shared_i += 1
 
@@ -352,14 +369,30 @@ def forward_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             embeds: Optional[jax.Array] = None, impl: str = "xla",
-            last_only: bool = False) -> Tuple[jax.Array, Cache]:
+            last_only: bool = False,
+            positions: Optional[jax.Array] = None,
+            segment_ids: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Cache]:
     """Returns (logits, caches seeded with the prompt). ``last_only``
     projects only the final position — serving prefill never needs the
-    (B, S, vocab) tensor."""
+    (B, S, vocab) tensor.
+
+    Token-packed prefill: pass ``segment_ids`` (B, S) plus ``positions``
+    that restart at 0 per segment — several prompts concatenated along the
+    sequence axis then attend block-diagonally with no batch padding. Only
+    valid for pure-attention stacks (recurrent blocks would fold foreign
+    segments into their state).
+    """
+    if segment_ids is not None:
+        assert set(cfg.pattern()) <= {ATTN}, \
+            "token-packed prefill requires a pure-attention stack"
+        assert embeds is None, "packed prefill does not take extra embeds"
     x = embed_inputs(cfg, params, tokens, embeds)
     B, S, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    x, caches, _ = _run_stack(cfg, params, x, positions, impl)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, caches, _ = _run_stack(cfg, params, x, positions, impl,
+                              segment_ids=segment_ids)
     if last_only:
         return logits_fn(cfg, params, x[:, -1]), caches
     return logits_fn(cfg, params, x), caches

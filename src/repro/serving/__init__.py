@@ -1,4 +1,4 @@
 """Serving engine: continuous batching of real JAX models under the
 EconoServe scheduler."""
-from .engine import GenRequest, ServingEngine
+from .engine import EngineConfig, GenRequest, ServingEngine
 from .sampling import SamplingParams

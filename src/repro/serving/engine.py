@@ -9,17 +9,35 @@ real completion (the RL predictor only ever saw the prompt).
 
 Hot-path layout (why the shapes look the way they do):
 
-  * Prefill is *bucketed and batched*: all PT items of an iteration run as
-    one padded (max_batch, pow2-bucketed-seq) call, so XLA compiles at
-    most one program per sequence bucket (<= ceil(log2(max_prompt))
-    programs per engine lifetime) instead of retracing per unique prompt
-    length. Right-padding is exact for causal attention stacks; models
-    with recurrent blocks (SSM/xLSTM) fall back to exact-shape prefill,
-    where padding would corrupt the recurrent state.
+  * Decode is *fully asynchronous and device-resident* (default,
+    ``EngineConfig.async_decode``): per-slot ``last_tok`` / ``pos`` /
+    sampling params live as device arrays carried across iterations, and
+    decode -> sample -> EOS-check -> pos-update run as ONE jitted,
+    buffer-donated step (XLA reuses the cache buffers in place). Sampled
+    tokens are drained to the host with a lag of
+    ``EngineConfig.readback_lag`` iterations — the host appends tokens for
+    iteration t-k while iteration t runs on device, so the steady-state
+    loop issues zero blocking host syncs (``sync_counts`` /
+    ``n_blocking_syncs`` instrument this). Only when an *active* request
+    carries an ``eos_token`` does the engine read back a (B,) flag vector
+    per iteration, because the scheduler's completion accounting needs EOS
+    at the iteration it fires to stay bitwise-equal to the sync path.
+  * Prefill is *token-packed* (default, ``EngineConfig.packed_prefill``):
+    all PT items of an iteration are concatenated into one flattened token
+    axis with per-segment positions and a block-diagonal segment mask —
+    no batch-dim padding and no per-row length padding; the only padding
+    left is rounding the total token count up to a pow2 bucket, so XLA
+    compiles <= ceil(log2(max_total_tokens)) programs per engine lifetime.
+    Models with recurrent blocks (SSM/xLSTM) fall back to exact-shape
+    prefill, where foreign segments would corrupt the recurrent state; the
+    legacy (max_batch, pow2-seq) padded-batch path is kept behind
+    ``packed_prefill=False`` for the equivalence tests.
   * Cache seeding is one jitted, buffer-donated scatter over the whole
-    item batch — not a per-layer host-side pytree rebuild.
-  * Sampling is vectorized with per-slot temperature / top-k vectors (one
-    fused kernel, no per-request collapse to a single scalar).
+    item batch (a per-segment gather for the packed path) — not a
+    per-layer host-side pytree rebuild.
+  * Sampling is vectorized with per-slot temperature / top-k vectors and,
+    on the async path, runs inside the decode program itself (no separate
+    dispatch, no host round-trip).
 
 Scope note: the engine runs whole prompts as single PT items (it sizes TFS
 to the longest prompt) — chunked-prefill policy is exercised by the
@@ -28,8 +46,9 @@ discrete-event simulator, not the CPU engine.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +61,7 @@ from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.models import model
 from repro.models.config import ATTN, ModelConfig
 
-from .sampling import SamplingParams, sample_per_request
+from .sampling import SamplingParams, sample_in_graph, sample_per_request
 
 MIN_SEQ_BUCKET = 16
 
@@ -53,6 +72,24 @@ def seq_bucket(n: int) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+@dataclass
+class EngineConfig:
+    """Engine hot-path toggles, mirroring the PR 1
+    ``SchedulerConfig.incremental_queues`` convention: the fast paths are
+    the default and ``False`` keeps the reference implementation for
+    equivalence tests and benchmarks.
+
+    ``readback_lag`` is how many decode iterations sampled tokens may trail
+    on device before the host materializes them; ``max_pending`` is the
+    hard cap on undrained iterations (beyond it the host accepts one
+    blocking sync rather than queueing unboundedly).
+    """
+    async_decode: bool = True
+    packed_prefill: bool = True
+    readback_lag: int = 2
+    max_pending: int = 8
 
 
 @dataclass
@@ -70,11 +107,13 @@ class ServingEngine:
                  max_batch: int = 8, capacity: int = 512,
                  scheduler_cfg: Optional[SchedulerConfig] = None,
                  variant: str = "full", impl: str = "xla",
-                 rl_accuracy: float = 0.8, seed: int = 0):
+                 rl_accuracy: float = 0.8, seed: int = 0,
+                 engine_cfg: Optional[EngineConfig] = None):
         self.cfg = cfg
         self.impl = impl
         self.max_batch = max_batch
         self.capacity = capacity
+        self.ecfg = engine_cfg or EngineConfig()
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else model.init(cfg, key)
         self.key = jax.random.PRNGKey(seed + 1)
@@ -92,6 +131,11 @@ class ServingEngine:
         self.caches = model.init_cache(cfg, max_batch, capacity)
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(max_batch))
+        # host mirrors of per-slot state. On the legacy sync path they are
+        # authoritative; on the async path last_tok/pos are device-resident
+        # (carried through the fused step) and the mirrors only hold
+        # prefill-time values (temps/top_ks/eos drive the static sampling
+        # flags without any device readback).
         self.pos = np.zeros(max_batch, np.int64)      # next absolute position
         self.last_tok = np.zeros(max_batch, np.int64)
         self.temps = np.zeros(max_batch, np.float32)  # per-slot sampling
@@ -99,17 +143,48 @@ class ServingEngine:
         self.requests: Dict[int, GenRequest] = {}
         self._rid = 0
 
-        # right-padded prefill is exact only for pure-attention stacks
-        # (causal masking ignores pad positions); recurrent blocks would
-        # fold pad tokens into their state, so they get exact shapes
+        # right-padded / token-packed prefill is exact only for
+        # pure-attention stacks (masking ignores pad positions and foreign
+        # segments); recurrent blocks would fold them into their state, so
+        # they get exact shapes
         self._pad_prefill = set(cfg.pattern()) <= {ATTN}
+        self._async = self.ecfg.async_decode
+        self._packed = self.ecfg.packed_prefill and self._pad_prefill
         self._prefill_shapes: Set[Tuple[int, int]] = set()
 
+        # async bookkeeping: device slot state carried across the fused
+        # steps, plus the lag-N readback ring of (tokens, [(row, rid)]).
+        # The PRNG key rides along so the steady-state loop does not even
+        # dispatch a host-side split — the fused step splits in-graph,
+        # consuming the exact same key stream as the sync path (prefill
+        # swaps the carried leaf without materializing it).
+        self._dev = {
+            "last_tok": jnp.zeros(max_batch, jnp.int32),
+            "pos": jnp.zeros(max_batch, jnp.int32),
+            "temps": jnp.zeros(max_batch, jnp.float32),
+            "top_ks": jnp.zeros(max_batch, jnp.int32),
+            "eos": jnp.full(max_batch, -1, jnp.int32),
+            "key": self.key,
+        }
+        self._active_bytes: Optional[bytes] = None
+        self._active_dev: Optional[jax.Array] = None
+        self._pending_drain: Deque[Tuple[jax.Array,
+                                         List[Tuple[int, int]]]] = deque()
+        # host-sync instrumentation (what the hot-path microbench reports):
+        # eos_flags      — per-iteration (B,) EOS-flag readbacks (only when
+        #                  an active request has an eos_token)
+        # drain_blocking — token drains that had to wait on the device
+        # drain_ready    — token drains that were already materialized
+        # flush          — forced full drains (completion/preemption/idle)
+        self.sync_counts = {"eos_flags": 0, "drain_blocking": 0,
+                            "drain_ready": 0, "flush": 0}
+        self.decode_iters = 0
+
         def _decode_fn(p, tok, pos, caches, active):
-            """Decode step with inactive slots masked out of the cache
-            update. Attention writes to idle slots were merely wasteful
-            (idempotent); recurrent states (SSM/xLSTM) would be silently
-            corrupted by spurious h <- f(h, x) advances."""
+            """Legacy sync decode step with inactive slots masked out of the
+            cache update. Attention writes to idle slots were merely
+            wasteful (idempotent); recurrent states (SSM/xLSTM) would be
+            silently corrupted by spurious h <- f(h, x) advances."""
             logits, new_caches = model.decode_step(cfg, p, tok, pos, caches,
                                                    impl=impl)
 
@@ -121,18 +196,85 @@ class ServingEngine:
 
         self._decode = jax.jit(_decode_fn)
 
+        def _fused_fn(p, caches, st, active, need_sample, need_topk):
+            """Fused async decode: forward pass, masked cache update,
+            in-graph RNG split + sampling, EOS check and pos advance in one
+            program. ``caches`` and ``st`` are donated so XLA updates the
+            KV buffers and carried slot state in place."""
+            toks = st["last_tok"][:, None]
+            logits, new_caches = model.decode_step(cfg, p, toks, st["pos"],
+                                                   caches, impl=impl)
+
+            def sel(old, new):
+                m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+
+            new_caches = jax.tree.map(sel, caches, new_caches)
+            temps = jnp.where(active, st["temps"], 0.0)
+            top_ks = jnp.where(active, st["top_ks"], 0)
+            key, sk = jax.random.split(st["key"])
+            new = sample_in_graph(logits, sk, temps, top_ks,
+                                  need_sample, need_topk)
+            eos_hit = active & (st["eos"] >= 0) & (new == st["eos"])
+            st = dict(st,
+                      last_tok=jnp.where(active, new, st["last_tok"]),
+                      pos=st["pos"] + active.astype(st["pos"].dtype),
+                      key=key)
+            return new_caches, st, new, eos_hit
+
+        self._fused = jax.jit(_fused_fn, static_argnums=(4, 5),
+                              donate_argnums=(1, 2))
+
+        def _seed_slots_fn(st, slots, first, fallback, use_first, poss,
+                           temps, top_ks, eos):
+            """Scatter prefill results into the carried device slot state
+            (async path) — the first sampled token stays on device; rows
+            re-prefilled after a preemption restore their last generated
+            token from the host-known ``fallback``."""
+            last = jnp.where(use_first, first, fallback)
+            return dict(
+                st,
+                last_tok=st["last_tok"].at[slots].set(last, mode="drop"),
+                pos=st["pos"].at[slots].set(poss, mode="drop"),
+                temps=st["temps"].at[slots].set(temps, mode="drop"),
+                top_ks=st["top_ks"].at[slots].set(top_ks, mode="drop"),
+                eos=st["eos"].at[slots].set(eos, mode="drop"))
+
+        self._seed_slots = jax.jit(_seed_slots_fn, donate_argnums=(0,))
+
         def _prefill_fn(p, toks, lens):
             logits, caches = model.prefill(cfg, p, toks, impl=impl)
             last = logits[jnp.arange(toks.shape[0]), lens - 1]
             return last, caches
 
         self._prefill = jax.jit(_prefill_fn)
+
+        def _prefill_packed_fn(p, toks, pos, seg, last_idx):
+            """Token-packed prefill: toks/pos/seg (1, T) with per-segment
+            positions and segment ids; last_idx (Bb,) flat indices of each
+            prompt's final token (pad rows point at 0 and are dropped by
+            the caller's slot scatter)."""
+            logits, caches = model.prefill(cfg, p, toks, impl=impl,
+                                           positions=pos, segment_ids=seg)
+            return logits[0, last_idx], caches
+
+        self._prefill_packed = jax.jit(_prefill_packed_fn)
         self._seed = jax.jit(self._seed_fn, donate_argnums=(0,))
+        self._seed_packed = jax.jit(self._seed_packed_fn,
+                                    donate_argnums=(0,))
 
     @property
     def n_prefill_compiles(self) -> int:
         """Distinct (batch, seq) prefill shapes traced so far."""
         return len(self._prefill_shapes)
+
+    @property
+    def n_blocking_syncs(self) -> int:
+        """Host syncs that could block on in-flight device work (EOS-flag
+        readbacks + non-ready token drains). Zero across a steady-state
+        async decode window with no EOS-capable requests."""
+        return (self.sync_counts["eos_flags"]
+                + self.sync_counts["drain_blocking"])
 
     # ------------------------------------------------------------------ #
     def submit(self, req: GenRequest, now: float) -> int:
@@ -150,6 +292,21 @@ class ServingEngine:
         return req.rid
 
     # ------------------------------------------------------------------ #
+    def _is_ring(self, kind: str, sub) -> bool:
+        """A cache row is a sliding-window ring buffer when its capacity
+        equals the window (shared-attention caches are always full-size)."""
+        win = self.cfg.sliding_window
+        return kind == ATTN and win is not None and sub["k"].shape[2] == win
+
+    @staticmethod
+    def _ring_index(plen, s_idx, C):
+        """Within-sequence source index for seeding a C-slot ring buffer
+        from a plen-token prefill: token p of the real tail lands at ring
+        slot p % C; rows with plen <= C keep identity placement."""
+        return jnp.where(plen > C,
+                         (plen - C) + jnp.mod(s_idx - plen, C),
+                         jnp.minimum(s_idx, jnp.maximum(plen - 1, 0)))
+
     def _seed_fn(self, caches, pf_caches, slots, lens):
         """Scatter a whole prefill batch into the decode caches at once.
 
@@ -164,11 +321,7 @@ class ServingEngine:
             s_idx = jnp.arange(C)[None, :]                      # (1, C)
             plen = lens[:, None]                                # (Bb, 1)
             if ring and S > C:
-                # sliding window: token p of the real tail lands at ring
-                # slot p % C; rows with plen <= C keep identity placement
-                j = jnp.where(plen > C,
-                              (plen - C) + jnp.mod(s_idx - plen, C),
-                              jnp.minimum(s_idx, S - 1))
+                j = self._ring_index(plen, s_idx, C)
             else:
                 # identity placement; slots beyond S (or beyond plen, for
                 # padded prefill) hold junk that decode masking never reads
@@ -181,23 +334,54 @@ class ServingEngine:
         def plain_scatter(dst, src):
             return dst.at[:, slots].set(src.astype(dst.dtype), mode="drop")
 
-        win = self.cfg.sliding_window
         out = {}
         for kind, sub in caches.items():
             if kind in (ATTN, "shared"):
-                ring = (kind == ATTN and win is not None
-                        and sub["k"].shape[2] == win)
+                ring = self._is_ring(kind, sub)
                 out[kind] = {n: seq_scatter(sub[n], pf_caches[kind][n], ring)
                              for n in ("k", "v")}
             else:
                 out[kind] = jax.tree.map(plain_scatter, sub, pf_caches[kind])
         return out
 
+    def _seed_packed_fn(self, caches, pf_caches, slots, starts, lens):
+        """Seed decode caches from a token-packed prefill: per-item spans
+        of the flattened token axis are gathered and scattered into their
+        slots. starts/lens (Bb,) flat span starts and true lengths; pad
+        rows scatter to row ``max_batch`` (dropped)."""
+        def span_scatter(dst, src, ring):
+            # dst (L, B, C, K, hd); src (L, 1, T, K, hd)
+            C, T = dst.shape[2], src.shape[2]
+            s_idx = jnp.arange(C)[None, :]                      # (1, C)
+            plen = lens[:, None]                                # (Bb, 1)
+            if ring:
+                within = self._ring_index(plen, s_idx, C)
+            else:
+                # identity placement within the span; cache slots beyond
+                # plen repeat the last real token — junk the decode
+                # masking never reads
+                within = jnp.minimum(s_idx, jnp.maximum(plen - 1, 0))
+            j = jnp.clip(starts[:, None] + within, 0, T - 1)    # (Bb, C)
+            rows = jnp.take(src[:, 0], j, axis=1)   # (L, Bb, C, K, hd)
+            return dst.at[:, slots].set(rows.astype(dst.dtype), mode="drop")
+
+        out = {}
+        for kind, sub in caches.items():
+            assert kind in (ATTN, "shared"), \
+                "packed prefill is gated to attention-only stacks"
+            out[kind] = {n: span_scatter(sub[n], pf_caches[kind][n],
+                                         self._is_ring(kind, sub))
+                         for n in ("k", "v")}
+        return out
+
+    # ------------------------------------------------------------------ #
     def _run_prefill(self, items, now: float) -> None:
         """Execute PT items (whole prompts) and seed their cache slots.
 
-        All items run as one padded (max_batch, seq_bucket) call when the
-        model tolerates padding; otherwise one exact-shape call per item.
+        All items of an iteration run as ONE call: token-packed (flattened
+        with a block-diagonal segment mask — no batch or length padding)
+        when enabled, else padded (max_batch, seq_bucket) when the model
+        tolerates padding; otherwise one exact-shape call per item.
         """
         if not items:
             return
@@ -221,52 +405,119 @@ class ServingEngine:
             self.top_ks[slot] = g.params.top_k
             slots.append(slot)
         n = len(group)
-        maxlen = max(len(c) for c in ctxs)
+        lens_true = [len(c) for c in ctxs]
+        maxlen = max(lens_true)
         if self._pad_prefill:
             Bb = self.max_batch
-            # pow2 bucket, clamped to capacity (a single extra bucket shape)
-            # so the padded shape never exceeds the cache it seeds
-            Sb = seq_bucket(maxlen)
-            if Sb > self.capacity:
-                Sb = max(maxlen, self.capacity)
         else:
-            Bb, Sb = n, maxlen
-        toks = np.zeros((Bb, Sb), np.int32)
-        lens = np.ones(Bb, np.int32)        # pad rows: len 1 (safe gather)
-        # pad rows scatter to row `max_batch` — out of bounds, mode="drop"
+            Bb = n
+        # pad rows: len 1 (safe gather), scatter to row `max_batch` —
+        # out of bounds, dropped via mode="drop"
+        lens = np.ones(Bb, np.int32)
         slot_arr = np.full(Bb, self.max_batch, np.int32)
-        for i, ctx in enumerate(ctxs):
-            toks[i, :len(ctx)] = ctx
-            lens[i] = len(ctx)
+        for i in range(n):
+            lens[i] = lens_true[i]
             slot_arr[i] = slots[i]
-        self._prefill_shapes.add((Bb, Sb))
-        last_logits, pf_caches = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
-        self.caches = self._seed(self.caches, pf_caches,
-                                 jnp.asarray(slot_arr), jnp.asarray(lens))
-        self.key, sk = jax.random.split(self.key)
+        if self._packed:
+            starts_np = np.zeros(Bb, np.int32)
+            last_idx = np.zeros(Bb, np.int32)
+            off = 0
+            for i in range(n):
+                starts_np[i] = off
+                off += lens_true[i]
+                last_idx[i] = off - 1
+            Tb = seq_bucket(off)
+            toks = np.zeros((1, Tb), np.int32)
+            pos = np.zeros((1, Tb), np.int32)
+            seg = np.full((1, Tb), -1, np.int32)
+            for i, ctx in enumerate(ctxs):
+                s, L = starts_np[i], lens_true[i]
+                toks[0, s:s + L] = ctx
+                pos[0, s:s + L] = np.arange(L)
+                seg[0, s:s + L] = i
+            self._prefill_shapes.add((1, Tb))
+            last_logits, pf_caches = self._prefill_packed(
+                self.params, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(seg), jnp.asarray(last_idx))
+            self.caches = self._seed_packed(
+                self.caches, pf_caches, jnp.asarray(slot_arr),
+                jnp.asarray(starts_np), jnp.asarray(lens))
+        else:
+            if self._pad_prefill:
+                # pow2 bucket, clamped to capacity (a single extra bucket
+                # shape) so the padded shape never exceeds the cache it seeds
+                Sb = seq_bucket(maxlen)
+                if Sb > self.capacity:
+                    Sb = max(maxlen, self.capacity)
+            else:
+                Sb = maxlen
+            toks = np.zeros((Bb, Sb), np.int32)
+            for i, ctx in enumerate(ctxs):
+                toks[i, :len(ctx)] = ctx
+            self._prefill_shapes.add((Bb, Sb))
+            last_logits, pf_caches = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens))
+            self.caches = self._seed(self.caches, pf_caches,
+                                     jnp.asarray(slot_arr),
+                                     jnp.asarray(lens))
+        if self._async:
+            # consume the carried device key — same stream as the sync
+            # path's self.key, no host materialization
+            key, sk = jax.random.split(self._dev["key"])
+            self._dev = dict(self._dev, key=key)
+        else:
+            self.key, sk = jax.random.split(self.key)
         temps = np.zeros(Bb, np.float32)
         top_ks = np.zeros(Bb, np.int32)
+        eos = np.full(Bb, -1, np.int32)
         for i, (r, _) in enumerate(group):
             g = self.requests[r.rid]
             temps[i] = g.params.temperature
             top_ks[i] = g.params.top_k
-        first = np.asarray(sample_per_request(
-            last_logits, sk, jnp.asarray(temps), jnp.asarray(top_ks)))
-        for i, (r, _) in enumerate(group):
-            g = self.requests[r.rid]
-            slot = slots[i]
-            self.pos[slot] = lens[i]
-            if r.generated == 0:
-                # the PT iteration produces the first response token (§1)
-                tok = int(first[i])
-                g.output.append(tok)
-                self.last_tok[slot] = tok
-            else:
-                self.last_tok[slot] = g.output[r.generated - 1]
+            eos[i] = -1 if g.params.eos_token is None else g.params.eos_token
+        first = sample_per_request(last_logits, sk, temps, top_ks)
+        if self._async:
+            # device path: the first token never touches the host here —
+            # it is scattered into the carried slot state and drained with
+            # the regular lag-N ring
+            fallback = np.zeros(Bb, np.int32)
+            use_first = np.zeros(Bb, bool)
+            mapping: List[Tuple[int, int]] = []
+            for i, (r, _) in enumerate(group):
+                g = self.requests[r.rid]
+                self.pos[slots[i]] = lens[i]
+                if r.generated == 0:
+                    # the PT iteration produces the first response token (§1)
+                    use_first[i] = True
+                    mapping.append((i, r.rid))
+                else:
+                    fallback[i] = g.output[r.generated - 1]
+            self._dev = self._seed_slots(
+                self._dev, jnp.asarray(slot_arr), first,
+                jnp.asarray(fallback), jnp.asarray(use_first),
+                jnp.asarray(lens), jnp.asarray(temps),
+                jnp.asarray(top_ks), jnp.asarray(eos))
+            if mapping:
+                self._pending_drain.append((first, mapping))
+        else:
+            first_np = np.asarray(first)
+            for i, (r, _) in enumerate(group):
+                g = self.requests[r.rid]
+                slot = slots[i]
+                self.pos[slot] = lens[i]
+                if r.generated == 0:
+                    # the PT iteration produces the first response token (§1)
+                    tok = int(first_np[i])
+                    g.output.append(tok)
+                    self.last_tok[slot] = tok
+                else:
+                    self.last_tok[slot] = g.output[r.generated - 1]
 
     # ------------------------------------------------------------------ #
     def _run_decode(self, reqs: Sequence[Request], now: float) -> None:
+        """Legacy sync decode: one host sync per iteration for the sampled
+        batch, then per-request host reads. Kept as the reference the
+        async path is equivalence-tested against."""
         if not reqs:
             return
         active = np.zeros(self.max_batch, bool)
@@ -281,8 +532,12 @@ class ServingEngine:
         # and their tokens never read back
         temps = np.where(active, self.temps, 0.0).astype(np.float32)
         top_ks = np.where(active, self.top_ks, 0).astype(np.int32)
+        # this materialization waits on the iteration that was just
+        # dispatched — the per-iteration blocking sync the async path removes
+        self.sync_counts["drain_blocking"] += 1
         new_toks = np.asarray(sample_per_request(
             logits, sk, jnp.asarray(temps), jnp.asarray(top_ks)))
+        self.decode_iters += 1
         for r in reqs:
             slot = self.slot_of[r.rid]
             g = self.requests[r.rid]
@@ -291,7 +546,71 @@ class ServingEngine:
             self.pos[slot] += 1
             self.last_tok[slot] = tok
             if g.params.eos_token is not None and tok == g.params.eos_token:
-                r.true_rl = r.generated + 1     # EOS: clamp for the scheduler
+                self.scheduler.notify_eos(r, r.generated + 1)
+
+    def _run_decode_async(self, reqs: Sequence[Request], now: float) -> None:
+        """Fused device-resident decode. The host builds the (B,) active
+        mask, splits the RNG key (an async device op, identical key stream
+        to the sync path) and dispatches the donated fused step; sampled
+        tokens land in the lag-N drain ring. EOS flags are only read back
+        when an active request actually has an ``eos_token`` — the clamp
+        must reach the scheduler at the iteration EOS fires to keep its
+        decisions bitwise-equal to the sync path."""
+        if not reqs:
+            return
+        # drain first: entries had a whole scheduler cycle to finish on
+        # device, so lag-expired drains are copies, not waits
+        self._drain_tokens()
+        active = np.zeros(self.max_batch, bool)
+        eos_possible = False
+        for r in reqs:
+            active[self.slot_of[r.rid]] = True
+            if self.requests[r.rid].params.eos_token is not None:
+                eos_possible = True
+        temps_m = np.where(active, self.temps, 0.0)
+        need_sample = bool(np.any(temps_m > 0.0))
+        need_topk = need_sample and bool(
+            np.any(np.where(active, self.top_ks, 0) > 0))
+        # the active mask only changes on admission/completion/preemption;
+        # steady state reuses the cached device copy (no transfer dispatch)
+        ab = active.tobytes()
+        if ab != self._active_bytes:
+            self._active_bytes = ab
+            self._active_dev = jnp.asarray(active)
+        self.caches, self._dev, toks, eos_hit = self._fused(
+            self.params, self.caches, self._dev, self._active_dev,
+            need_sample, need_topk)
+        self.decode_iters += 1
+        self._pending_drain.append(
+            (toks, [(self.slot_of[r.rid], r.rid) for r in reqs]))
+        if eos_possible:
+            self.sync_counts["eos_flags"] += 1
+            flags = np.asarray(eos_hit)
+            for r in reqs:
+                if flags[self.slot_of[r.rid]]:
+                    self.scheduler.notify_eos(r, r.generated + 1)
+
+    def _drain_tokens(self, force: bool = False) -> None:
+        """Materialize pending sampled-token batches older than the lag.
+
+        Steady state: an entry ``readback_lag`` iterations old has long
+        finished on device, so the ``np.asarray`` is a copy, not a wait —
+        the engine only accepts a potentially-blocking drain when the ring
+        exceeds ``max_pending`` or a flush is forced (completion,
+        preemption, idle, end of run)."""
+        dq = self._pending_drain
+        lag = 0 if force else self.ecfg.readback_lag
+        while len(dq) > lag:
+            toks, mapping = dq[0]
+            ready = toks.is_ready()
+            if not ready and not force and len(dq) <= self.ecfg.max_pending:
+                break
+            dq.popleft()
+            key = "drain_ready" if ready else "drain_blocking"
+            self.sync_counts[key] += 1
+            arr = np.asarray(toks)
+            for row, rid in mapping:
+                self.requests[rid].output.append(int(arr[row]))
 
     # ------------------------------------------------------------------ #
     def step(self, now: Optional[float] = None) -> int:
@@ -299,23 +618,48 @@ class ServingEngine:
         now = time.monotonic() if now is None else now
         plan = self.scheduler.form_batch(now)
         if plan.empty:
+            if self._pending_drain:
+                self.sync_counts["flush"] += 1
+                self._drain_tokens(force=True)
             return 0
-        self._run_prefill(plan.prompt_items, now)
-        self._run_decode(plan.decode_reqs, now)
+        # GTs rescheduled after a swap-style preemption or deadlock-relief
+        # eviction arrive with their KV "in host memory" — this engine has
+        # no host KV store, so they are recomputed like an offload-free
+        # re-prefill (prompt + generated so far), riding the iteration's
+        # prefill wave so the rare preemption path costs no extra dispatch
+        missing = [r for r in plan.decode_reqs if r.rid not in self.slot_of]
+        if missing and self._pending_drain:     # ctx rebuild reads g.output
+            self.sync_counts["flush"] += 1
+            self._drain_tokens(force=True)
+        self._run_prefill([(r, r.prompt_len) for r in missing]
+                          + list(plan.prompt_items), now)
+        if self._async:
+            self._run_decode_async(plan.decode_reqs, now)
+        else:
+            self._run_decode(plan.decode_reqs, now)
         before = len(self.scheduler.completed)
         self.scheduler.finish_iteration(now)
         done = self.scheduler.completed[before:]
+        freed = False
         for r in done:
             g = self.requests[r.rid]
             g.t_done = r.t_complete
             slot = self.slot_of.pop(r.rid, None)
             if slot is not None:
                 self.free_slots.append(slot)
+                freed = True
         # preempted/evicted requests (KVC freed by the scheduler) lose
         # their slot; queued GTs keep theirs — their KV is live
         for rid in list(self.slot_of):
             if rid not in self.scheduler.kvc.allocs:
                 self.free_slots.append(self.slot_of.pop(rid))
+                freed = True
+        if freed and self._pending_drain:
+            # completed outputs must be materialized before t_done is
+            # observable, and a preempted request rebuilds its recompute
+            # context from g.output at the next prefill
+            self.sync_counts["flush"] += 1
+            self._drain_tokens(force=True)
         return len(done)
 
     def run(self, gen_requests: Sequence[GenRequest],
@@ -328,4 +672,7 @@ class ServingEngine:
             t += 1.0
             self.step(t)
             steps += 1
+        if self._pending_drain:
+            self.sync_counts["flush"] += 1
+            self._drain_tokens(force=True)
         return list(gen_requests)

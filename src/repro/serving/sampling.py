@@ -31,8 +31,12 @@ def sample(logits: jax.Array, key: jax.Array,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("need_sample", "need_topk"))
-def _sample_per_request(logits, key, temps, top_ks, need_sample, need_topk):
+def sample_in_graph(logits, key, temps, top_ks, need_sample, need_topk):
+    """Traceable sampling body: per-row temperature / top-k over (B, V)
+    logits. ``need_sample`` / ``need_topk`` must be Python bools (trace-time
+    constants). Called directly inside the engine's fused async decode step
+    (so sampling stays in the same XLA program as the forward pass) and
+    wrapped by the standalone jit below for the legacy host-driven path."""
     V = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if not need_sample:
@@ -47,6 +51,10 @@ def _sample_per_request(logits, key, temps, top_ks, need_sample, need_topk):
                            -1e30, scaled)
     sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temps > 0.0, sampled, greedy)
+
+
+_sample_per_request = functools.partial(
+    jax.jit, static_argnames=("need_sample", "need_topk"))(sample_in_graph)
 
 
 def sample_per_request(logits: jax.Array, key: jax.Array,

@@ -33,6 +33,43 @@ def test_flash_prefill_matches_ref(B, S, H, K, hd, win, cap, dtype):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seg_lens,win,cap", [
+    ((48, 80),       None, None),
+    ((17, 60, 51),   None, 30.0),            # ragged segments + softcap
+    ((100, 28),      32,   None),            # sliding window within segments
+    ((5, 3, 90, 30), None, None),            # tiny segments
+])
+def test_flash_prefill_segment_mask(seg_lens, win, cap, dtype):
+    """Token-packed (block-diagonal) masking: a flattened batch of segments
+    must match per-segment exact-shape attention."""
+    B, H, K, hd = 1, 4, 2, 32
+    S = sum(seg_lens)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    seg = jnp.asarray(np.repeat(np.arange(len(seg_lens)), seg_lens)[None])
+    out = flash_attention(q, k, v, causal=True, window=win, softcap=cap,
+                          segment_ids=seg, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, window=win,
+                               softcap=cap, segment_ids=seg)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype])
+    # the oracle itself equals isolated per-segment attention
+    st = 0
+    for L in seg_lens:
+        alone = ref.flash_attention(q[:, st:st + L], k[:, st:st + L],
+                                    v[:, st:st + L], causal=True,
+                                    window=win, softcap=cap)
+        np.testing.assert_allclose(
+            want[:, st:st + L].astype(jnp.float32),
+            alone.astype(jnp.float32), atol=TOLS[dtype], rtol=TOLS[dtype])
+        st += L
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,H,K,hd,page,MP", [
     (3, 8, 2, 64, 16, 5),
     (2, 4, 4, 128, 32, 4),
