@@ -1,9 +1,11 @@
 """Hot-path microbenchmarks: scheduler form_batch throughput (legacy full
 re-sort vs incremental OrderedQueue with O(1) removal), steady-state
 decode-loop throughput (legacy host-synced vs fused async device-resident)
-with host-blocking-sync counts per iteration, engine prefill retrace count
-under token packing, and paged-attention kernel step time single- vs
-multi-page.
+with host-blocking-sync counts per iteration, decode-megastep dispatch
+amortization (K fused iterations per dispatch vs one), chunked-prefill
+per-iteration stall bounds under a long-prompt + decode mixed wave, engine
+prefill retrace count under token packing, and paged-attention kernel step
+time single- vs multi-page.
 
 Emits before/after numbers to ``BENCH_hotpath.json`` at the repo root —
 the baseline the acceptance criteria check against:
@@ -11,6 +13,11 @@ the baseline the acceptance criteria check against:
   * >= 5x form_batch ops/sec on a 10k-request synthetic trace,
   * >= 2x steady-state decode iterations/s at full batch, with zero
     blocking host syncs per steady-state async iteration,
+  * ~K× fewer decode dispatches per generated token with megastep K=8
+    (the structural invariant CI gates on),
+  * a long prompt completing via >= 2 engine-executed chunks with tokens
+    equal to the whole-prompt run and a bounded max single-iteration
+    stall,
   * <= ceil(log2(max_total_prompt_tokens)) distinct prefill compilations.
 
 Run:  PYTHONPATH=src python -m benchmarks.hotpath_micro [--quick]
@@ -18,7 +25,10 @@ Run:  PYTHONPATH=src python -m benchmarks.hotpath_micro [--quick]
       only full runs refresh the committed baseline)
 CI:   PYTHONPATH=src python -m benchmarks.hotpath_micro --check
       (quick mode, no JSON rewrite; exits 1 when the scheduler microbench
-      regresses >2x against the committed baseline's relative speedup)
+      regresses >2x, the decode loop regresses >3x — generous because
+      runner scheduling is noisy, but a reintroduced per-iteration sync
+      shows up far larger — or a structural invariant breaks: megastep
+      dispatch amortization, chunked execution/equality)
 """
 from __future__ import annotations
 
@@ -155,7 +165,169 @@ def bench_decode_loop(decode_iters: int = 300, seed: int = 0) -> Dict:
 
 
 # --------------------------------------------------------------------- #
-# 3. engine prefill retraces under token packing
+# 3. decode megastep: dispatches per iteration amortized ~K×
+# --------------------------------------------------------------------- #
+def bench_decode_megastep(decode_iters: int = 240, seed: int = 0) -> Dict:
+    """Steady-state full-batch decode with the fused K-iteration window vs
+    the per-iteration async path. iters/s is wall-clock (noisy on shared
+    runners); *dispatches per iteration* is the structural invariant
+    (~1/K in steady state) CI gates on."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                               ServingEngine)
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+    mb, warmup, n_windows = 16, 12, 5
+    per_window = max(1, decode_iters // n_windows)
+    out = {}
+    for label, k in (("per_iteration", 1), ("megastep_8", 8)):
+        eng = ServingEngine(cfg, max_batch=mb, capacity=512,
+                            rl_accuracy=1.0, seed=seed,
+                            engine_cfg=EngineConfig(decode_megastep=k))
+        rng = np.random.default_rng(seed)
+        reqs = [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 16)),
+                           params=SamplingParams(
+                               max_new_tokens=decode_iters + warmup + 64))
+                for _ in range(mb)]
+        t = 0.0
+        for g in reqs:
+            eng.submit(g, t)
+        for _ in range(warmup):                 # admit + compile + settle
+            t += 1.0
+            eng.step(t)
+        base_iters = eng.decode_iters
+        base_disp = eng.n_decode_dispatches
+        base_counts = dict(eng.sync_counts)
+        rates, total_s = [], 0.0
+        for _ in range(n_windows):
+            t0 = time.perf_counter()
+            for _ in range(per_window):
+                t += 1.0
+                eng.step(t)
+            dt = time.perf_counter() - t0
+            total_s += dt
+            rates.append(per_window / dt)
+        n = eng.decode_iters - base_iters
+        disp = eng.n_decode_dispatches - base_disp
+        window = {kk: eng.sync_counts[kk] - base_counts[kk]
+                  for kk in eng.sync_counts}
+        blocking = window["eos_flags"] + window["drain_blocking"]
+        rates.sort()
+        out[label] = {
+            "iters": n, "seconds": round(total_s, 4),
+            "iters_per_s": round(rates[len(rates) // 2], 1),
+            "dispatches": disp,
+            "dispatches_per_iter": round(disp / n, 4),
+            "blocking_syncs_per_iter": round(blocking / n, 4),
+            "host_sync_counts": window,
+        }
+    out["speedup"] = round(out["megastep_8"]["iters_per_s"]
+                           / out["per_iteration"]["iters_per_s"], 2)
+    out["dispatch_amortization"] = round(
+        out["per_iteration"]["dispatches_per_iter"]
+        / max(out["megastep_8"]["dispatches_per_iter"], 1e-9), 1)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 4. chunked prefill: bounded per-iteration stall under a long-prompt +
+#    decode mixed wave
+# --------------------------------------------------------------------- #
+def bench_chunked_prefill(plen: int = 256, chunk_tfs: int = 64,
+                          seed: int = 0) -> Dict:
+    """A long prompt arrives while a decode batch runs. Whole-prompt
+    prefill stalls every in-flight decode for the full prompt's forward
+    pass; chunked execution (TFS < prompt) bounds the max single-iteration
+    stall near the per-chunk cost, at the price of spreading the long
+    request's TTFT over ceil(plen/TFS) iterations. Token streams must be
+    identical either way."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen3_8b").reduced().with_(dtype="float32",
+                                                 param_dtype="float32")
+    mb, cap = 4, 512
+    out: Dict = {}
+    streams = {}
+    for label, tfs in (("whole_prompt", cap), (f"chunked_{chunk_tfs}",
+                                               chunk_tfs)):
+        scfg = SchedulerConfig(kvc_tokens=mb * cap, block_size=32, tfs=tfs,
+                               max_model_len=cap, max_batch_reqs=mb)
+        eng = ServingEngine(cfg, max_batch=mb, capacity=cap,
+                            rl_accuracy=1.0, seed=seed, scheduler_cfg=scfg)
+        rng = np.random.default_rng(seed)
+
+        def wave():
+            shorts = [GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size, 12)),
+                params=SamplingParams(max_new_tokens=48))
+                for _ in range(mb - 1)]
+            long_req = GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size, plen)),
+                params=SamplingParams(max_new_tokens=8))
+            return shorts, long_req
+
+        t = 0.0
+        all_reqs = []
+        step_ms, prefill_ms = [], []
+        rid = None
+        # pass 1 warms every shape (prefill buckets, chunk buckets, decode
+        # windows) so pass-2 timings measure execution, not compilation
+        for passno in ("warm", "measured"):
+            shorts, long_req = wave()
+            all_reqs += shorts + [long_req]
+            for g in shorts:
+                eng.submit(g, t)
+            for _ in range(6):      # reach steady decode before the long
+                t += 1.0            # prompt lands
+                eng.step(t)
+            rid = eng.submit(long_req, t)
+            while eng.has_work() and t < 600:
+                t += 1.0
+                t0 = time.perf_counter()
+                eng.step(t)
+                if passno == "measured":
+                    dt = (time.perf_counter() - t0) * 1e3
+                    step_ms.append(dt)
+                    p = eng.scheduler.current_plan
+                    if p is not None and p.prompt_items:
+                        # attribute to prefill: these iterations are where
+                        # a prompt stalls the in-flight decode batch
+                        prefill_ms.append(dt)
+        if eng._pending_drain:
+            eng._drain_tokens(force=True)
+        streams[label] = [g.output for g in all_reqs]
+        sreq = next(r for r in eng.scheduler.completed if r.rid == rid)
+        step_ms.sort()
+        out[label] = {
+            "tfs": tfs,
+            "n_chunks": eng.n_prefill_chunks,
+            "ttft_iterations": int(sreq.t_first_token - sreq.arrival),
+            "p50_step_ms": round(step_ms[len(step_ms) // 2], 2),
+            "max_step_ms": round(step_ms[-1], 2),
+            "max_prefill_step_ms": round(max(prefill_ms), 2),
+        }
+    chunk_label = f"chunked_{chunk_tfs}"
+    out["tokens_equal"] = streams["whole_prompt"] == streams[chunk_label]
+    out["prefill_stall_ratio"] = round(
+        out["whole_prompt"]["max_prefill_step_ms"]
+        / max(out[chunk_label]["max_prefill_step_ms"], 1e-9), 2)
+    out["note"] = ("max_prefill_step_ms bounds the decode-token stall a "
+                   "prompt admission inflicts on in-flight requests "
+                   "(max_step_ms also includes megastep window-boundary "
+                   "drains, identical in both configs); chunking trades "
+                   "the long request's own TTFT (spread over its chunks) "
+                   "for that bound")
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 5. engine prefill retraces under token packing
 # --------------------------------------------------------------------- #
 def bench_prefill_retraces(n: int = 24, seed: int = 0) -> Dict:
     import numpy as np
@@ -192,7 +364,7 @@ def bench_prefill_retraces(n: int = 24, seed: int = 0) -> Dict:
 
 
 # --------------------------------------------------------------------- #
-# 4. kernel: single- vs multi-page step time + DMA early-exit accounting
+# 6. kernel: single- vs multi-page step time + DMA early-exit accounting
 # --------------------------------------------------------------------- #
 def bench_kernel(reps: int = 3) -> Dict:
     import jax
@@ -235,15 +407,59 @@ def bench_kernel(reps: int = 3) -> Dict:
     return out
 
 
+def _quickref_measure() -> Dict:
+    """The two relative speedups the CI guard anchors on, measured in the
+    exact order ``check_regression`` measures them — the scheduler bench
+    reads several× lower after the engine benches churn the process
+    (thread state, allocator fragmentation), so the order is part of the
+    measurement and reference and rerun must share it."""
+    dl = bench_decode_loop(decode_iters=60)["speedup"]
+    bench_decode_megastep(decode_iters=60)
+    bench_chunked_prefill(plen=128, chunk_tfs=32)
+    return {
+        "form_batch_speedup": bench_form_batch(
+            n_reqs=2_000, iters=15)["speedup"],
+        # clamp freak-high regimes (healthy runs swing ~2-8x with host
+        # thread scheduling): the gate this anchors only needs to separate
+        # healthy (>1.5x worst-regime) from a reintroduced per-iteration
+        # sync (~1x) — the megastep bench's counter-based blocking gate is
+        # the primary detector for that anyway
+        "decode_loop_speedup": round(min(dl, 4.0), 2),
+    }
+
+
+def _quickref_subprocess() -> Dict:
+    """Measure the quick references in a fresh interpreter (how CI runs
+    them); falls back to in-process on any spawn failure."""
+    import subprocess
+    import sys
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.hotpath_micro",
+             "--quickref-json"],
+            capture_output=True, text=True, timeout=600,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"},
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    except Exception as e:                          # noqa: BLE001
+        print(f"note: fresh-process quickref failed ({e}); "
+              f"measuring in-process (biases the CI gate lenient)")
+        return _quickref_measure()
+
+
 def main(quick: bool = False, write: bool = True) -> Dict:
     n, iters = (2_000, 15) if quick else (10_000, 40)
-    # the engine decode bench runs first: it is the recorded headline
-    # number and a fresh process is how users (and CI) invoke the bench;
+    # the engine decode benches run first: they are the recorded headline
+    # numbers and a fresh process is how users (and CI) invoke the bench;
     # the 10k-request scheduler bench churns enough Python objects /
     # thread state to perturb the engines' measured regime in-process
     results: Dict = {
         "bench": "hotpath_micro",
         "decode_loop": bench_decode_loop(decode_iters=60 if quick else 300),
+        "decode_megastep": bench_decode_megastep(
+            decode_iters=60 if quick else 240),
+        "chunked_prefill": bench_chunked_prefill(
+            plen=128 if quick else 256, chunk_tfs=32 if quick else 64),
         "form_batch": bench_form_batch(n_reqs=n, iters=iters),
         "prefill": bench_prefill_retraces(n=8 if quick else 24),
         "kernel": bench_kernel(reps=2 if quick else 3),
@@ -258,15 +474,16 @@ def main(quick: bool = False, write: bool = True) -> Dict:
     if quick:
         results["quick_reference"] = {
             "form_batch_speedup": results["form_batch"]["speedup"],
-            "decode_loop_speedup": results["decode_loop"]["speedup"],
+            # same clamp as _quickref_measure (see there)
+            "decode_loop_speedup": round(
+                min(results["decode_loop"]["speedup"], 4.0), 2),
         }
     else:
-        dl = bench_decode_loop(decode_iters=60)["speedup"]
-        results["quick_reference"] = {
-            "form_batch_speedup": bench_form_batch(
-                n_reqs=2_000, iters=15)["speedup"],
-            "decode_loop_speedup": dl,
-        }
+        # CI's --check reruns the quick benches in a FRESH process, so the
+        # committed references must be measured the same way: an in-process
+        # measurement after the 10k-queue churn reads several× low (thread
+        # state, allocator fragmentation), anchoring the gate too leniently
+        results["quick_reference"] = _quickref_subprocess()
     if write:
         with open(OUT_PATH, "w") as f:
             json.dump(results, f, indent=1)
@@ -274,16 +491,30 @@ def main(quick: bool = False, write: bool = True) -> Dict:
     return results
 
 
-def check_regression(factor: float = 2.0) -> int:
-    """CI wall-clock guard. Reruns just the scheduler and decode-loop
-    benches at quick parameters (no JSON rewrite) and fails when the
-    *relative* speedup — incremental vs legacy on the same machine, so
-    absolute CI-runner speed cancels out — has regressed more than
-    ``factor`` against the committed baseline's quick_reference."""
+def check_regression(factor: float = 2.0,
+                     decode_factor: float = 3.0) -> int:
+    """CI guard. Reruns the scheduler + decode-loop + megastep + chunked
+    benches at quick parameters (no JSON rewrite) and fails when:
+
+      * the form_batch *relative* speedup (incremental vs legacy on the
+        same machine, so absolute runner speed cancels out) regressed more
+        than ``factor`` against the committed quick_reference;
+      * the decode-loop relative speedup regressed more than
+        ``decode_factor`` — a hard gate with a deliberately generous
+        threshold: runner thread-scheduling swings runs ~1.5-3x, but a
+        reintroduced per-iteration blocking sync costs far more;
+      * a structural invariant broke: megastep must amortize dispatches
+        (<= 0.5/iter in steady state, ~1/K expected) with zero blocking
+        syncs, and a long prompt must complete via >= 2 engine-executed
+        chunks with tokens equal to the whole-prompt run. These are
+        counter-based and immune to wall-clock noise.
+    """
     with open(OUT_PATH) as f:
         base = json.load(f)
     ref = base.get("quick_reference")
-    res = {"decode_loop": bench_decode_loop(decode_iters=60)}
+    res = {"decode_loop": bench_decode_loop(decode_iters=60),
+           "decode_megastep": bench_decode_megastep(decode_iters=60),
+           "chunked_prefill": bench_chunked_prefill(plen=128, chunk_tfs=32)}
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
     print(json.dumps(res, indent=1))
     failures = []
@@ -294,29 +525,43 @@ def check_regression(factor: float = 2.0) -> int:
         print("note: baseline has no quick_reference — speedup comparison "
               "skipped; refresh BENCH_hotpath.json to restore it")
     else:
-        # only the scheduler microbench gates hard: it is pure Python and
-        # stable on shared runners. The engine decode loop depends on how
-        # the host OS schedules the XLA threadpool, so it warns instead of
-        # failing (a reintroduced per-iteration sync would also show up in
-        # local full-bench refreshes).
         want = ref["form_batch_speedup"] / factor
         got = res["form_batch"]["speedup"]
         if got < want:
             failures.append(f"form_batch: speedup {got} < baseline/"
                             f"{factor} = {want:.2f}")
-        want_dl = ref["decode_loop_speedup"] / factor
+        want_dl = ref["decode_loop_speedup"] / decode_factor
         got_dl = res["decode_loop"]["speedup"]
         if got_dl < want_dl:
-            print(f"warning: decode_loop speedup {got_dl} < quick baseline/"
-                  f"{factor} = {want_dl:.2f} (not gating; likely runner "
-                  f"scheduling noise)")
+            failures.append(f"decode_loop: speedup {got_dl} < baseline/"
+                            f"{decode_factor} = {want_dl:.2f}")
+    # structural gates: counter-based, stable on any runner
+    dpi = res["decode_megastep"]["megastep_8"]["dispatches_per_iter"]
+    if dpi > 0.5:
+        failures.append(f"decode_megastep: {dpi} dispatches/iter "
+                        f"(expected ~{1 / 8:.3f}, gate 0.5) — windows "
+                        f"not fusing")
+    mega_blocking = res["decode_megastep"]["megastep_8"][
+        "blocking_syncs_per_iter"]
+    if mega_blocking > 0.05:
+        failures.append(f"decode_megastep: {mega_blocking} blocking "
+                        f"syncs/iter in steady state (expected 0)")
+    ck = res["chunked_prefill"]
+    chunk_key = next(k for k in ck if k.startswith("chunked_"))
+    if ck[chunk_key]["n_chunks"] < 2:
+        failures.append(f"chunked_prefill: long prompt ran in "
+                        f"{ck[chunk_key]['n_chunks']} chunks (expected "
+                        f">= 2)")
+    if not ck["tokens_equal"]:
+        failures.append("chunked_prefill: token streams diverged from the "
+                        "whole-prompt run")
     blocking = res["decode_loop"]["async_device"]["blocking_syncs_per_iter"]
     if blocking > 0.05:
         # warn-only: blocking drains also happen when a slow/loaded runner
         # makes device compute outpace host dispatch (the ring tops out at
         # max_pending), which is machine load, not a code regression — a
-        # *reintroduced* per-iteration host sync shows up as a decode_loop
-        # speedup regression above and fails there
+        # *reintroduced* per-iteration host sync fails the decode_loop
+        # speedup gate above
         print(f"warning: async decode loop blocked on the host "
               f"({blocking} syncs/iter, expected ~0 on an idle machine)")
     if failures:
@@ -324,13 +569,19 @@ def check_regression(factor: float = 2.0) -> int:
         return 1
     print("regression guard OK: "
           f"form_batch {res['form_batch']['speedup']}x, "
-          f"decode_loop {res['decode_loop']['speedup']}x "
+          f"decode_loop {res['decode_loop']['speedup']}x, "
+          f"megastep {res['decode_megastep']['dispatch_amortization']}x "
+          f"dispatch amortization, chunked TTFT bounded "
           f"(quick baselines: {ref})")
     return 0
 
 
 if __name__ == "__main__":
     import sys
+    if "--quickref-json" in sys.argv:
+        # internal: fresh-process quick-reference measurement for main()
+        print(json.dumps(_quickref_measure()))
+        sys.exit(0)
     if "--check" in sys.argv:
         sys.exit(check_regression())
     quick = "--quick" in sys.argv

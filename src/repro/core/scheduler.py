@@ -178,6 +178,36 @@ class BaseScheduler:
         completion check is ``generated >= true_rl``, not equality."""
         req.true_rl = min(req.true_rl, max(1, at_generated))
 
+    def decode_horizon(self, plan: IterationPlan, max_k: int) -> int:
+        """How many consecutive iterations (including the one just planned)
+        are guaranteed to keep the decode-batch membership fixed — no
+        admission, KVC allocation, under-provision, preemption, or
+        pipelining event can fire before the horizon's last
+        ``finish_iteration``. EOS-driven completions *inside* the horizon
+        only ever shrink the batch (queues are empty, so freed KVC admits
+        nothing), which an engine replaying iterations against precomputed
+        results handles without re-planning.
+
+        This is what lets an engine fuse K decode iterations into one
+        device dispatch while the per-iteration scheduler replay stays
+        bitwise-identical: events are provably absent from the window, so
+        each replayed ``form_batch`` returns the same membership.
+        """
+        if max_k <= 1 or plan.prompt_items or not plan.decode_reqs:
+            return 1
+        if self.pt_queue or self.gt_queue:
+            return 1            # admissions possible any iteration
+        pipe = getattr(self, "pipe", None)
+        if pipe is not None and pipe.active:
+            return 1            # hosted-slot deadlines can preempt
+        k = max_k
+        for r in plan.decode_reqs:
+            # completion at true_rl (EOS may land earlier: handled by the
+            # replay); under-provision (rescue/preempt) at alloc_rl
+            k = min(k, max(1, r.true_rl - r.generated),
+                    max(1, r.alloc_rl - r.generated))
+        return k
+
     def _pt_finished(self, req: Request, t: float) -> None:
         """Prompt fully processed → request becomes a queued GT. The PT
         iteration itself produces the first response token (§1)."""
@@ -348,8 +378,6 @@ class EconoServeScheduler(BaseScheduler):
         allow_general = not self.gt_queue     # GTs own the general pool
         q = self._sorted_pt_queue(t)
         while q and budget >= 1:
-            if len(self.kvc.allocs) + len(items) >= self.cfg.max_batch_reqs:
-                break                        # engine concurrency cap
             kvc_avail = self.kvc.free_reserve * self.cfg.block_size \
                 + (self.kvc.free_tokens() if allow_general else 0)
             if kvc_avail < 1:
@@ -360,6 +388,17 @@ class EconoServeScheduler(BaseScheduler):
             if i is None:
                 i = 0                        # no perfect fit → chunk the head
             r = q[i]
+            # the concurrency cap bounds *new* admissions only: a chunked
+            # prompt mid-flight already holds KVC (and an engine slot), so
+            # continuing it adds no concurrent request — without this
+            # exemption a full batch starves every in-flight chunked PT
+            # until something completes. len(allocs) alone is the live
+            # concurrency count: every grant (including ones made earlier
+            # in this very loop) creates its alloc entry immediately.
+            resident = self.kvc.allocated_tokens(r.rid) > 0
+            if (not resident
+                    and len(self.kvc.allocs) >= self.cfg.max_batch_reqs):
+                break                        # engine concurrency cap
             remaining = r.prompt_len - r.prompt_done
             chunk = self._grant_pt_capacity(r, min(remaining, budget),
                                             allow_general)

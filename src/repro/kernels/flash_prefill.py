@@ -5,6 +5,16 @@ k-block axis innermost; running max / sum / accumulator live in VMEM
 scratch that persists across the sequential k steps, and the output block
 is written on the last k step. BlockSpecs keep one (block_q, head_dim) Q
 tile and one (block_k, head_dim) K/V tile in VMEM per step — MXU-aligned.
+
+Two masking modes:
+  * implicit (default): causal/window masks built from the global iota —
+    requires Sq == Sk and contiguous positions.
+  * explicit positions: ``q_positions`` (B, Sq) / ``kv_positions`` (B, Sk)
+    operands drive the mask (kv <= q, window on position deltas). This is
+    the chunked-prefill path: the key axis is a seeded cache-prefix view
+    concatenated with the chunk itself, so Sq != Sk and key positions are
+    not an iota (invalid prefix slots carry the ``POS_INVALID`` sentinel,
+    which the causal term masks).
 """
 from __future__ import annotations
 
@@ -17,17 +27,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+POS_INVALID = 2 ** 30          # key position sentinel: masked by causality
 
 
 def _kernel(q_ref, k_ref, v_ref, *rest,
             scale: float, block_q: int, block_k: int, seq_len: int,
             causal: bool, window: Optional[int], softcap: Optional[float],
-            num_kblocks: int, has_segments: bool):
+            num_kblocks: int, has_segments: bool, has_positions: bool):
+    rest = list(rest)
+    sq_ref = sk_ref = pq_ref = pk_ref = None
     if has_segments:
-        sq_ref, sk_ref, o_ref, m_scr, l_scr, acc_scr = rest
-    else:
-        sq_ref = sk_ref = None
-        o_ref, m_scr, l_scr, acc_scr = rest
+        sq_ref, sk_ref = rest[0], rest[1]
+        rest = rest[2:]
+    if has_positions:
+        pq_ref, pk_ref = rest[0], rest[1]
+        rest = rest[2:]
+    o_ref, m_scr, l_scr, acc_scr = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -40,11 +55,12 @@ def _kernel(q_ref, k_ref, v_ref, *rest,
     q_start = iq * block_q
     k_start = ik * block_k
     # skip fully-masked tiles (causal: k block entirely after q block;
-    # window: k block entirely before the window)
+    # window: k block entirely before the window). Only valid when the
+    # iota IS the position — explicit positions disable the static skip.
     run = True
-    if causal:
+    if causal and not has_positions:
         run = k_start <= q_start + block_q - 1
-    if window is not None:
+    if window is not None and not has_positions:
         run = jnp.logical_and(run,
                               k_start + block_k - 1 > q_start - window)
 
@@ -57,9 +73,16 @@ def _kernel(q_ref, k_ref, v_ref, *rest,
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
-        ii = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        jj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = jj < seq_len
+        if has_positions:
+            # explicit token positions: the key axis may be a cache-prefix
+            # view (invalid slots carry POS_INVALID and mask causally)
+            ii = pq_ref[0, :][:, None]
+            jj = pk_ref[0, :][None, :]
+            mask = jj < POS_INVALID
+        else:
+            ii = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            jj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jj < seq_len
         if causal:
             mask &= jj <= ii
         if window is not None:
@@ -94,9 +117,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     segment_ids: Optional[jax.Array] = None,
+                    q_positions: Optional[jax.Array] = None,
+                    kv_positions: Optional[jax.Array] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False) -> jax.Array:
-    """q (B,S,H,hd); k/v (B,S,K,hd), H multiple of K (GQA).
+    """q (B,Sq,H,hd); k/v (B,Sk,K,hd), H multiple of K (GQA).
 
     The q-head grid axis indexes query heads; the K/V BlockSpec maps it to
     the owning kv head (h // G), so GQA costs no extra K/V traffic.
@@ -105,32 +130,58 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (block-diagonal mask for token-packed prefill). Padded tail positions
     get segment -1, which still never leaks into real rows because the
     ``jj < seq_len`` bound masks them first.
+
+    ``q_positions`` (B,Sq) / ``kv_positions`` (B,Sk) switch the mask to
+    explicit token positions (chunked prefill: the key axis is a seeded
+    cache-prefix view plus the chunk, so Sq != Sk is allowed and invalid
+    key slots carry ``POS_INVALID``). Both must be given together.
     """
-    B, S, H, hd = q.shape
+    assert (q_positions is None) == (kv_positions is None)
+    has_positions = q_positions is not None
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    assert has_positions or Sq == Sk, \
+        "rectangular attention requires explicit positions"
     K = k.shape[2]
     G = H // K
-    orig_S = S
-    pad = (-S) % max(block_q, block_k)
-    if pad:
-        zq = jnp.zeros((B, pad, H, hd), q.dtype)
-        zk = jnp.zeros((B, pad, K, hd), k.dtype)
-        q = jnp.concatenate([q, zq], axis=1)
+    orig_Sq, orig_Sk = Sq, Sk
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+
+    def _pad1(a, n, fill):
+        return jnp.concatenate(
+            [a.astype(jnp.int32), jnp.full((B, n), fill, jnp.int32)],
+            axis=1) if n else a.astype(jnp.int32)
+
+    seg_q = seg_k = None
+    if segment_ids is not None:
+        # pad q segment -1 / pad k segment -2: pad rows never match
+        seg_q = _pad1(segment_ids, pad_q, -1)
+        seg_k = _pad1(segment_ids, pad_k, -2)
+    if has_positions:
+        # pad queries attend nothing (their rows are sliced off); pad keys
+        # carry the invalid sentinel, masked by causality
+        q_positions = _pad1(q_positions, pad_q, -1)
+        kv_positions = _pad1(kv_positions, pad_k, POS_INVALID)
+    if pad_q:
+        q = jnp.concatenate(
+            [q, jnp.zeros((B, pad_q, H, hd), q.dtype)], axis=1)
+        Sq = q.shape[1]
+    if pad_k:
+        zk = jnp.zeros((B, pad_k, K, hd), k.dtype)
         k = jnp.concatenate([k, zk], axis=1)
         v = jnp.concatenate([v, zk], axis=1)
-        if segment_ids is not None:
-            segment_ids = jnp.concatenate(
-                [segment_ids.astype(jnp.int32),
-                 jnp.full((B, pad), -1, jnp.int32)], axis=1)
-        S = q.shape[1]
-    nq = S // block_q
-    nk = S // block_k
+        Sk = k.shape[1]
+    nq = Sq // block_q
+    nk = Sk // block_k
     scale = 1.0 / (hd ** 0.5)
     has_segments = segment_ids is not None
 
     kernel = functools.partial(
         _kernel, scale=scale, block_q=block_q, block_k=block_k,
-        seq_len=orig_S, causal=causal, window=window, softcap=softcap,
-        num_kblocks=nk, has_segments=has_segments)
+        seq_len=orig_Sk, causal=causal, window=window, softcap=softcap,
+        num_kblocks=nk, has_segments=has_segments,
+        has_positions=has_positions)
     in_specs = [
         pl.BlockSpec((1, block_q, 1, hd),
                      lambda b, h, i, j: (b, i, h, 0)),
@@ -147,15 +198,20 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                      lambda b, h, i, j: (b, i)))
         in_specs.append(pl.BlockSpec((1, block_k),
                                      lambda b, h, i, j: (b, j)))
-        operands += [segment_ids.astype(jnp.int32),
-                     segment_ids.astype(jnp.int32)]
+        operands += [seg_q, seg_k]
+    if has_positions:
+        in_specs.append(pl.BlockSpec((1, block_q),
+                                     lambda b, h, i, j: (b, i)))
+        in_specs.append(pl.BlockSpec((1, block_k),
+                                     lambda b, h, i, j: (b, j)))
+        operands += [q_positions, kv_positions]
     out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, 1, hd),
                                lambda b, h, i, j: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),    # running max
             pltpu.VMEM((block_q, 1), jnp.float32),    # running sum
@@ -163,4 +219,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(*operands)
-    return out[:, :orig_S]
+    return out[:, :orig_Sq]

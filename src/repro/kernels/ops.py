@@ -24,19 +24,27 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "block_q", "block_k"))
-def flash_attention(q, k, v, segment_ids=None, *, causal: bool = True,
+def flash_attention(q, k, v, segment_ids=None, q_positions=None,
+                    kv_positions=None, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128):
-    """Prefill/training attention. q (B,S,H,hd); k/v (B,S,K,hd).
+    """Prefill/training attention. q (B,Sq,H,hd); k/v (B,Sk,K,hd).
 
     ``segment_ids`` (B,S) int32 (optional) makes the mask block-diagonal —
     the token-packed prefill path, where a wave of prompts runs as one
-    flattened sequence with no batch- or length-padding."""
+    flattened sequence with no batch- or length-padding.
+
+    ``q_positions`` (B,Sq) / ``kv_positions`` (B,Sk) (optional, together)
+    switch to explicit-position masking and allow Sq != Sk — the
+    chunked-prefill path, where the key axis is a seeded cache-prefix view
+    concatenated with the chunk (invalid prefix slots carry
+    ``flash_prefill.POS_INVALID``)."""
     bq = min(block_q, max(16, q.shape[1]))
-    bk = min(block_k, max(16, q.shape[1]))
+    bk = min(block_k, max(16, k.shape[1]))
     return _flash_pallas(q, k, v, causal=causal, window=window,
                          softcap=softcap, segment_ids=segment_ids,
+                         q_positions=q_positions, kv_positions=kv_positions,
                          block_q=bq, block_k=bk,
                          interpret=_interpret())
 

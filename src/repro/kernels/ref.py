@@ -20,33 +20,45 @@ def _softcap(x, cap: Optional[float]):
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
-                    segment_ids: Optional[jax.Array] = None) -> jax.Array:
-    """q (B,S,H,hd); k/v (B,S,K,hd) with H a multiple of K (GQA).
+                    segment_ids: Optional[jax.Array] = None,
+                    q_positions: Optional[jax.Array] = None,
+                    kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """q (B,Sq,H,hd); k/v (B,Sk,K,hd) with H a multiple of K (GQA).
     Causal (optionally sliding-window) attention. fp32 accumulation.
-    ``segment_ids`` (B,S) makes the mask block-diagonal (token packing)."""
-    B, S, H, hd = q.shape
+    ``segment_ids`` (B,S) makes the mask block-diagonal (token packing).
+    ``q_positions``/``kv_positions`` (B,Sq)/(B,Sk) drive the mask instead
+    of the iota and allow Sq != Sk (chunked prefill over a cache prefix;
+    invalid key slots carry a huge sentinel that causality masks)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
     K = k.shape[2]
     G = H // K
-    qf = q.astype(jnp.float32).reshape(B, S, K, G, hd)
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, hd)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     logits = jnp.einsum("bskgh,btkh->bkgst", qf, kf) / jnp.sqrt(hd)
     logits = _softcap(logits, softcap)
-    ii = jnp.arange(S)[:, None]
-    jj = jnp.arange(S)[None, :]
-    mask = jnp.ones((S, S), bool)
+    if q_positions is not None:
+        ii = q_positions[:, :, None]                   # (B,Sq,1)
+        jj = kv_positions[:, None, :]                  # (B,1,Sk)
+        mask = jnp.ones((B, Sq, Sk), bool)
+    else:
+        assert Sq == Sk
+        ii = jnp.arange(Sq)[:, None]
+        jj = jnp.arange(Sk)[None, :]
+        mask = jnp.ones((Sq, Sk), bool)
     if causal:
         mask &= jj <= ii
     if window is not None:
         mask &= jj > ii - window
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask[None], (B, Sq, Sk))
     if segment_ids is not None:
-        seg = segment_ids[:, :, None] == segment_ids[:, None, :]  # (B,S,S)
-        mask = mask[None] & seg
-        mask = mask[:, None, None, :, :]
-    logits = jnp.where(mask, logits, NEG_INF)
+        mask &= segment_ids[:, :, None] == segment_ids[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", w, vf)
-    return out.reshape(B, S, H, hd).astype(q.dtype)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,

@@ -164,17 +164,58 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+POS_INVALID = 2 ** 30           # mirrors kernels.flash_prefill.POS_INVALID
+
+
 def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                  *, segment_ids: Optional[jax.Array] = None,
-                 kv_heads: Optional[int] = None, impl: str = "xla"
+                 kv_heads: Optional[int] = None, impl: str = "xla",
+                 prefix_k: Optional[jax.Array] = None,
+                 prefix_v: Optional[jax.Array] = None,
+                 prefix_len: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """``segment_ids`` (B, S) enables token-packed prefill: several prompts
     concatenated along the sequence axis attend block-diagonally (equal
-    segment only), with ``positions`` restarting per segment."""
+    segment only), with ``positions`` restarting per segment.
+
+    ``prefix_k``/``prefix_v`` (B, C, K, hd) + ``prefix_len`` (scalar)
+    enable chunked prefill: the chunk queries attend over the first
+    ``prefix_len`` slots of an already-seeded cache row (identity
+    placement — token p at slot p, already RoPE'd) and then causally over
+    the chunk itself, whose ``positions`` are absolute (offset by the
+    prefix). Returns only the *chunk's* K/V for seeding.
+    """
     B, S, _ = x.shape
     nkv = kv_heads or cfg.num_kv_heads
     q, k, v = _project_qkv(p, cfg, x, positions, nkv)
-    if impl == "pallas":
+    if prefix_k is not None:
+        # chunk continuation: key axis = seeded cache-prefix view (slots
+        # [0, prefix_len) hold already-RoPE'd K at identity positions)
+        # concatenated with the chunk; invalid prefix slots carry the
+        # POS_INVALID sentinel, which causality masks
+        C = prefix_k.shape[1]
+        slot = jnp.arange(C)
+        kpos_prefix = jnp.where(slot < prefix_len, slot, POS_INVALID)
+        kpos = jnp.concatenate(
+            [jnp.broadcast_to(kpos_prefix[None], (B, C)), positions], axis=1)
+        k_all = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+        if impl == "pallas":
+            from repro.kernels import ops
+            out = ops.flash_attention(q, k_all, v_all, None, positions,
+                                      kpos, causal=True,
+                                      window=cfg.sliding_window,
+                                      softcap=cfg.attn_logit_softcap)
+        elif C + S > FLASH_THRESHOLD:
+            out = _flash_jnp(q, k_all, v_all, positions, kpos, cfg)
+        else:
+            ii = positions[:, :, None]  # query positions (B,S,1)
+            jj = kpos[:, None, :]       # key positions (B,1,C+S)
+            mask = jj <= ii
+            if cfg.sliding_window is not None:
+                mask &= jj > ii - cfg.sliding_window
+            out = _sdpa(q, k_all, v_all, mask, cfg)
+    elif impl == "pallas":
         from repro.kernels import ops
         out = ops.flash_attention(q, k, v, causal=True,
                                   window=cfg.sliding_window,

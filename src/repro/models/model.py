@@ -141,13 +141,19 @@ def _constrain_acts(x: jax.Array) -> jax.Array:
 # block application
 # --------------------------------------------------------------------------- #
 def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                         impl: str, segment_ids=None):
-    """Returns (x_out, cache_slice, aux)."""
+                         impl: str, segment_ids=None, prefix=None,
+                         prefix_len=None):
+    """Returns (x_out, cache_slice, aux). ``prefix`` is this layer's seeded
+    cache row {'k','v'} (chunked prefill): the chunk attends over it."""
     aux = jnp.zeros((), jnp.float32)
     if kind == ATTN:
         h = rms_norm(x, p["norm1"], cfg.rms_eps)
-        y, (k, v) = attention.attn_prefill(_sub(p, "attn/"), cfg, h, positions,
-                                           segment_ids=segment_ids, impl=impl)
+        y, (k, v) = attention.attn_prefill(
+            _sub(p, "attn/"), cfg, h, positions,
+            segment_ids=segment_ids, impl=impl,
+            prefix_k=None if prefix is None else prefix["k"],
+            prefix_v=None if prefix is None else prefix["v"],
+            prefix_len=prefix_len)
         x = x + y
         h = rms_norm(x, p["norm2"], cfg.rms_eps)
         if cfg.is_moe:
@@ -196,14 +202,18 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, pos,
     return x + y, cache
 
 
-def _shared_attn_prefill(cfg, params, x, positions, impl, segment_ids=None):
+def _shared_attn_prefill(cfg, params, x, positions, impl, segment_ids=None,
+                         prefix=None, prefix_len=None):
     scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
         num_kv_heads=cfg.shared_attn_kv_heads)
     p = _sub(params, "shared/")
     h = rms_norm(x, p["norm1"], cfg.rms_eps)
     y, (k, v) = attention.attn_prefill(
         _sub(p, "attn/"), scfg, h, positions,
-        segment_ids=segment_ids, kv_heads=scfg.num_kv_heads, impl=impl)
+        segment_ids=segment_ids, kv_heads=scfg.num_kv_heads, impl=impl,
+        prefix_k=None if prefix is None else prefix["k"],
+        prefix_v=None if prefix is None else prefix["v"],
+        prefix_len=prefix_len)
     x = x + y
     h = rms_norm(x, p["norm2"], cfg.rms_eps)
     return x + mlp.mlp_apply(_sub(p, "mlp/"), h), (k, v)
@@ -248,8 +258,14 @@ def logits_fn(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
 def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                positions: jax.Array, impl: str,
                decode: bool = False, pos=None, caches: Optional[Cache] = None,
-               segment_ids: Optional[jax.Array] = None):
-    """Shared driver for prefill (decode=False) and decode (decode=True)."""
+               segment_ids: Optional[jax.Array] = None,
+               prefix_caches: Optional[Cache] = None, prefix_len=None):
+    """Shared driver for prefill (decode=False) and decode (decode=True).
+
+    ``prefix_caches``/``prefix_len`` (prefill only): per-layer seeded cache
+    rows a chunk's queries attend over (chunked prefill) — threaded through
+    the layer scan exactly like decode threads its caches.
+    """
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, List] = {k: [] for k in cfg.block_kinds()}
     shared_caches: List = []
@@ -299,6 +315,35 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                     x, seg_cache_out = jax.lax.scan(body, x,
                                                     (seg_params, seg_cache))
                 new_caches[kind].append(seg_cache_out)
+            elif prefix_caches is not None:
+                # chunked prefill: thread this segment's seeded cache rows
+                # through the scan so each layer attends over its own prefix
+                cache_off = _cache_offset(new_caches[kind])
+                seg_prefix = jax.tree.map(
+                    lambda a: jax.lax.slice_in_dim(a, cache_off,
+                                                   cache_off + run, axis=0),
+                    prefix_caches[kind])
+
+                def body_pc(carry, xs):
+                    xc, aux = carry
+                    lp, lc = xs
+                    y, c2, a = _apply_block_prefill(cfg, kind, lp, xc,
+                                                    positions, impl,
+                                                    segment_ids, prefix=lc,
+                                                    prefix_len=prefix_len)
+                    return (y, aux + a), c2
+
+                body = jax.checkpoint(body_pc) if cfg.remat else body_pc
+                if run == 1:
+                    (x, aux_total), c1 = body(
+                        (x, aux_total),
+                        (jax.tree.map(lambda a: a[0], seg_params),
+                         jax.tree.map(lambda a: a[0], seg_prefix)))
+                    seg_cache_out = jax.tree.map(lambda a: a[None], c1)
+                else:
+                    (x, aux_total), seg_cache_out = jax.lax.scan(
+                        body, (x, aux_total), (seg_params, seg_prefix))
+                new_caches[kind].append(seg_cache_out)
             else:
                 def body_p(carry, lp):
                     xc, aux = carry
@@ -327,9 +372,16 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                                                       ck, cv, impl)
                     shared_caches.append((ck, cv))
                 else:
+                    sprefix = None
+                    if prefix_caches is not None:
+                        sprefix = {
+                            "k": prefix_caches["shared"]["k"][shared_i],
+                            "v": prefix_caches["shared"]["v"][shared_i]}
                     x, (k, v) = _shared_attn_prefill(cfg, params, x,
                                                      positions, impl,
-                                                     segment_ids)
+                                                     segment_ids,
+                                                     prefix=sprefix,
+                                                     prefix_len=prefix_len)
                     shared_caches.append((k, v))
                 shared_i += 1
 
@@ -371,8 +423,9 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             embeds: Optional[jax.Array] = None, impl: str = "xla",
             last_only: bool = False,
             positions: Optional[jax.Array] = None,
-            segment_ids: Optional[jax.Array] = None
-            ) -> Tuple[jax.Array, Cache]:
+            segment_ids: Optional[jax.Array] = None,
+            prefix_caches: Optional[Cache] = None,
+            prefix_len=None) -> Tuple[jax.Array, Cache]:
     """Returns (logits, caches seeded with the prompt). ``last_only``
     projects only the final position — serving prefill never needs the
     (B, S, vocab) tensor.
@@ -382,17 +435,33 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     sequence axis then attend block-diagonally with no batch padding. Only
     valid for pure-attention stacks (recurrent blocks would fold foreign
     segments into their state).
+
+    Chunked prefill: pass ``prefix_caches`` (the request's seeded decode-
+    cache rows, layer-stacked like ``init_cache`` output) plus
+    ``prefix_len`` (scalar: valid prefix slots) and absolute ``positions``
+    starting at the chunk offset — each attention layer attends over its
+    seeded prefix and the chunk itself, and the returned caches hold the
+    *chunk's* K/V only. Attention-pure stacks only (recurrent state has no
+    resumable prefix view; callers re-run the whole prefix instead).
     """
     if segment_ids is not None:
         assert set(cfg.pattern()) <= {ATTN}, \
             "token-packed prefill requires a pure-attention stack"
         assert embeds is None, "packed prefill does not take extra embeds"
+    if prefix_caches is not None:
+        assert set(cfg.pattern()) <= {ATTN}, \
+            "chunked (prefix) prefill requires a pure-attention stack"
+        assert segment_ids is None, \
+            "chunked prefill runs one request per call, not a packed wave"
+        assert positions is not None and prefix_len is not None
     x = embed_inputs(cfg, params, tokens, embeds)
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     x, caches, _ = _run_stack(cfg, params, x, positions, impl,
-                              segment_ids=segment_ids)
+                              segment_ids=segment_ids,
+                              prefix_caches=prefix_caches,
+                              prefix_len=prefix_len)
     if last_only:
         return logits_fn(cfg, params, x[:, -1]), caches
     return logits_fn(cfg, params, x), caches

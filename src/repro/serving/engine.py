@@ -32,16 +32,34 @@ Hot-path layout (why the shapes look the way they do):
     prefill, where foreign segments would corrupt the recurrent state; the
     legacy (max_batch, pow2-seq) padded-batch path is kept behind
     ``packed_prefill=False`` for the equivalence tests.
+  * Decode *megasteps* (default, ``EngineConfig.decode_megastep`` > 1):
+    when the scheduler proves a horizon of K iterations with fixed batch
+    membership (``BaseScheduler.decode_horizon`` — empty queues, no
+    under-provision/pipelining event before the horizon), the engine runs
+    K fused iterations as ONE dispatched ``lax.while_loop`` program and
+    the host replays the K scheduler iterations against the precomputed
+    (K, B) token matrix — decisions stay bitwise-identical to the
+    per-iteration path while steady-state dispatch cost is amortized K×
+    (``n_decode_dispatches`` / ``decode_iters`` instruments it). EOS may
+    fire inside a window: completions with empty queues only shrink the
+    batch, and per-row sampling independence keeps surviving rows'
+    tokens unchanged, so the replay handles it exactly.
+  * Prefill is *chunk-capable*: the engine executes the scheduler's
+    per-chunk PT grants (``_fill_pts``) instead of requiring TFS >= max
+    prompt length. A chunk attends over the request's already-seeded
+    cache prefix via a KV-prefix view threaded through ``model.prefill``
+    → ``attn_prefill`` → the flash kernel and both jnp fallbacks, and its
+    K/V seed the cache incrementally at [start, start+len). Recurrent
+    stacks (SSM/xLSTM), which have no resumable prefix view, fall back to
+    recomputing the whole prefix each chunk (correct, O(n^2) across
+    chunks); ``incremental_chunk_prefill=False`` forces that reference
+    path everywhere for the equivalence tests.
   * Cache seeding is one jitted, buffer-donated scatter over the whole
     item batch (a per-segment gather for the packed path) — not a
     per-layer host-side pytree rebuild.
   * Sampling is vectorized with per-slot temperature / top-k vectors and,
     on the async path, runs inside the decode program itself (no separate
     dispatch, no host round-trip).
-
-Scope note: the engine runs whole prompts as single PT items (it sizes TFS
-to the longest prompt) — chunked-prefill policy is exercised by the
-discrete-event simulator, not the CPU engine.
 """
 from __future__ import annotations
 
@@ -83,13 +101,22 @@ class EngineConfig:
 
     ``readback_lag`` is how many decode iterations sampled tokens may trail
     on device before the host materializes them; ``max_pending`` is the
-    hard cap on undrained iterations (beyond it the host accepts one
-    blocking sync rather than queueing unboundedly).
+    hard cap on undrained *dispatches* (a K-iteration megastep window
+    counts once; beyond it the host accepts one blocking sync rather than
+    queueing unboundedly).
+
+    ``decode_megastep`` is the max fused decode iterations per dispatch
+    (1 = the per-iteration async path; requires ``async_decode``).
+    ``incremental_chunk_prefill=False`` makes every prompt chunk recompute
+    its full prefix instead of attending over the seeded cache view — the
+    reference path the incremental one is equivalence-tested against.
     """
     async_decode: bool = True
     packed_prefill: bool = True
     readback_lag: int = 2
     max_pending: int = 8
+    decode_megastep: int = 8
+    incremental_chunk_prefill: bool = True
 
 
 @dataclass
@@ -151,6 +178,26 @@ class ServingEngine:
         self._async = self.ecfg.async_decode
         self._packed = self.ecfg.packed_prefill and self._pad_prefill
         self._prefill_shapes: Set[Tuple[int, int]] = set()
+        # chunked prefill: incremental (prefix-view) execution needs an
+        # attention-pure stack and non-ring caches (a ring prefix has no
+        # identity-placement view); otherwise chunks recompute their prefix
+        win = cfg.sliding_window
+        self._chunk_incremental = (self.ecfg.incremental_chunk_prefill
+                                   and self._pad_prefill
+                                   and (win is None or capacity < win))
+        self._chunk_progress: Dict[int, int] = {}   # rid -> ctx tokens seeded
+        self.n_prefill_chunks = 0
+        # decode megastep: K fused iterations per dispatch (async only)
+        self._mega_max = max(1, int(self.ecfg.decode_megastep)) \
+            if self.ecfg.async_decode else 1
+        self._mega_toks: Optional[jax.Array] = None   # (Kmax, B) window
+        self._mega_eos: Optional[np.ndarray] = None   # host (Kmax, B) flags
+        self._mega_row = 0
+        self._mega_left = 0
+        # arrivals submitted while a window is open wait here (delivered
+        # with their true arrival time once the window drains)
+        self._arrivals: List[Tuple[Request, float]] = []
+        self.n_decode_dispatches = 0
 
         # async bookkeeping: device slot state carried across the fused
         # steps, plus the lag-N readback ring of (tokens, [(row, rid)]).
@@ -168,15 +215,27 @@ class ServingEngine:
         }
         self._active_bytes: Optional[bytes] = None
         self._active_dev: Optional[jax.Array] = None
-        self._pending_drain: Deque[Tuple[jax.Array,
+        # ring entries: (tokens, row, [(slot_row, rid)]). ``tokens`` is a
+        # (B,) sampled batch (row None) or a (Kmax, B) megastep window
+        # matrix shared by K entries, with ``row`` selecting the iteration.
+        self._pending_drain: Deque[Tuple[jax.Array, Optional[int],
                                          List[Tuple[int, int]]]] = deque()
         # host-sync instrumentation (what the hot-path microbench reports):
-        # eos_flags      — per-iteration (B,) EOS-flag readbacks (only when
-        #                  an active request has an eos_token)
-        # drain_blocking — token drains that had to wait on the device
-        # drain_ready    — token drains that were already materialized
-        # flush          — forced full drains (completion/preemption/idle)
+        # eos_flags          — EOS-flag readbacks: one (B,) vector per
+        #                      iteration, or one (K, B) matrix per megastep
+        #                      window (only when an active request has an
+        #                      eos_token)
+        # drain_blocking     — token drains that had to wait on the device
+        #                      with nothing newer queued behind them (the
+        #                      host serialized the pipeline)
+        # drain_backpressure — token drains that waited while newer
+        #                      dispatches were still queued on the device
+        #                      (the host ran ahead; the device stays fed)
+        # drain_ready        — token drains already materialized
+        # flush              — forced full drains (completion/preemption/
+        #                      idle)
         self.sync_counts = {"eos_flags": 0, "drain_blocking": 0,
+                            "drain_backpressure": 0,
                             "drain_ready": 0, "flush": 0}
         self.decode_iters = 0
 
@@ -196,11 +255,12 @@ class ServingEngine:
 
         self._decode = jax.jit(_decode_fn)
 
-        def _fused_fn(p, caches, st, active, need_sample, need_topk):
-            """Fused async decode: forward pass, masked cache update,
-            in-graph RNG split + sampling, EOS check and pos advance in one
-            program. ``caches`` and ``st`` are donated so XLA updates the
-            KV buffers and carried slot state in place."""
+        def _one_iter(p, caches, st, active, need_sample, need_topk):
+            """One fused async decode iteration: forward pass, masked cache
+            update, in-graph RNG split + sampling, EOS check and pos
+            advance in one traced body. Shared verbatim by the single-step
+            program and the megastep while_loop so both produce bitwise-
+            identical results."""
             toks = st["last_tok"][:, None]
             logits, new_caches = model.decode_step(cfg, p, toks, st["pos"],
                                                    caches, impl=impl)
@@ -222,8 +282,35 @@ class ServingEngine:
                       key=key)
             return new_caches, st, new, eos_hit
 
-        self._fused = jax.jit(_fused_fn, static_argnums=(4, 5),
+        self._fused = jax.jit(_one_iter, static_argnums=(4, 5),
                               donate_argnums=(1, 2))
+
+        Kmax = self._mega_max
+
+        def _mega_fn(p, caches, st, active, k_iters, need_sample, need_topk):
+            """Decode megastep: run up to ``k_iters`` (dynamic, <= Kmax)
+            fused iterations in ONE dispatched while_loop, collecting each
+            iteration's sampled tokens and EOS flags into (Kmax, B)
+            buffers the host replays the scheduler against. ``caches`` and
+            ``st`` are donated exactly as in the single-step program."""
+            def cond(c):
+                return c[0] < k_iters
+
+            def body(c):
+                i, caches, st, tb, eb = c
+                caches, st, new, eos_hit = _one_iter(
+                    p, caches, st, active, need_sample, need_topk)
+                return (i + 1, caches, st,
+                        tb.at[i].set(new), eb.at[i].set(eos_hit))
+
+            init = (jnp.int32(0), caches, st,
+                    jnp.zeros((Kmax, max_batch), jnp.int32),
+                    jnp.zeros((Kmax, max_batch), bool))
+            _, caches, st, tb, eb = jax.lax.while_loop(cond, body, init)
+            return caches, st, tb, eb
+
+        self._mega = jax.jit(_mega_fn, static_argnums=(5, 6),
+                             donate_argnums=(1, 2))
 
         def _seed_slots_fn(st, slots, first, fallback, use_first, poss,
                            temps, top_ks, eos):
@@ -259,6 +346,33 @@ class ServingEngine:
             return logits[0, last_idx], caches
 
         self._prefill_packed = jax.jit(_prefill_packed_fn)
+
+        def _chunk_fn(p, caches, toks, pos, slot, start, length):
+            """Incremental chunk prefill + in-place seed: the chunk's
+            queries attend over the slot's already-seeded cache prefix
+            (slots [0, start)), and the chunk's K/V land at absolute slots
+            [start, start+length) of the same donated cache row. Returns
+            (caches, last-real-token logits)."""
+            prefix = {kind: {n: jax.lax.dynamic_index_in_dim(
+                sub[n], slot, axis=1, keepdims=True) for n in ("k", "v")}
+                for kind, sub in caches.items()}
+            logits, pf = model.prefill(cfg, p, toks, impl=impl,
+                                       positions=pos, prefix_caches=prefix,
+                                       prefix_len=start)
+            last = logits[0, length - 1]
+            Sb = toks.shape[1]
+            out = {}
+            for kind, sub in caches.items():
+                C = sub["k"].shape[2]
+                # pad positions (>= length) index C: out of bounds, dropped
+                di = jnp.where(jnp.arange(Sb) < length,
+                               jnp.minimum(start + jnp.arange(Sb), C), C)
+                out[kind] = {n: sub[n].at[:, slot, di].set(
+                    pf[kind][n][:, 0].astype(sub[n].dtype), mode="drop")
+                    for n in ("k", "v")}
+            return out, last
+
+        self._chunk_prefill = jax.jit(_chunk_fn, donate_argnums=(1,))
         self._seed = jax.jit(self._seed_fn, donate_argnums=(0,))
         self._seed_packed = jax.jit(self._seed_packed_fn,
                                     donate_argnums=(0,))
@@ -270,14 +384,24 @@ class ServingEngine:
 
     @property
     def n_blocking_syncs(self) -> int:
-        """Host syncs that could block on in-flight device work (EOS-flag
-        readbacks + non-ready token drains). Zero across a steady-state
-        async decode window with no EOS-capable requests."""
+        """Host syncs that can leave the device idle (EOS-flag readbacks +
+        pipeline-serializing token drains). Zero across a steady-state
+        async decode window with no EOS-capable requests. Backpressure
+        drains — waits taken while newer dispatches were already queued on
+        the device — are counted separately (``drain_backpressure``): the
+        device stays fed through them."""
         return (self.sync_counts["eos_flags"]
                 + self.sync_counts["drain_blocking"])
 
     # ------------------------------------------------------------------ #
     def submit(self, req: GenRequest, now: float) -> int:
+        """Register a request. While a fused megastep window is open the
+        scheduler must not see the arrival (its admission would change
+        batch membership the device already computed past): the arrival is
+        buffered — with its true arrival time, so ordering/SLO math is
+        unaffected — and delivered when the window drains, at most
+        ``decode_megastep - 1`` iterations later. This is the standard
+        multi-step-scheduling trade (scheduling decisions every K steps)."""
         req.rid = self._rid
         self._rid += 1
         req.t_submit = now
@@ -288,8 +412,15 @@ class ServingEngine:
                                     self.scheduler.cfg.pad_ratio,
                                     self.scheduler.cfg.bucket)
         self.requests[req.rid] = req
-        self.scheduler.on_arrival(r, now)
+        if self._mega_left > 0:
+            self._arrivals.append((r, now))
+        else:
+            self.scheduler.on_arrival(r, now)
         return req.rid
+
+    def has_work(self) -> bool:
+        """Scheduler work plus arrivals buffered behind an open window."""
+        return self.scheduler.has_work() or bool(self._arrivals)
 
     # ------------------------------------------------------------------ #
     def _is_ring(self, kind: str, sub) -> bool:
@@ -375,26 +506,38 @@ class ServingEngine:
         return out
 
     # ------------------------------------------------------------------ #
-    def _run_prefill(self, items, now: float) -> None:
-        """Execute PT items (whole prompts) and seed their cache slots.
+    def _run_prefill(self, items, now: float, missing=()) -> None:
+        """Execute an iteration's PT items and seed their cache slots.
 
-        All items of an iteration run as ONE call: token-packed (flattened
-        with a block-diagonal segment mask — no batch or length padding)
-        when enabled, else padded (max_batch, seq_bucket) when the model
-        tolerates padding; otherwise one exact-shape call per item.
+        Whole prompts (plus ``missing`` recompute re-prefills) run as ONE
+        call: token-packed (flattened with a block-diagonal segment mask —
+        no batch or length padding) when enabled, else padded
+        (max_batch, seq_bucket) when the model tolerates padding;
+        otherwise one exact-shape call per item. Partial (chunked) grants
+        route through ``_run_chunk_items`` — one prefix-attending call per
+        chunk.
         """
-        if not items:
-            return
-        groups = [list(items)] if self._pad_prefill \
-            else [[it] for it in items]
-        for group in groups:
-            self._prefill_group(group, now)
+        whole = [(r, r.prompt_len) for r in missing]
+        chunked = []
+        for r, chunk in items:
+            if (r.rid not in self._chunk_progress and r.prompt_done == 0
+                    and chunk >= r.prompt_len):
+                whole.append((r, chunk))
+            else:
+                chunked.append((r, chunk))
+        if whole:
+            groups = [whole] if self._pad_prefill \
+                else [[it] for it in whole]
+            for group in groups:
+                self._prefill_group(group, now)
+        if chunked:
+            self._run_chunk_items(chunked, now)
 
     def _prefill_group(self, group, now: float) -> None:
         ctxs, slots = [], []
         for r, chunk in group:
             assert chunk == r.prompt_len, \
-                "engine runs whole prompts; size TFS >= max prompt length"
+                "partial chunks are routed through _run_chunk_items"
             g = self.requests[r.rid]
             # after an offload-free preemption the context to recompute is
             # prompt + everything generated so far
@@ -498,7 +641,7 @@ class ServingEngine:
                 jnp.asarray(lens), jnp.asarray(temps),
                 jnp.asarray(top_ks), jnp.asarray(eos))
             if mapping:
-                self._pending_drain.append((first, mapping))
+                self._pending_drain.append((first, None, mapping))
         else:
             first_np = np.asarray(first)
             for i, (r, _) in enumerate(group):
@@ -512,6 +655,135 @@ class ServingEngine:
                     self.last_tok[slot] = tok
                 else:
                     self.last_tok[slot] = g.output[r.generated - 1]
+
+    # ------------------------------------------------------------------ #
+    def _run_chunk_items(self, items, now: float) -> None:
+        """Execute partial-prompt (chunked) PT grants: each chunk runs as
+        its own call — attending over the request's already-seeded cache
+        prefix (attention-pure stacks) or recomputing the whole prefix
+        (recurrent stacks / the reference path). Only the chunk that
+        completes the prompt samples the first response token; earlier
+        chunks just extend the cache."""
+        finals = []
+        for r, chunk in items:
+            g = self.requests[r.rid]
+            # after an offload-free preemption the context to recompute is
+            # prompt + everything generated; the scheduler's grants cover
+            # prompt_len tokens, so the generated tail rides the chunk
+            # that completes the prompt
+            ctx = list(g.prompt) + g.output[:r.generated]
+            start = self._chunk_progress.get(r.rid, 0)
+            completing = r.prompt_done + chunk >= r.prompt_len
+            end = len(ctx) if completing else start + chunk
+            assert end <= self.capacity, "chunk exceeds cache capacity"
+            if r.rid not in self.slot_of:
+                slot = self.free_slots.pop()
+                self.slot_of[r.rid] = slot
+                self.temps[slot] = g.params.temperature
+                self.top_ks[slot] = g.params.top_k
+            slot = self.slot_of[r.rid]
+            self.n_prefill_chunks += 1
+            if self._chunk_incremental:
+                last = self._exec_chunk_incremental(ctx, start, end, slot)
+            else:
+                last = self._exec_chunk_recompute(ctx, end, slot)
+            self._chunk_progress[r.rid] = end
+            if completing:
+                del self._chunk_progress[r.rid]
+                finals.append((r, slot, last, end))
+        if not finals:
+            return
+        # the completing chunks' first-token sampling mirrors
+        # _prefill_group: one key split per call, same carried stream
+        if self._async:
+            key, sk = jax.random.split(self._dev["key"])
+            self._dev = dict(self._dev, key=key)
+        else:
+            self.key, sk = jax.random.split(self.key)
+        n = len(finals)
+        temps = np.zeros(n, np.float32)
+        top_ks = np.zeros(n, np.int32)
+        eos = np.full(n, -1, np.int32)
+        lens = np.zeros(n, np.int32)
+        slot_arr = np.zeros(n, np.int32)
+        for i, (r, slot, _, end) in enumerate(finals):
+            g = self.requests[r.rid]
+            temps[i] = g.params.temperature
+            top_ks[i] = g.params.top_k
+            eos[i] = -1 if g.params.eos_token is None else g.params.eos_token
+            lens[i] = end
+            slot_arr[i] = slot
+        first = sample_per_request(jnp.stack([f[2] for f in finals]), sk,
+                                   temps, top_ks)
+        if self._async:
+            fallback = np.zeros(n, np.int32)
+            use_first = np.zeros(n, bool)
+            mapping: List[Tuple[int, int]] = []
+            for i, (r, slot, _, end) in enumerate(finals):
+                self.pos[slot] = end
+                if r.generated == 0:
+                    use_first[i] = True
+                    mapping.append((i, r.rid))
+                else:
+                    fallback[i] = self.requests[r.rid].output[r.generated - 1]
+            self._dev = self._seed_slots(
+                self._dev, jnp.asarray(slot_arr), first,
+                jnp.asarray(fallback), jnp.asarray(use_first),
+                jnp.asarray(lens), jnp.asarray(temps),
+                jnp.asarray(top_ks), jnp.asarray(eos))
+            if mapping:
+                self._pending_drain.append((first, None, mapping))
+        else:
+            first_np = np.asarray(first)
+            for i, (r, slot, _, end) in enumerate(finals):
+                g = self.requests[r.rid]
+                self.pos[slot] = end
+                if r.generated == 0:
+                    tok = int(first_np[i])
+                    g.output.append(tok)
+                    self.last_tok[slot] = tok
+                else:
+                    self.last_tok[slot] = g.output[r.generated - 1]
+
+    def _exec_chunk_incremental(self, ctx, start: int, end: int,
+                                slot: int):
+        """Run ctx[start:end) as a prefix-attending chunk and seed its K/V
+        into the slot's cache row in one donated program."""
+        L = end - start
+        Sb = seq_bucket(L)
+        # tail-chunk cap: the pow2 round-up must never imply cache slots
+        # (and thus KVC pages) past what the scheduler granted — clamp the
+        # padded shape to the capacity remaining after ``start``
+        if start + Sb > self.capacity:
+            Sb = max(L, self.capacity - start)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :L] = ctx[start:end]
+        pos = (start + np.arange(Sb, dtype=np.int32))[None]
+        self._prefill_shapes.add((1, Sb))
+        self.caches, last = self._chunk_prefill(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos),
+            np.int32(slot), np.int32(start), np.int32(L))
+        return last
+
+    def _exec_chunk_recompute(self, ctx, end: int, slot: int):
+        """Chunk fallback with no resumable prefix view (recurrent stacks,
+        or ``incremental_chunk_prefill=False``): re-run positions [0, end)
+        and reseed the whole cache row."""
+        Sb = end
+        if self._pad_prefill:
+            Sb = seq_bucket(end)
+            if Sb > self.capacity:
+                Sb = max(end, self.capacity)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :end] = ctx[:end]
+        lens = np.array([end], np.int32)
+        self._prefill_shapes.add((1, Sb))
+        last_logits, pf_caches = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        self.caches = self._seed(self.caches, pf_caches,
+                                 jnp.asarray(np.array([slot], np.int32)),
+                                 jnp.asarray(lens))
+        return last_logits[0]
 
     # ------------------------------------------------------------------ #
     def _run_decode(self, reqs: Sequence[Request], now: float) -> None:
@@ -538,6 +810,7 @@ class ServingEngine:
         new_toks = np.asarray(sample_per_request(
             logits, sk, jnp.asarray(temps), jnp.asarray(top_ks)))
         self.decode_iters += 1
+        self.n_decode_dispatches += 1
         for r in reqs:
             slot = self.slot_of[r.rid]
             g = self.requests[r.rid]
@@ -548,19 +821,28 @@ class ServingEngine:
             if g.params.eos_token is not None and tok == g.params.eos_token:
                 self.scheduler.notify_eos(r, r.generated + 1)
 
-    def _run_decode_async(self, reqs: Sequence[Request], now: float) -> None:
+    def _run_decode_async(self, plan, now: float) -> None:
         """Fused device-resident decode. The host builds the (B,) active
         mask, splits the RNG key (an async device op, identical key stream
         to the sync path) and dispatches the donated fused step; sampled
         tokens land in the lag-N drain ring. EOS flags are only read back
         when an active request actually has an ``eos_token`` — the clamp
         must reach the scheduler at the iteration EOS fires to keep its
-        decisions bitwise-equal to the sync path."""
+        decisions bitwise-equal to the sync path.
+
+        When the scheduler proves a K-iteration horizon with fixed batch
+        membership (``decode_horizon``), all K iterations run as ONE
+        megastep dispatch and the following K-1 calls are pure host replay
+        against the precomputed (K, B) token window."""
+        reqs = plan.decode_reqs
         if not reqs:
             return
         # drain first: entries had a whole scheduler cycle to finish on
         # device, so lag-expired drains are copies, not waits
         self._drain_tokens()
+        if self._mega_left > 0:
+            self._consume_mega_row(reqs)
+            return
         active = np.zeros(self.max_batch, bool)
         eos_possible = False
         for r in reqs:
@@ -577,15 +859,52 @@ class ServingEngine:
         if ab != self._active_bytes:
             self._active_bytes = ab
             self._active_dev = jnp.asarray(active)
+        K = self.scheduler.decode_horizon(plan, self._mega_max)
+        if K > 1:
+            self.caches, self._dev, self._mega_toks, eos_buf = self._mega(
+                self.params, self.caches, self._dev, self._active_dev,
+                np.int32(K), need_sample, need_topk)
+            self.n_decode_dispatches += 1
+            if eos_possible:
+                # ONE blocking readback per window (the per-iteration path
+                # pays one per iteration); the scheduler still sees each
+                # EOS at the replay iteration it fired
+                self.sync_counts["eos_flags"] += 1
+                self._mega_eos = np.asarray(eos_buf)
+            else:
+                self._mega_eos = None
+            self._mega_row = -1
+            self._mega_left = K
+            self._consume_mega_row(reqs)
+            return
         self.caches, self._dev, toks, eos_hit = self._fused(
             self.params, self.caches, self._dev, self._active_dev,
             need_sample, need_topk)
+        self.n_decode_dispatches += 1
         self.decode_iters += 1
         self._pending_drain.append(
-            (toks, [(self.slot_of[r.rid], r.rid) for r in reqs]))
+            (toks, None, [(self.slot_of[r.rid], r.rid) for r in reqs]))
         if eos_possible:
             self.sync_counts["eos_flags"] += 1
             flags = np.asarray(eos_hit)
+            for r in reqs:
+                if flags[self.slot_of[r.rid]]:
+                    self.scheduler.notify_eos(r, r.generated + 1)
+
+    def _consume_mega_row(self, reqs: Sequence[Request]) -> None:
+        """One host-replay iteration of a fused megastep window: push the
+        iteration's precomputed token row into the drain ring — mapped
+        through the *current* plan, so EOS-shrunken membership stays
+        exact — and deliver the row's EOS flags to the scheduler."""
+        self._mega_row += 1
+        self._mega_left -= 1
+        i = self._mega_row
+        self.decode_iters += 1
+        self._pending_drain.append(
+            (self._mega_toks, i,
+             [(self.slot_of[r.rid], r.rid) for r in reqs]))
+        if self._mega_eos is not None:
+            flags = self._mega_eos[i]
             for r in reqs:
                 if flags[self.slot_of[r.rid]]:
                     self.scheduler.notify_eos(r, r.generated + 1)
@@ -594,30 +913,65 @@ class ServingEngine:
         """Materialize pending sampled-token batches older than the lag.
 
         Steady state: an entry ``readback_lag`` iterations old has long
-        finished on device, so the ``np.asarray`` is a copy, not a wait —
-        the engine only accepts a potentially-blocking drain when the ring
-        exceeds ``max_pending`` or a flush is forced (completion,
-        preemption, idle, end of run)."""
+        finished on device, so the readback is a copy, not a wait — the
+        engine only accepts a potentially-waiting drain when the number of
+        undrained *dispatches* (distinct buffers — a K-row megastep window
+        counts once) exceeds ``max_pending``, or a flush is forced
+        (completion, preemption, idle, end of run). A wait taken while
+        newer dispatches were already queued behind the entry is
+        backpressure (the host ran ahead; the device stays fed), counted
+        apart from pipeline-serializing ``drain_blocking`` waits.
+
+        All expired entries materialize through ONE batched
+        ``jax.device_get`` (deduplicated by buffer), not one copy per
+        entry."""
         dq = self._pending_drain
         lag = 0 if force else self.ecfg.readback_lag
+        batch = []
         while len(dq) > lag:
-            toks, mapping = dq[0]
+            toks, row, mapping = dq[0]
             ready = toks.is_ready()
-            if not ready and not force and len(dq) <= self.ecfg.max_pending:
+            if not ready and not force and len(
+                    {id(t) for t, _, _ in dq}) <= self.ecfg.max_pending:
                 break
             dq.popleft()
-            key = "drain_ready" if ready else "drain_blocking"
-            self.sync_counts[key] += 1
-            arr = np.asarray(toks)
-            for row, rid in mapping:
-                self.requests[rid].output.append(int(arr[row]))
+            if ready:
+                self.sync_counts["drain_ready"] += 1
+            elif any(t is not toks for t, _, _ in dq):
+                self.sync_counts["drain_backpressure"] += 1
+            else:
+                self.sync_counts["drain_blocking"] += 1
+            batch.append((toks, row, mapping))
+        if not batch:
+            return
+        uniq: Dict[int, jax.Array] = {}
+        for toks, _, _ in batch:
+            uniq.setdefault(id(toks), toks)
+        mats = jax.device_get(list(uniq.values()))
+        mat_of = dict(zip(uniq.keys(), mats))
+        for toks, row, mapping in batch:
+            arr = mat_of[id(toks)]
+            if row is not None:
+                arr = arr[row]
+            for r_, rid in mapping:
+                self.requests[rid].output.append(int(arr[r_]))
 
     # ------------------------------------------------------------------ #
     def step(self, now: Optional[float] = None) -> int:
         """One engine iteration. Returns number of completions."""
         now = time.monotonic() if now is None else now
+        if self._mega_left == 0 and self._arrivals:
+            # a fused window just drained: deliver the arrivals it deferred
+            for r, t_arr in self._arrivals:
+                self.scheduler.on_arrival(r, t_arr)
+            self._arrivals.clear()
         plan = self.scheduler.form_batch(now)
         if plan.empty:
+            if self._mega_left:
+                # every window request completed early (EOS inside the
+                # window): the remaining precomputed rows belong to no one
+                self._mega_left = 0
+                self._mega_toks = self._mega_eos = None
             if self._pending_drain:
                 self.sync_counts["flush"] += 1
                 self._drain_tokens(force=True)
@@ -628,13 +982,15 @@ class ServingEngine:
         # re-prefill (prompt + generated so far), riding the iteration's
         # prefill wave so the rare preemption path costs no extra dispatch
         missing = [r for r in plan.decode_reqs if r.rid not in self.slot_of]
+        if self._mega_left > 0:
+            assert not plan.prompt_items and not missing, \
+                "megastep horizon violated: admission inside a fused window"
         if missing and self._pending_drain:     # ctx rebuild reads g.output
             self.sync_counts["flush"] += 1
             self._drain_tokens(force=True)
-        self._run_prefill([(r, r.prompt_len) for r in missing]
-                          + list(plan.prompt_items), now)
+        self._run_prefill(plan.prompt_items, now, missing=missing)
         if self._async:
-            self._run_decode_async(plan.decode_reqs, now)
+            self._run_decode_async(plan, now)
         else:
             self._run_decode(plan.decode_reqs, now)
         before = len(self.scheduler.completed)
@@ -653,6 +1009,7 @@ class ServingEngine:
         for rid in list(self.slot_of):
             if rid not in self.scheduler.kvc.allocs:
                 self.free_slots.append(self.slot_of.pop(rid))
+                self._chunk_progress.pop(rid, None)
                 freed = True
         if freed and self._pending_drain:
             # completed outputs must be materialized before t_done is
@@ -668,7 +1025,7 @@ class ServingEngine:
         for g in gen_requests:
             self.submit(g, t)
         steps = 0
-        while (self.scheduler.has_work() and steps < max_steps):
+        while (self.has_work() and steps < max_steps):
             t += 1.0
             self.step(t)
             steps += 1

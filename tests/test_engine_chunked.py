@@ -1,0 +1,201 @@
+"""Engine-executed chunked prefill: the engine must honor the scheduler's
+per-chunk PT grants (``_fill_pts`` with TFS < prompt length) instead of
+requiring whole prompts, with token streams bitwise-equal to whole-prompt
+prefill and all engine-path toggles (async/sync, incremental/recompute)
+drop-in equivalent."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import SchedulerConfig
+from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                           ServingEngine)
+from repro.serving.engine import MIN_SEQ_BUCKET
+
+LEGACY = EngineConfig(async_decode=False, packed_prefill=False)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3_8b").reduced(d_model=128).with_(
+        dtype="float32", param_dtype="float32")
+
+
+def _scfg(tfs, mb=4, cap=192, **kw):
+    base = dict(kvc_tokens=mb * cap, block_size=16, tfs=tfs,
+                max_model_len=cap, max_batch_reqs=mb)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _workload(cfg, seed=7, long_len=80, temps=False, eos_token=None,
+              max_long=6):
+    """One long prompt (chunk-forcing under small TFS) + short fillers."""
+    rng = np.random.default_rng(seed)
+    reqs = [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size, long_len)),
+        params=SamplingParams(max_new_tokens=max_long, eos_token=eos_token))]
+    for i in range(3):
+        t = 1.3 if (temps and i == 1) else 0.0
+        reqs.append(GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size, 8 + i)),
+            params=SamplingParams(max_new_tokens=8, temperature=t,
+                                  top_k=4 if t else 0,
+                                  eos_token=eos_token)))
+    return reqs
+
+
+def _run(cfg, tfs, ecfg=None, scfg=None, seed=0, rl_accuracy=1.0,
+         mb=4, cap=192, wl=None):
+    eng = ServingEngine(cfg, max_batch=mb, capacity=cap,
+                        rl_accuracy=rl_accuracy, seed=seed,
+                        scheduler_cfg=scfg or _scfg(tfs, mb=mb, cap=cap),
+                        engine_cfg=ecfg)
+    reqs = wl() if wl else _workload(cfg)
+    eng.run(reqs)
+    return eng, reqs
+
+
+def _fingerprint(eng, reqs):
+    per_req = [(g.rid, tuple(g.output), g.t_done) for g in reqs]
+    s = eng.scheduler
+    sched = (tuple(s.iter_completion_counts),
+             tuple((r.rid, r.t_complete, r.generated, r.n_preemptions)
+                   for r in s.completed),
+             s.n_preempt_free, s.n_preempt_swap, s.n_underprov,
+             s.n_hosted, s.n_reserve_rescues)
+    return per_req, sched
+
+
+def test_chunked_matches_whole_prompt_tokens(cfg):
+    """A prompt longer than the per-iteration budget completes via >= 2
+    engine-executed chunks with greedy token streams bitwise-equal to the
+    whole-prompt run (the chunked run makes *different* scheduler
+    decisions — more PT iterations — so only tokens are comparable)."""
+    chunked, reqs_c = _run(cfg, tfs=32)
+    whole, reqs_w = _run(cfg, tfs=192)
+    assert chunked.n_prefill_chunks >= 2
+    assert whole.n_prefill_chunks == 0
+    for a, b in zip(reqs_c, reqs_w):
+        assert a.output == b.output
+        assert a.t_done is not None
+
+
+def test_chunked_async_matches_sync(cfg):
+    """Full fingerprints (tokens + completion times + scheduler decisions)
+    must be identical across async/sync engines under chunking, with
+    mixed-temperature sampling in flight."""
+    wl = lambda: _workload(cfg, temps=True)
+    ref_eng, ref_reqs = _run(cfg, tfs=32, ecfg=LEGACY, wl=wl)
+    eng, reqs = _run(cfg, tfs=32, wl=wl)
+    assert ref_eng.n_prefill_chunks >= 2
+    assert _fingerprint(eng, reqs) == _fingerprint(ref_eng, ref_reqs)
+
+
+def test_incremental_matches_recompute_reference(cfg):
+    """The prefix-attending incremental chunk path must be equivalent to
+    the recompute-from-start reference path."""
+    wl = lambda: _workload(cfg, temps=True)
+    inc, reqs_i = _run(cfg, tfs=32, wl=wl)
+    rec, reqs_r = _run(cfg, tfs=32, wl=wl,
+                       ecfg=EngineConfig(incremental_chunk_prefill=False))
+    assert inc._chunk_incremental and not rec._chunk_incremental
+    assert inc.n_prefill_chunks == rec.n_prefill_chunks >= 2
+    assert _fingerprint(inc, reqs_i) == _fingerprint(rec, reqs_r)
+
+
+def test_chunked_with_eos_matches_whole(cfg):
+    """EOS-bearing requests behave identically whether their prompts ran
+    chunked or whole."""
+    probe, preqs = _run(cfg, tfs=192)
+    eos = preqs[0].output[1]
+    wl = lambda: _workload(cfg, eos_token=eos, max_long=16)
+    chunked, reqs_c = _run(cfg, tfs=32, wl=wl)
+    whole, reqs_w = _run(cfg, tfs=192, wl=wl)
+    assert chunked.n_prefill_chunks >= 2
+    for a, b in zip(reqs_c, reqs_w):
+        assert a.output == b.output
+    assert any(len(g.output) < g.params.max_new_tokens for g in reqs_c)
+
+
+def test_preempted_request_reprefills_chunked(cfg):
+    """An always-wrong predictor with no padding/reserve forces offload-
+    free preemptions; the preempted request's recompute re-prefill
+    (prompt + generated tail) must itself run chunked under a small TFS,
+    identically on async and sync paths."""
+    def run(ecfg):
+        mb, cap = 4, 192
+        scfg = _scfg(32, mb=mb, cap=cap, pad_ratio=0.0, reserve_frac=0.0,
+                     bucket=8)
+
+        def wl():
+            rng = np.random.default_rng(5)
+            return [GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size, 60)),
+                params=SamplingParams(max_new_tokens=14))] + [
+                GenRequest(
+                    prompt=list(rng.integers(0, cfg.vocab_size,
+                                             int(rng.integers(4, 18)))),
+                    params=SamplingParams(
+                        max_new_tokens=int(rng.integers(12, 28))))
+                for _ in range(4)]
+
+        return _run(cfg, tfs=32, ecfg=ecfg, scfg=scfg, rl_accuracy=0.0,
+                    wl=wl)
+
+    ref_eng, ref_reqs = run(LEGACY)
+    assert ref_eng.scheduler.n_preempt_free > 0
+    assert ref_eng.n_prefill_chunks >= 2
+    for g in ref_reqs:
+        assert g.t_done is not None
+        assert len(g.output) == g.params.max_new_tokens
+    eng, reqs = run(None)
+    assert _fingerprint(eng, reqs) == _fingerprint(ref_eng, ref_reqs)
+
+
+def test_recurrent_stack_chunk_fallback():
+    """Recurrent stacks (xLSTM) have no resumable prefix view: chunk
+    grants must fall back to recompute-from-start and still produce the
+    whole-prompt token stream."""
+    cfg = get_config("xlstm_125m").reduced().with_(dtype="float32",
+                                                   param_dtype="float32")
+    mb, cap = 2, 96
+
+    def wl():
+        rng = np.random.default_rng(3)
+        return [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                           params=SamplingParams(max_new_tokens=5)),
+                GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 7)),
+                           params=SamplingParams(max_new_tokens=5))]
+
+    chunked, reqs_c = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl)
+    whole, reqs_w = _run(cfg, tfs=cap, mb=mb, cap=cap, wl=wl)
+    assert not chunked._chunk_incremental       # fallback path
+    assert chunked.n_prefill_chunks >= 2
+    for a, b in zip(reqs_c, reqs_w):
+        assert a.output == b.output
+        assert a.t_done is not None
+
+
+def test_tail_chunk_bucket_capped_at_capacity(cfg):
+    """The pow2 round-up of a tail chunk must be clamped so the padded
+    call never implies cache slots (KVC pages) past the grant/capacity —
+    a 70-token prompt in a 72-slot cache forces start + seq_bucket(tail)
+    past capacity without the cap."""
+    mb, cap = 2, 72
+
+    def wl():
+        rng = np.random.default_rng(11)
+        return [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 70)),
+                           params=SamplingParams(max_new_tokens=2))]
+
+    chunked, reqs_c = _run(cfg, tfs=64, mb=mb, cap=cap, wl=wl)
+    whole, reqs_w = _run(cfg, tfs=72, mb=mb, cap=cap, wl=wl)
+    assert chunked.n_prefill_chunks >= 2
+    # every prefill here is a chunk call, and no padded chunk shape may
+    # reach past the cache: 64 + seq_bucket(tail) would (64+16 > 72), so
+    # the clamp must have produced a sub-bucket (non-pow2-padded) tail
+    assert all(b == 1 and s <= cap for b, s in chunked._prefill_shapes)
+    assert any(s < MIN_SEQ_BUCKET or (s & (s - 1))
+               for _, s in chunked._prefill_shapes)
+    assert reqs_c[0].output == reqs_w[0].output

@@ -1,0 +1,181 @@
+"""Decode megastep (K fused iterations per dispatch) must be bitwise
+drop-in for the per-iteration async path: identical token streams,
+completion times and scheduler decisions — including EOS firing *inside*
+a fused window — while amortizing dispatches ~K×."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                           ServingEngine)
+
+PER_ITER = EngineConfig(decode_megastep=1)
+MEGA = EngineConfig(decode_megastep=8)
+LEGACY = EngineConfig(async_decode=False, packed_prefill=False)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3_8b").reduced(d_model=128).with_(
+        dtype="float32", param_dtype="float32")
+
+
+def _engine(cfg, ecfg, *, seed=0, max_batch=4, capacity=96):
+    return ServingEngine(cfg, max_batch=max_batch, capacity=capacity,
+                         rl_accuracy=1.0, seed=seed, engine_cfg=ecfg)
+
+
+def _workload(cfg, n=4, seed=0, eos_token=None, long=True):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 18))
+        temp = 0.0 if i % 2 else 1.3
+        reqs.append(GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size, plen)),
+            params=SamplingParams(
+                max_new_tokens=int(rng.integers(24, 40)) if long else
+                int(rng.integers(3, 9)),
+                temperature=temp, top_k=4 if temp else 0,
+                eos_token=eos_token)))
+    return reqs
+
+
+def _fingerprint(eng, reqs):
+    per_req = [(g.rid, tuple(g.output), g.t_done) for g in reqs]
+    s = eng.scheduler
+    sched = (tuple(s.iter_completion_counts),
+             tuple((r.rid, r.t_complete, r.generated, r.n_preemptions)
+                   for r in s.completed),
+             s.n_preempt_free, s.n_preempt_swap, s.n_underprov)
+    return per_req, sched
+
+
+def test_megastep_matches_per_iteration(cfg):
+    outs = []
+    for ecfg in (PER_ITER, MEGA):
+        eng = _engine(cfg, ecfg)
+        reqs = _workload(cfg)
+        eng.run(reqs)
+        outs.append((_fingerprint(eng, reqs), eng))
+    (fp1, e1), (fp8, e8) = outs
+    assert fp1 == fp8
+    # windows fused (staggered completions bound many of them, so the
+    # strong ~K× claim lives in the uniform steady-state test below)
+    assert e8.decode_iters == e1.decode_iters
+    assert e1.n_decode_dispatches == e1.decode_iters
+    assert e8.n_decode_dispatches < e8.decode_iters
+
+
+def test_megastep_matches_legacy_sync(cfg):
+    ref = _engine(cfg, LEGACY)
+    ref_reqs = _workload(cfg)
+    ref.run(ref_reqs)
+    eng = _engine(cfg, MEGA)
+    reqs = _workload(cfg)
+    eng.run(reqs)
+    assert _fingerprint(eng, reqs) == _fingerprint(ref, ref_reqs)
+
+
+def test_eos_inside_megastep_window(cfg):
+    """EOS firing mid-window: the replay must deliver it to the scheduler
+    at the iteration it fired, complete the request there, and keep the
+    surviving rows' streams bitwise-identical."""
+    probe = _engine(cfg, PER_ITER)
+    preqs = _workload(cfg)
+    probe.run(preqs)
+    # pick a token some way into the longest greedy stream so windows have
+    # formed (queues drained) before it fires
+    greedy = [g for g in preqs if g.params.temperature == 0.0][0]
+    eos = greedy.output[len(greedy.output) // 2]
+
+    outs = []
+    for ecfg in (PER_ITER, MEGA):
+        eng = _engine(cfg, ecfg)
+        reqs = _workload(cfg, eos_token=eos)
+        eng.run(reqs)
+        outs.append((_fingerprint(eng, reqs), eng, reqs))
+    assert outs[0][0] == outs[1][0]
+    reqs = outs[1][2]
+    assert any(len(g.output) < g.params.max_new_tokens for g in reqs)
+    for g in reqs:
+        if len(g.output) < g.params.max_new_tokens:
+            assert g.output[-1] == eos
+    # the megastep engine really fused windows in this run
+    assert outs[1][1].n_decode_dispatches < outs[1][1].decode_iters
+
+
+def test_megastep_steady_state_stays_async(cfg):
+    """Uniform batch, no EOS-capable requests: zero EOS readbacks, the
+    decode loop stays device-resident (host last_tok mirrors untouched),
+    and dispatches amortize ~K× (all requests complete together, so every
+    full window fuses to the K=8 max)."""
+    eng = _engine(cfg, MEGA, capacity=256)   # KVC fits the whole batch
+    rng = np.random.default_rng(0)
+    reqs = [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 18)))),
+        params=SamplingParams(max_new_tokens=33,
+                              temperature=1.3 if i % 2 else 0.0,
+                              top_k=4 if i % 2 else 0))
+        for i in range(4)]
+    eng.run(reqs)
+    assert eng.decode_iters > 0
+    assert eng.sync_counts["eos_flags"] == 0
+    # ~decode_iters/8 full windows plus admission/tail edges
+    assert eng.n_decode_dispatches <= eng.decode_iters // 4
+    assert int(eng.last_tok.sum()) == 0
+    for g in reqs:
+        assert len(g.output) == g.params.max_new_tokens
+
+
+def test_megastep_respects_admission_horizon(cfg):
+    """Requests arriving while others decode: windows must not fuse past
+    admission points (the step() assert enforces it), and results stay
+    identical to per-iteration execution."""
+    def run(ecfg):
+        eng = _engine(cfg, ecfg, max_batch=2, capacity=96)
+        rng = np.random.default_rng(9)
+        reqs = [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(4, 16)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(10, 30))))
+            for _ in range(6)]        # 6 requests through 2 slots: staged
+        eng.run(reqs)
+        return eng, reqs
+
+    e1, r1 = run(PER_ITER)
+    e8, r8 = run(MEGA)
+    assert _fingerprint(e8, r8) == _fingerprint(e1, r1)
+    assert e8.n_decode_dispatches < e8.decode_iters
+
+
+def test_megastep_chunked_prefill_interplay(cfg):
+    """Chunked long-prompt admission + megastep decode in one run: both
+    hot paths active, still bitwise-equal to the fully-legacy engine."""
+    from repro.core.scheduler import SchedulerConfig
+    mb, cap = 4, 192
+
+    def run(ecfg):
+        scfg = SchedulerConfig(kvc_tokens=mb * cap, block_size=16, tfs=48,
+                               max_model_len=cap, max_batch_reqs=mb)
+        eng = ServingEngine(cfg, max_batch=mb, capacity=cap,
+                            rl_accuracy=1.0, seed=0, scheduler_cfg=scfg,
+                            engine_cfg=ecfg)
+        rng = np.random.default_rng(21)
+        reqs = [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size, 120)),
+            params=SamplingParams(max_new_tokens=10))] + [
+            GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(4, 20)))),
+                params=SamplingParams(max_new_tokens=int(
+                    rng.integers(16, 30))))
+            for _ in range(3)]
+        eng.run(reqs)
+        return eng, reqs
+
+    ref, ref_reqs = run(LEGACY)
+    eng, reqs = run(MEGA)
+    assert eng.n_prefill_chunks >= 2
+    assert eng.n_decode_dispatches < eng.decode_iters
+    assert _fingerprint(eng, reqs) == _fingerprint(ref, ref_reqs)

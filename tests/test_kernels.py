@@ -70,6 +70,54 @@ def test_flash_prefill_segment_mask(seg_lens, win, cap, dtype):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,S,plen,win,cap", [
+    (64, 48, 40, None, None),               # prefix + chunk, padded C view
+    (96, 17, 60, None, 30.0),               # ragged chunk + softcap
+    (128, 33, 100, 48, None),               # sliding window across prefix
+    (64, 48, 0, None, None),                # empty prefix (first chunk)
+])
+def test_flash_prefill_prefix_positions(C, S, plen, win, cap, dtype):
+    """Chunked-prefill masking: explicit q/kv positions with a rectangular
+    key axis (cache-prefix view of C slots, plen valid, then the chunk)
+    must match (a) the positions-aware oracle and (b) the tail rows of a
+    plain contiguous causal run over [prefix ++ chunk]."""
+    from repro.kernels.flash_prefill import POS_INVALID
+    B, H, K, hd = 2, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    kp = jax.random.normal(ks[3], (B, C, K, hd), dtype)
+    vp = jax.random.normal(ks[4], (B, C, K, hd), dtype)
+    qpos = jnp.broadcast_to(plen + jnp.arange(S), (B, S))
+    slot = jnp.arange(C)
+    kpos = jnp.broadcast_to(jnp.concatenate(
+        [jnp.where(slot < plen, slot, POS_INVALID),
+         plen + jnp.arange(S)]), (B, C + S))
+    k_all = jnp.concatenate([kp, kc], axis=1)
+    v_all = jnp.concatenate([vp, vc], axis=1)
+    out = flash_attention(q, k_all, v_all, causal=True, window=win,
+                          softcap=cap, q_positions=qpos, kv_positions=kpos,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention(q, k_all, v_all, causal=True, window=win,
+                               softcap=cap, q_positions=qpos,
+                               kv_positions=kpos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype])
+    # oracle cross-check: chunk-over-prefix == tail of the contiguous run
+    kf = jnp.concatenate([kp[:, :plen], kc], axis=1)
+    vf = jnp.concatenate([vp[:, :plen], vc], axis=1)
+    qf = jnp.concatenate(
+        [jax.random.normal(ks[1], (B, plen, H, hd), dtype), q], axis=1)
+    full = ref.flash_attention(qf, kf, vf, causal=True, window=win,
+                               softcap=cap)
+    np.testing.assert_allclose(
+        want.astype(jnp.float32), full[:, plen:].astype(jnp.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,H,K,hd,page,MP", [
     (3, 8, 2, 64, 16, 5),
     (2, 4, 4, 128, 32, 4),
