@@ -4,8 +4,10 @@ decode-loop throughput (legacy host-synced vs fused async device-resident)
 with host-blocking-sync counts per iteration, decode-megastep dispatch
 amortization (K fused iterations per dispatch vs one), chunked-prefill
 per-iteration stall bounds under a long-prompt + decode mixed wave, engine
-prefill retrace count under token packing, and paged-attention kernel step
-time single- vs multi-page.
+prefill retrace count under token packing, cluster-layer conservation
+(2-instance real fleet + disaggregated KV-migration pair + ClusterSim,
+every routed request completing exactly once), and paged-attention kernel
+step time single- vs multi-page.
 
 Emits before/after numbers to ``BENCH_hotpath.json`` at the repo root —
 the baseline the acceptance criteria check against:
@@ -364,7 +366,86 @@ def bench_prefill_retraces(n: int = 24, seed: int = 0) -> Dict:
 
 
 # --------------------------------------------------------------------- #
-# 6. kernel: single- vs multi-page step time + DMA early-exit accounting
+# 6. cluster: 2-instance real fleet smoke + ClusterSim conservation
+# --------------------------------------------------------------------- #
+def bench_cluster(n_reqs: int = 8, sim_reqs: int = 300,
+                  seed: int = 0) -> Dict:
+    """Structural gates for the cluster layer, both backends:
+
+      * a 2-instance real-engine fleet (tiny model) serves ``n_reqs``
+        online requests — every submitted request must complete exactly
+        once with zero double-routes;
+      * a disaggregated prefill/decode pair must migrate every request
+        (KV export → inject) and stay greedy-token-equal to a single
+        engine serving the same stream;
+      * a 3-instance ClusterSim over a sharegpt trace must conserve rids.
+
+    All counter-based — immune to wall-clock noise, gated by --check.
+    """
+    import numpy as np
+    from repro.cluster import EngineFleet
+    from repro.configs import get_config
+    from repro.core import registry
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+    def mk_reqs():
+        rng = np.random.default_rng(seed + 11)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(8, 24)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(4, 10)),
+                                  temperature=0.0))
+            for _ in range(n_reqs)]
+
+    out: Dict = {}
+    t0 = time.perf_counter()
+    fleet = EngineFleet(cfg, n_instances=2, router="least-kvc", seed=seed,
+                        max_batch=4, capacity=256, rl_accuracy=1.0)
+    fleet.run(mk_reqs())
+    cons = fleet.conservation()
+    out["fleet_2x"] = {**cons, "router": "least-kvc",
+                       "seconds": round(time.perf_counter() - t0, 2)}
+
+    ref = ServingEngine(cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=seed)
+    ref_reqs = mk_reqs()
+    ref.run(ref_reqs)
+    ref_out = [g.output for g in ref_reqs]
+    t0 = time.perf_counter()
+    disagg = EngineFleet(cfg, n_instances=2, roles=("prefill", "decode"),
+                         router="least-kvc", seed=seed, max_batch=4,
+                         capacity=256, rl_accuracy=1.0)
+    dreqs = disagg.run(mk_reqs())
+    dcons = disagg.conservation()
+    out["fleet_disagg"] = {
+        **dcons, "kv_fallbacks": disagg.n_kv_fallbacks,
+        "tokens_equal_single_engine":
+            [g.output for g in dreqs] == ref_out,
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    t0 = time.perf_counter()
+    res = registry.run_cluster("econoserve", _cluster_trace(sim_reqs, seed),
+                               n_instances=3, router="least-kvc", seed=seed)
+    out["sim_3x"] = {**res.conservation(),
+                     "goodput": round(res.goodput, 3),
+                     "seconds": round(time.perf_counter() - t0, 2)}
+    out["conservation_ok"] = bool(out["fleet_2x"]["ok"]
+                                  and out["fleet_disagg"]["ok"]
+                                  and out["sim_3x"]["ok"])
+    return out
+
+
+def _cluster_trace(n: int, seed: int):
+    reqs = traces.generate(traces.SHAREGPT, n, seed=seed, rate=6.0)
+    return reqs
+
+
+# --------------------------------------------------------------------- #
+# 7. kernel: single- vs multi-page step time + DMA early-exit accounting
 # --------------------------------------------------------------------- #
 def bench_kernel(reps: int = 3) -> Dict:
     import jax
@@ -462,6 +543,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
             plen=128 if quick else 256, chunk_tfs=32 if quick else 64),
         "form_batch": bench_form_batch(n_reqs=n, iters=iters),
         "prefill": bench_prefill_retraces(n=8 if quick else 24),
+        "cluster": bench_cluster(n_reqs=8, sim_reqs=200 if quick else 400),
         "kernel": bench_kernel(reps=2 if quick else 3),
     }
     # speedups scale with problem size (a 10k-queue amplifies the
@@ -484,7 +566,9 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         # measurement after the 10k-queue churn reads several× low (thread
         # state, allocator fragmentation), anchoring the gate too leniently
         results["quick_reference"] = _quickref_subprocess()
-    if write:
+    # quick mode is a smoke run and must never clobber the committed
+    # full-scale baseline (benchmarks.run invokes main(quick=True))
+    if write and not quick:
         with open(OUT_PATH, "w") as f:
             json.dump(results, f, indent=1)
     print(json.dumps(results, indent=1))
@@ -505,8 +589,11 @@ def check_regression(factor: float = 2.0,
         reintroduced per-iteration blocking sync costs far more;
       * a structural invariant broke: megastep must amortize dispatches
         (<= 0.5/iter in steady state, ~1/K expected) with zero blocking
-        syncs, and a long prompt must complete via >= 2 engine-executed
-        chunks with tokens equal to the whole-prompt run. These are
+        syncs, a long prompt must complete via >= 2 engine-executed
+        chunks with tokens equal to the whole-prompt run, and the cluster
+        layer must conserve requests (every routed request completes
+        exactly once across instances; a migrated prefill→decode stream
+        stays greedy-token-equal to a single engine). These are
         counter-based and immune to wall-clock noise.
     """
     with open(OUT_PATH) as f:
@@ -515,6 +602,7 @@ def check_regression(factor: float = 2.0,
     res = {"decode_loop": bench_decode_loop(decode_iters=60),
            "decode_megastep": bench_decode_megastep(decode_iters=60),
            "chunked_prefill": bench_chunked_prefill(plen=128, chunk_tfs=32)}
+    res["cluster"] = bench_cluster(n_reqs=8, sim_reqs=200)
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
     print(json.dumps(res, indent=1))
     failures = []
@@ -555,6 +643,18 @@ def check_regression(factor: float = 2.0,
     if not ck["tokens_equal"]:
         failures.append("chunked_prefill: token streams diverged from the "
                         "whole-prompt run")
+    cl = res["cluster"]
+    if not cl["conservation_ok"]:
+        failures.append(f"cluster: conservation gate failed — every routed "
+                        f"request must complete exactly once "
+                        f"(fleet={cl['fleet_2x']}, "
+                        f"disagg={cl['fleet_disagg']}, sim={cl['sim_3x']})")
+    if not cl["fleet_disagg"]["tokens_equal_single_engine"]:
+        failures.append("cluster: migrated (prefill→decode) token streams "
+                        "diverged from the single-engine run")
+    if cl["fleet_disagg"]["migrations"] < 1:
+        failures.append("cluster: disaggregated fleet performed no KV "
+                        "migrations")
     blocking = res["decode_loop"]["async_device"]["blocking_syncs_per_iter"]
     if blocking > 0.05:
         # warn-only: blocking drains also happen when a slow/loaded runner
@@ -571,7 +671,8 @@ def check_regression(factor: float = 2.0,
           f"form_batch {res['form_batch']['speedup']}x, "
           f"decode_loop {res['decode_loop']['speedup']}x, "
           f"megastep {res['decode_megastep']['dispatch_amortization']}x "
-          f"dispatch amortization, chunked TTFT bounded "
+          f"dispatch amortization, chunked TTFT bounded, cluster "
+          f"conservation + migration equality hold "
           f"(quick baselines: {ref})")
     return 0
 

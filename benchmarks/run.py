@@ -1,11 +1,17 @@
-"""Benchmark driver — one module per paper figure/table plus the roofline
-report. Prints ``bench,key...,metric,value`` CSV lines; JSON artifacts land
-in experiments/results/.
+"""Benchmark driver — one module per paper figure/table plus the hot-path
+microbench (whose --check mode CI gates on, covering the cluster
+conservation invariant) and the roofline report. Prints
+``bench,key...,metric,value`` CSV lines; JSON artifacts land in
+experiments/results/.
 
 Usage:
   python -m benchmarks.run                # quick defaults (CI-sized)
   python -m benchmarks.run --full         # paper-sized sweeps
-  python -m benchmarks.run --bench fig9_rate_sweep
+  python -m benchmarks.run --bench fig12_gpu_count
+
+Note: ``hotpath_micro`` in quick mode never rewrites BENCH_hotpath.json —
+only a full run (``--full`` or the module's own CLI) refreshes the
+committed baseline the CI regression guard anchors on.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ BENCHES = [
     "fig13_ablation",
     "fig14_sched_overhead",
     "fig15_sensitivity",
+    "hotpath_micro",
     "kernels_micro",
     "roofline",
 ]

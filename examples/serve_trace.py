@@ -1,14 +1,22 @@
-"""End-to-end driver (deliverable b): serve a stream of batched requests on
-a real JAX model with the EconoServe scheduler, Poisson arrivals, EOS
-stopping and the Pallas attention path.
+"""End-to-end driver: serve an online stream of requests on real JAX
+models with the EconoServe scheduler — on one engine or an N-instance
+cluster fleet (``--cluster N``), optionally disaggregated into prefill /
+decode roles with live KV migration (``--disagg``).
+
+Requests arrive online (Poisson gaps on the iteration clock) through a
+submit/step loop gated on ``has_work()``, and the report includes
+per-request TTFT alongside throughput.
 
   PYTHONPATH=src python examples/serve_trace.py [--impl pallas] [-n 16]
+  PYTHONPATH=src python examples/serve_trace.py --cluster 2 --router least-kvc
+  PYTHONPATH=src python examples/serve_trace.py --cluster 2 --disagg --tiny
 """
 import argparse
 import time
 
 import numpy as np
 
+from repro.cluster import EngineFleet, ROUTERS
 from repro.configs import get_config
 from repro.serving import GenRequest, SamplingParams, ServingEngine
 
@@ -20,28 +28,79 @@ def main():
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--variant", default="full",
                     help="econoserve variant: d|sd|sdo|full")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="serve across N engine instances (0 = single)")
+    ap.add_argument("--router", default="least-kvc", choices=list(ROUTERS))
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated roles: engine 0 prefills, the rest "
+                         "decode (KV migration); requires --cluster >= 2")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per engine iteration")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized model (fast compile, smoke runs)")
+    ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args()
 
+    if args.disagg and args.cluster < 2:
+        ap.error("--disagg needs --cluster >= 2")
     cfg = get_config(args.arch).reduced().with_(dtype="float32",
                                                 param_dtype="float32")
-    engine = ServingEngine(cfg, max_batch=6, capacity=160,
-                           variant=args.variant, impl=args.impl)
-    rng = np.random.default_rng(7)
+    if args.tiny:
+        cfg = cfg.with_(d_model=64, num_heads=2, num_kv_heads=2,
+                        head_dim=32, d_ff=256, vocab_size=256)
+    kw = dict(max_batch=6, capacity=160, variant=args.variant,
+              impl=args.impl)
+    n_inst = max(0, args.cluster)
+    if n_inst:
+        roles = ["prefill"] + ["decode"] * (n_inst - 1) if args.disagg \
+            else None
+        server = EngineFleet(cfg, n_instances=n_inst, roles=roles,
+                             router=args.router, seed=args.seed, **kw)
+    else:
+        server = ServingEngine(cfg, seed=args.seed, **kw)
+
+    rng = np.random.default_rng(args.seed)
     reqs = [GenRequest(
         prompt=list(rng.integers(0, cfg.vocab_size, rng.integers(6, 40))),
         params=SamplingParams(max_new_tokens=int(rng.integers(4, 16)),
                               temperature=0.0))
         for _ in range(args.n)]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.n))
+
+    # online submit/step loop on the iteration clock (both backends share
+    # the run(reqs, arrivals) contract): requests are delivered at their
+    # arrival time and the loop drains on has_work()
     t0 = time.time()
-    engine.run(reqs)
+    server.run(reqs, arrivals)
     dt = time.time() - t0
+
     toks = sum(len(g.output) for g in reqs)
-    print(f"arch={cfg.name} impl={args.impl} variant={args.variant}")
-    print(f"served {args.n} requests / {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s on CPU)")
-    s = engine.scheduler
-    print(f"KVC utilization accounting: failures={s.kvc.n_failures}, "
-          f"hosted={s.n_hosted}, reserve rescues={s.n_reserve_rescues}")
+    done = sum(g.t_done is not None for g in reqs)
+    if isinstance(server, EngineFleet):
+        completed = server.completed_requests()
+        cons = server.conservation()
+        extra = (f"cluster={n_inst} router={args.router} "
+                 f"migrations={cons['migrations']} "
+                 f"conservation_ok={cons['ok']}")
+        kvcs = [i.engine.scheduler.kvc for i in server.instances]
+    else:
+        completed = server.scheduler.completed
+        extra = "single-engine"
+        kvcs = [server.scheduler.kvc]
+    ttfts = sorted(r.t_first_token - r.arrival for r in completed
+                   if r.t_first_token is not None)
+    print(f"arch={cfg.name} impl={args.impl} variant={args.variant} {extra}")
+    print(f"served {done}/{args.n} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s on CPU)")
+    if ttfts:
+        p95 = ttfts[min(len(ttfts) - 1, int(0.95 * len(ttfts)))]
+        print(f"TTFT (iterations): mean={np.mean(ttfts):.1f} "
+              f"p50={ttfts[len(ttfts) // 2]:.1f} p95={p95:.1f}")
+    fails = sum(k.n_failures for k in kvcs)
+    print(f"KVC accounting: failures={fails}, "
+          f"alloc_frac={[round(k.allocated_frac, 2) for k in kvcs]}")
+    if done != args.n:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+"""Cluster serving layer: one request stream across N engine instances.
+
+Two interchangeable backends share routers, roles and the autoscaler:
+
+  * ``ClusterSim``   — discrete-event simulation (N ``SimInstance``s under
+    a shared event clock) for large-scale experiments (fig 12);
+  * ``EngineFleet``  — N real in-process ``ServingEngine``s (shared model
+    parameters, per-engine caches/schedulers) driven by one event loop,
+    with live KV migration between disaggregated prefill/decode roles.
+"""
+from .autoscale import AutoscaleConfig, GoodputAutoscaler
+from .fleet import EngineFleet, FleetInstance
+from .router import (LeastKVCRouter, LeastOutstandingTokensRouter, ROUTERS,
+                     Router, RoundRobinRouter, make_router)
+from .sim import ClusterInstance, ClusterResult, ClusterSim, ROLES

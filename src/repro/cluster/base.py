@@ -1,0 +1,105 @@
+"""Shared cluster-instance layer: roles, router-visible stats, and the
+autoscale-decision executor — one implementation for both backends.
+
+``ClusterSim`` instances wrap a discrete-event ``SimInstance`` and
+``EngineFleet`` instances wrap a real ``ServingEngine``; everything the
+router and autoscaler observe (role eligibility, KVC fractions,
+outstanding work) only needs the underlying scheduler, so subclasses
+provide a single ``scheduler`` property and inherit the rest. Keeping
+this here — not copied per backend — means a policy fix lands in both.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+from .autoscale import GoodputAutoscaler
+
+ROLES = ("unified", "prefill", "decode")
+
+
+def validate_roles(roles, n_instances: int) -> List[str]:
+    """Normalize + sanity-check a role assignment: a prefill-only fleet
+    would ping-pong migrated GTs forever, a decode-only one could never
+    admit a prompt."""
+    roles = list(roles) if roles is not None else ["unified"] * n_instances
+    assert len(roles) == n_instances, (roles, n_instances)
+    assert all(r in ROLES for r in roles), roles
+    if any(r != "unified" for r in roles):
+        assert any(r in ("prefill", "unified") for r in roles) and \
+            any(r in ("decode", "unified") for r in roles), \
+            "disaggregated cluster needs both prompt and decode capacity"
+    return roles
+
+
+class InstanceBase:
+    """Role state + the InstanceStats protocol routers consume."""
+
+    def __init__(self, iid: int, role: str = "unified"):
+        assert role in ROLES, role
+        self.id = iid
+        self.role = role
+        self.draining = False
+        self._n_done = 0              # completions already fed upstream
+
+    @property
+    def scheduler(self):
+        raise NotImplementedError
+
+    # -- routing eligibility ------------------------------------------- #
+    def accepts_prompts(self) -> bool:
+        return self.role in ("unified", "prefill") and not self.draining
+
+    def accepts_decodes(self) -> bool:
+        return self.role in ("unified", "decode") and not self.draining
+
+    # -- InstanceStats protocol ---------------------------------------- #
+    def kvc_allocated_frac(self) -> float:
+        return self.scheduler.kvc.allocated_frac
+
+    def kvc_capacity_tokens(self) -> int:
+        return self.scheduler.kvc.capacity_tokens
+
+    def outstanding_tokens(self) -> int:
+        sched = self.scheduler
+        tot = 0
+        for r in sched.pt_queue:
+            tot += (r.prompt_len - r.prompt_done) + r.remaining_predicted
+        for r in sched.gt_queue:
+            tot += r.remaining_predicted
+        for r in getattr(sched, "running_gts", []):
+            tot += r.remaining_predicted
+        return tot
+
+    def harvest_completions(self, scaler: GoodputAutoscaler) -> None:
+        """Feed completions since the last harvest into the attainment
+        window."""
+        done = self.scheduler.completed
+        for r in done[self._n_done:]:
+            scaler.record(r.met_slo)
+        self._n_done = len(done)
+
+
+def execute_autoscale(scaler: GoodputAutoscaler, t: float,
+                      instances: Sequence[InstanceBase],
+                      spawn: Callable[[float], None],
+                      events: List[Tuple[float, int]]) -> None:
+    """Poll the scaler against the routable set and execute its decision:
+    +1 spawns a fresh unified instance (via the backend's ``spawn``
+    callback), -1 marks the least-loaded unified instance draining (no
+    new routes; it retires once its in-flight work finishes). The scaler
+    is told whether a drain victim exists, so a blocked action never
+    commits cooldown state."""
+    routable = [i for i in instances if not i.draining]
+    load = sum(i.kvc_allocated_frac() for i in routable) \
+        / max(1, len(routable))
+    n_drain = sum(1 for i in instances if i.draining)
+    victims = [i for i in routable if i.role == "unified"]
+    action = scaler.decide(t, n_live=len(routable), n_draining=n_drain,
+                           load_frac=load, can_drain=bool(victims))
+    if action > 0:
+        spawn(t)
+        events.append((t, +1))
+    elif action < 0:
+        v = min(victims, key=lambda i: (i.outstanding_tokens(), -i.id))
+        v.draining = True
+        events.append((t, -1))

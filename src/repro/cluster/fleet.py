@@ -1,0 +1,189 @@
+"""Real-engine fleet: N in-process ``ServingEngine`` instances behind one
+event loop, one router, and (optionally) disaggregated prefill/decode
+roles with live KV migration.
+
+The fleet owns the request stream: ``submit`` routes each ``GenRequest``
+to exactly one engine (conservation-guarded — a request object is never
+routed twice), ``step`` advances every engine that has work on a shared
+iteration clock, then sweeps prefill-role engines for finished prompts and
+migrates them: ``engine.export_kv`` extracts the request's cache pages and
+carried slot state, ``engine.inject_kv`` seeds them into a decode engine
+chosen by the decode-side router. Engines that cannot produce a portable
+KV image (recurrent stacks, ring caches) — or a receiver without a free
+slot / KVC room — fall back transparently to the engine's existing
+swap-recompute path; either way the greedy token stream is identical to
+serving the request on a single engine (``tests/test_cluster.py``).
+
+Model parameters are built once and shared by every engine (caches, slots
+and schedulers stay per-engine), so an N-instance fleet costs N caches,
+not N models. An optional ``GoodputAutoscaler`` is polled once per loop
+tick: +1 spawns a fresh unified engine from the shared parameters, -1
+marks one draining (no new routes; it retires via ``has_work``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.request import Request
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.serving import GenRequest, ServingEngine
+from repro.serving.engine import serve_stream
+
+from .autoscale import GoodputAutoscaler
+from .base import InstanceBase, ROLES, execute_autoscale, validate_roles
+from .router import Router, make_router
+
+__all__ = ["EngineFleet", "FleetInstance", "ROLES"]
+
+
+class FleetInstance(InstanceBase):
+    """One engine plus its routing-visible stats (InstanceStats)."""
+
+    def __init__(self, iid: int, engine: ServingEngine,
+                 role: str = "unified"):
+        super().__init__(iid, role)
+        self.engine = engine
+
+    @property
+    def scheduler(self):
+        return self.engine.scheduler
+
+
+class EngineFleet:
+    def __init__(self, cfg: ModelConfig, n_instances: int = 2, *,
+                 roles: Optional[Sequence[str]] = None,
+                 router: str = "least-kvc", seed: int = 0,
+                 kv_migration: bool = True,
+                 autoscaler: Optional[GoodputAutoscaler] = None,
+                 **engine_kwargs):
+        """``engine_kwargs`` are forwarded to every ``ServingEngine``
+        (max_batch, capacity, scheduler_cfg, engine_cfg, impl, ...).
+        ``kv_migration=False`` forces the swap-recompute fallback for every
+        migration (the reference path the KV image is tested against).
+        Fleet size under autoscaling is bounded by the scaler's
+        ``AutoscaleConfig.max_instances``."""
+        self.cfg = cfg
+        self.kv_migration = kv_migration
+        self.engine_kwargs = dict(engine_kwargs)
+        self.params = model.init(cfg, jax.random.PRNGKey(seed))
+        self._seed = seed
+        roles = validate_roles(roles, n_instances)
+        self.instances: List[FleetInstance] = [
+            FleetInstance(i, self._make_engine(i), roles[i])
+            for i in range(n_instances)]
+        self.router: Router = make_router(router, seed)
+        self.decode_router: Router = make_router(router, seed + 1)
+        self.autoscaler = autoscaler
+        # conservation accounting: a GenRequest is routed exactly once
+        self.route_of: Dict[int, int] = {}       # id(GenRequest) -> iid
+        self.submitted: List[GenRequest] = []
+        self.double_routes = 0
+        self.n_migrations = 0
+        self.n_kv_fallbacks = 0
+        self.scale_events: List[Tuple[float, int]] = []
+        self._next_id = n_instances
+
+    def _make_engine(self, i: int) -> ServingEngine:
+        return ServingEngine(self.cfg, params=self.params,
+                             seed=self._seed + i, **self.engine_kwargs)
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: GenRequest, now: float) -> int:
+        """Route and submit one request; returns the serving instance id."""
+        if id(req) in self.route_of:
+            self.double_routes += 1
+        cands = [i for i in self.instances if i.accepts_prompts()]
+        if not cands:
+            cands = [i for i in self.instances
+                     if i.role in ("unified", "prefill")]
+        demand = len(req.prompt) + req.params.max_new_tokens
+        inst = self.router.choose(cands, demand)
+        inst.engine.submit(req, now)
+        self.route_of[id(req)] = inst.id
+        self.submitted.append(req)
+        return inst.id
+
+    def has_work(self) -> bool:
+        return any(i.engine.has_work() for i in self.instances)
+
+    # ------------------------------------------------------------------ #
+    def step(self, now: Optional[float] = None) -> int:
+        """One fleet tick: step every engine with work, then migrate
+        finished prompts off prefill-role engines. Returns completions."""
+        now = time.monotonic() if now is None else now
+        done = 0
+        for inst in self.instances:
+            if inst.engine.has_work():
+                done += inst.engine.step(now)
+        for inst in self.instances:
+            if inst.role == "prefill":
+                self._migrate_ready(inst, now)
+        if self.autoscaler is not None:
+            self._autoscale(now)
+        return done
+
+    def _migrate_ready(self, inst: FleetInstance, now: float) -> None:
+        """Move every queued GT off a prefill engine to a decode engine."""
+        sched = inst.engine.scheduler
+        for r in list(sched.gt_queue):
+            payload = inst.engine.export_kv(r.rid)
+            if not self.kv_migration:
+                payload["kv"] = None
+            cands = [i for i in self.instances if i.accepts_decodes()]
+            if not cands:
+                cands = [i for i in self.instances
+                         if i.role in ("unified", "decode")]
+            demand = payload["req"].prompt_len \
+                + payload["req"].remaining_predicted
+            tgt = self.decode_router.choose(cands, demand)
+            if payload["kv"] is None:
+                self.n_kv_fallbacks += 1
+            tgt.engine.inject_kv(payload, now)
+            self.n_migrations += 1
+
+    def _spawn(self, now: float) -> None:
+        iid = self._next_id
+        self._next_id += 1
+        self.instances.append(
+            FleetInstance(iid, self._make_engine(iid), "unified"))
+
+    def _autoscale(self, now: float) -> None:
+        scaler = self.autoscaler
+        # harvest fresh completions for the attainment window
+        for inst in self.instances:
+            inst.harvest_completions(scaler)
+        execute_autoscale(scaler, now, self.instances, self._spawn,
+                          self.scale_events)
+
+    # ------------------------------------------------------------------ #
+    def run(self, gen_requests: Sequence[GenRequest],
+            arrivals: Optional[Sequence[float]] = None,
+            max_steps: int = 100_000) -> List[GenRequest]:
+        """Serve a batch (or, with ``arrivals``, an online stream on the
+        fleet's iteration clock) to completion — the same contract as
+        ``ServingEngine.run``, one shared driver."""
+        return serve_stream(self, gen_requests, arrivals, max_steps)
+
+    def flush(self) -> None:
+        for inst in self.instances:
+            inst.engine.flush()
+
+    # ------------------------------------------------------------------ #
+    def completed_requests(self) -> List[Request]:
+        """Scheduler-side Request records across all engines (TTFT etc.)."""
+        return [r for inst in self.instances
+                for r in inst.engine.scheduler.completed]
+
+    def conservation(self) -> Dict[str, int]:
+        """Every submitted request finished exactly once, somewhere."""
+        done = sum(1 for g in self.submitted if g.t_done is not None)
+        return {"submitted": len(self.submitted),
+                "completed": done,
+                "double_routes": self.double_routes,
+                "migrations": self.n_migrations,
+                "ok": int(self.double_routes == 0
+                          and done == len(self.submitted))}

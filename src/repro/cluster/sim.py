@@ -1,0 +1,302 @@
+"""Cluster discrete-event simulator: one request stream over N instances.
+
+Each instance is a ``repro.core.simulator.SimInstance`` (the same stepping
+primitive the single-engine ``simulate`` uses) with its own scheduler and
+KVC; ``ClusterSim`` interleaves them under a shared event clock:
+
+  * the next event is the earliest of (next unrouted arrival, next ready
+    KV migration, earliest instance able to step); arrivals/migrations are
+    routed exactly when they become the earliest event, so every routing
+    decision observes instance state as of that moment;
+  * a routed request is *delivered* to its instance only once the instance
+    clock reaches it (an instance mid-iteration cannot see a request that
+    arrives inside the iteration — same semantics as the single-engine
+    loop);
+  * instance **roles** model disaggregated serving à la DistServe: a
+    ``prefill`` instance's finished prompts are pulled out of its GT queue
+    and migrated — KV freed at the source, a ``kv_transfer_time`` delay,
+    then queued-GT delivery at a ``decode`` instance chosen by the decode
+    router. ``unified`` instances (the default) serve both phases;
+  * an optional ``GoodputAutoscaler`` is evaluated at every arrival: +1
+    adds a fresh unified instance at the current time, -1 marks the
+    least-loaded unified instance *draining* (no new routes; in-flight
+    work finishes; the instance retires when empty).
+
+Conservation is tracked structurally: every submitted rid is routed at
+most once (``double_routes`` counts violations) and must complete on
+exactly one instance (``ClusterResult.conservation``) — the gate
+``benchmarks/hotpath_micro.py --check`` enforces in CI.
+
+Scheduler contract: role-based migration moves requests through
+``scheduler.gt_queue``, which the EconoServe/MultiRes family consumes
+(vLLM/ORCA-style baselines keep private running lists and only support
+``unified`` roles).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import CostModel
+from repro.core.metrics import SimResult
+from repro.core.request import Request
+from repro.core.scheduler import BaseScheduler
+from repro.core.simulator import SimInstance
+
+from .autoscale import GoodputAutoscaler
+from .base import InstanceBase, ROLES, execute_autoscale, validate_roles
+from .router import Router, make_router
+
+_INF = float("inf")
+_EPS = 1e-12
+
+__all__ = ["ClusterInstance", "ClusterResult", "ClusterSim", "ROLES"]
+
+
+class ClusterInstance(InstanceBase):
+    """One simulated instance plus its routing-visible stats."""
+
+    def __init__(self, iid: int, sim: SimInstance, role: str = "unified"):
+        super().__init__(iid, role)
+        self.sim = sim
+        self.stalled = False          # has work the scheduler cannot place
+        # routed-but-undelivered requests: (deliver_t, req, as_gt), kept
+        # time-sorted because routing happens in global event-time order
+        self.pending: List[Tuple[float, Request, bool]] = []
+
+    @property
+    def scheduler(self):
+        return self.sim.scheduler
+
+    def outstanding_tokens(self) -> int:
+        tot = super().outstanding_tokens()
+        for _, r, _ in self.pending:
+            tot += (r.prompt_len - r.prompt_done) + r.remaining_predicted
+        return tot
+
+    # -- event-loop interface ------------------------------------------ #
+    def next_time(self) -> float:
+        if self.sim.has_work() and not self.stalled:
+            return self.sim.t
+        if self.pending:
+            return max(self.sim.t, self.pending[0][0])
+        return _INF
+
+    def deliver_due(self) -> None:
+        if not self.pending:
+            return
+        if not (self.sim.has_work() and not self.stalled):
+            self.sim.advance_to(self.pending[0][0])
+        while self.pending and self.pending[0][0] <= self.sim.t + _EPS:
+            _, req, as_gt = self.pending.pop(0)
+            if as_gt:
+                self.sim.scheduler.gt_queue.append(req)
+            else:
+                self.sim.deliver(req, self.sim.t)
+            self.stalled = False
+
+    def idle(self) -> bool:
+        return not self.sim.has_work() and not self.pending
+
+
+@dataclass
+class ClusterResult:
+    """Fleet-level aggregate + per-instance SimResults."""
+    name: str
+    requests: List[Request]
+    per_instance: List[SimResult]
+    wall_time: float
+    n_routed: int = 0
+    n_migrations: int = 0
+    double_routes: int = 0
+    route_of: Dict[int, int] = field(default_factory=dict)
+    completed_by: Dict[int, List[int]] = field(default_factory=dict)
+    scale_events: List[Tuple[float, int]] = field(default_factory=list)
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.per_instance)
+
+    @property
+    def completed(self) -> List[Request]:
+        return [r for r in self.requests if r.t_complete is not None]
+
+    @property
+    def goodput(self) -> float:
+        """SLO-met completions per second across the fleet (fig 12)."""
+        return sum(r.met_slo for r in self.completed) \
+            / max(1e-9, self.wall_time)
+
+    @property
+    def ssr(self) -> float:
+        c = self.completed
+        return sum(r.met_slo for r in c) / max(1, len(c))
+
+    @property
+    def throughput_reqs(self) -> float:
+        return len(self.completed) / max(1e-9, self.wall_time)
+
+    def conservation(self) -> Dict[str, int]:
+        """Structural invariant: every routed rid completes exactly once,
+        on exactly one instance, with zero double-routes."""
+        counts: Dict[int, int] = {}
+        for rids in self.completed_by.values():
+            for rid in rids:
+                counts[rid] = counts.get(rid, 0) + 1
+        dups = sum(1 for c in counts.values() if c > 1)
+        missing = sum(1 for rid in self.route_of if counts.get(rid, 0) == 0)
+        return {"submitted": len(self.requests),
+                "routed": self.n_routed,
+                "completed": len(counts),
+                "duplicate_completions": dups,
+                "uncompleted_routed": missing,
+                "double_routes": self.double_routes,
+                "ok": int(dups == 0 and self.double_routes == 0
+                          and missing == 0
+                          and len(counts) == len(self.requests))}
+
+
+class ClusterSim:
+    def __init__(self, scheduler_factory: Callable[[int], BaseScheduler],
+                 cost: CostModel, n_instances: int = 2,
+                 router: str = "least-kvc",
+                 roles: Optional[Sequence[str]] = None,
+                 seed: int = 0,
+                 autoscaler: Optional[GoodputAutoscaler] = None,
+                 collect_samples: bool = False,
+                 name: Optional[str] = None):
+        self.factory = scheduler_factory
+        self.cost = cost
+        self.collect_samples = collect_samples
+        roles = validate_roles(roles, n_instances)
+        self.instances: List[ClusterInstance] = [
+            ClusterInstance(i, SimInstance(scheduler_factory(i), cost,
+                                           collect_samples), roles[i])
+            for i in range(n_instances)]
+        self.router: Router = make_router(router, seed) \
+            if isinstance(router, str) else router
+        # migrations get their own router instance (same policy) so the
+        # decode-side cycle/tie stream is independent of the arrival side
+        rname = self.router.name if not isinstance(router, str) else router
+        self.decode_router: Router = make_router(rname, seed + 1)
+        self.autoscaler = autoscaler
+        self.name = name or f"cluster-{rname}-x{n_instances}"
+        # conservation / accounting
+        self.route_of: Dict[int, int] = {}
+        self.double_routes = 0
+        self.n_migrations = 0
+        self.scale_events: List[Tuple[float, int]] = []
+        self._next_id = n_instances
+        self._mig_seq = 0
+
+    # ------------------------------------------------------------------ #
+    def _route(self, req: Request, t: float, as_gt: bool) -> None:
+        cands = [i for i in self.instances
+                 if (i.accepts_decodes() if as_gt else i.accepts_prompts())]
+        if not cands:
+            # every eligible instance is draining: fall back to the right
+            # role regardless (a route beats dropping the request)
+            want = ("unified", "decode") if as_gt else ("unified", "prefill")
+            cands = [i for i in self.instances if i.role in want] \
+                or self.instances
+        demand = req.prompt_len + max(req.padded_rl, req.predicted_rl, 1)
+        router = self.decode_router if as_gt else self.router
+        inst = router.choose(cands, demand)
+        if not as_gt:
+            if req.rid in self.route_of:
+                self.double_routes += 1
+            self.route_of[req.rid] = inst.id
+        inst.pending.append((t, req, as_gt))
+        inst.stalled = False
+
+    def _collect_migrations(self, inst: ClusterInstance,
+                            heap: List) -> None:
+        """Pull finished prompts off a prefill instance: free their KVC,
+        pay the KV transfer, and schedule queued-GT delivery at a decode
+        instance (chosen when the transfer lands)."""
+        sched = inst.sim.scheduler
+        for r in list(sched.gt_queue):
+            sched.gt_queue.remove(r)
+            sched.kvc.free(r.rid)
+            tokens = r.prompt_len + r.generated
+            r.occupied_kvc = tokens          # held in transfer/host memory
+            xfer = self.cost.kv_transfer_time(tokens)
+            r.swap_time += xfer
+            self._mig_seq += 1
+            heapq.heappush(heap, (inst.sim.t + xfer, self._mig_seq, r))
+            self.n_migrations += 1
+
+    # ------------------------------------------------------------------ #
+    def _spawn(self, t: float) -> None:
+        iid = self._next_id
+        self._next_id += 1
+        inst = ClusterInstance(
+            iid, SimInstance(self.factory(iid), self.cost,
+                             self.collect_samples), "unified")
+        inst.sim.advance_to(t)
+        self.instances.append(inst)
+
+    def _autoscale(self, t: float) -> None:
+        if self.autoscaler is not None:
+            execute_autoscale(self.autoscaler, t, self.instances,
+                              self._spawn, self.scale_events)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: Sequence[Request],
+            max_iters: int = 2_000_000) -> ClusterResult:
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        n = len(reqs)
+        i_arr = 0
+        migrations: List[Tuple[float, int, Request]] = []
+        total_iters = 0
+
+        while total_iters < max_iters:
+            t_arr = reqs[i_arr].arrival if i_arr < n else _INF
+            t_mig = migrations[0][0] if migrations else _INF
+            t_inst = _INF
+            nxt: Optional[ClusterInstance] = None
+            for inst in self.instances:
+                ti = inst.next_time()
+                if ti < t_inst:
+                    t_inst, nxt = ti, inst
+            if min(t_arr, t_mig, t_inst) == _INF:
+                break
+            if t_arr <= t_mig and t_arr <= t_inst:
+                req = reqs[i_arr]
+                i_arr += 1
+                self._autoscale(t_arr)
+                self._route(req, t_arr, as_gt=False)
+                continue
+            if t_mig <= t_inst:
+                ready, _, req = heapq.heappop(migrations)
+                self._route(req, ready, as_gt=True)
+                continue
+            assert nxt is not None
+            nxt.deliver_due()
+            status = nxt.sim.step()
+            if status == SimInstance.STEPPED:
+                total_iters += 1
+                nxt.stalled = False
+                if nxt.role == "prefill":
+                    self._collect_migrations(nxt, migrations)
+                if self.autoscaler is not None:
+                    nxt.harvest_completions(self.autoscaler)
+            else:
+                # empty plan while work remains: nothing placeable until a
+                # new delivery arrives (mirrors the single-engine loop's
+                # jump-to-next-arrival; here the next event wakes it)
+                nxt.stalled = True
+
+        completed_by = {inst.id: [r.rid for r in
+                                  inst.sim.scheduler.completed]
+                        for inst in self.instances}
+        wall = max((inst.sim.t for inst in self.instances), default=0.0)
+        return ClusterResult(
+            name=self.name, requests=list(reqs),
+            per_instance=[inst.sim.result([]) for inst in self.instances],
+            wall_time=wall, n_routed=len(self.route_of),
+            n_migrations=self.n_migrations,
+            double_routes=self.double_routes,
+            route_of=dict(self.route_of), completed_by=completed_by,
+            scale_events=list(self.scale_events))

@@ -71,3 +71,37 @@ def compare(names: Sequence[str], requests: Sequence[Request],
             cost: Optional[CostModel] = None,
             **kw) -> Dict[str, SimResult]:
     return {n: run_one(n, requests, cfg, cost, **kw) for n in names}
+
+
+def run_cluster(name: str, requests: Sequence[Request],
+                n_instances: int = 2, router: str = "least-kvc",
+                roles: Optional[Sequence[str]] = None,
+                cfg: Optional[SchedulerConfig] = None,
+                cost: Optional[CostModel] = None,
+                pad_ratio: float = 0.15, accuracy: float = 0.75,
+                seed: int = 0, max_iters: int = 2_000_000,
+                autoscaler=None):
+    """Clone + annotate requests, then serve the stream across
+    ``n_instances`` instances of scheduler ``name`` under a ClusterSim
+    (optionally with disaggregated ``roles``, e.g. ("prefill", "decode")
+    for a DistServe-style configuration). Each instance gets its own KVC
+    of ``cfg.kvc_tokens`` — n instances model n GPUs."""
+    import copy
+
+    # imported lazily: repro.cluster builds on repro.core
+    from repro.cluster.sim import ClusterSim
+
+    cfg = cfg or SchedulerConfig()
+    cost = cost or CostModel()
+    reqs = copy.deepcopy(list(requests))
+    if needs_oracle_rl(name):
+        pred = predictor.OraclePredictor(cfg.bucket)
+        predictor.annotate(reqs, pred, 0.0, cfg.bucket)
+    else:
+        pred = predictor.NoisyPredictor(accuracy=accuracy, bucket=cfg.bucket,
+                                        seed=seed)
+        predictor.annotate(reqs, pred, pad_ratio, cfg.bucket)
+    cs = ClusterSim(lambda i: make_scheduler(name, cfg, cost), cost,
+                    n_instances=n_instances, router=router, roles=roles,
+                    seed=seed, autoscaler=autoscaler)
+    return cs.run(reqs, max_iters=max_iters)

@@ -151,6 +151,13 @@ class BaseScheduler:
         total = req.prompt_len + req.generated + req.remaining_predicted
         need = total - self.kvc.allocated_tokens(req.rid)
         if need > 0:
+            # a GT with no live allocation (swapped out, or migrated in
+            # from a peer instance) is a *new* concurrent request — the
+            # same cap _fill_pts enforces bounds it, or an engine would
+            # be asked for more slots than it has
+            if req.rid not in self.kvc.allocs \
+                    and len(self.kvc.allocs) >= self.cfg.max_batch_reqs:
+                return False
             if not self.kvc.can_allocate(need):
                 return False
             self.kvc.allocate(req.rid, need)
@@ -348,6 +355,9 @@ class EconoServeScheduler(BaseScheduler):
             if i is None:
                 break
             r = q[i]
+            if r.rid not in self.kvc.allocs \
+                    and len(self.kvc.allocs) >= self.cfg.max_batch_reqs:
+                break                        # engine concurrency cap
             need = max(1, r.remaining_predicted)
             slot = self.pipe.place(r, need, self._age_of)
             if slot is None:

@@ -1,10 +1,13 @@
 """Serving launcher: trace-driven continuous batching on a real JAX model
-(reduced configs on CPU) under any scheduler in the registry.
+(reduced configs on CPU) under any scheduler in the registry — single
+engine or an N-instance cluster (``--cluster N``), with SLO-aware routing
+and optional disaggregated prefill/decode roles (``--disagg``).
 
 Usage:
   python -m repro.launch.serve --arch qwen3-8b --requests 16
+  python -m repro.launch.serve --arch qwen3-8b --cluster 2 --router least-kvc
   python -m repro.launch.serve --arch opt-13b --sim --trace sharegpt \
-      --requests 500 --rate 5.0 --scheduler econoserve
+      --requests 500 --rate 5.0 --scheduler econoserve --cluster 4
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import time
 
 import numpy as np
 
+from repro.cluster import EngineFleet, ROUTERS
 from repro.configs import get_config
 from repro.core import registry, traces
 from repro.core.costmodel import CostModel, ModelProfile
@@ -20,11 +24,24 @@ from repro.core.scheduler import SchedulerConfig
 from repro.serving import GenRequest, SamplingParams, ServingEngine
 
 
+def _roles(args):
+    if not args.disagg:
+        return None
+    assert args.cluster >= 2, "--disagg needs --cluster >= 2"
+    return ["prefill"] + ["decode"] * (args.cluster - 1)
+
+
 def run_engine(args) -> int:
     cfg = get_config(args.arch).reduced().with_(dtype="float32",
                                                 param_dtype="float32")
-    eng = ServingEngine(cfg, max_batch=args.max_batch, capacity=args.capacity,
-                        variant=args.variant, impl=args.impl)
+    kw = dict(max_batch=args.max_batch, capacity=args.capacity,
+              variant=args.variant, impl=args.impl)
+    if args.cluster:
+        server = EngineFleet(cfg, n_instances=args.cluster,
+                             roles=_roles(args), router=args.router,
+                             seed=args.seed, **kw)
+    else:
+        server = ServingEngine(cfg, seed=args.seed, **kw)
     rng = np.random.default_rng(args.seed)
     reqs = [GenRequest(
         prompt=list(rng.integers(0, cfg.vocab_size,
@@ -32,12 +49,20 @@ def run_engine(args) -> int:
         params=SamplingParams(max_new_tokens=int(rng.integers(4, 24))))
         for _ in range(args.requests)]
     t0 = time.time()
-    eng.run(reqs)
+    server.run(reqs)
     dt = time.time() - t0
     toks = sum(len(g.output) for g in reqs)
     done = sum(g.t_done is not None for g in reqs)
+    mode = f"cluster={args.cluster} router={args.router}" if args.cluster \
+        else "single"
     print(f"served {done}/{len(reqs)} requests, {toks} tokens "
-          f"in {dt:.1f}s ({toks/dt:.1f} tok/s on CPU, arch={cfg.name})")
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s on CPU, arch={cfg.name}, "
+          f"{mode})")
+    if args.cluster:
+        cons = server.conservation()
+        print(f"conservation: {cons}")
+        if not cons["ok"]:
+            return 1
     return 0 if done == len(reqs) else 1
 
 
@@ -46,6 +71,20 @@ def run_sim(args) -> int:
     reqs = traces.generate(spec, args.requests, seed=args.seed,
                            rate=args.rate)
     cost = CostModel(model=ModelProfile.from_config(get_config(args.arch)))
+    if args.cluster:
+        res = registry.run_cluster(args.scheduler, reqs,
+                                   n_instances=args.cluster,
+                                   router=args.router, roles=_roles(args),
+                                   cfg=SchedulerConfig(), cost=cost,
+                                   seed=args.seed)
+        print(f"cluster x{args.cluster} router={args.router} "
+              f"roles={'disagg' if args.disagg else 'unified'}")
+        print(f"{'goodput_req_s':26s} {res.goodput:.4f}")
+        print(f"{'throughput_req_s':26s} {res.throughput_reqs:.4f}")
+        print(f"{'ssr':26s} {res.ssr:.4f}")
+        print(f"{'migrations':26s} {res.n_migrations}")
+        print(f"conservation: {res.conservation()}")
+        return 0 if res.conservation()["ok"] else 1
     res = registry.run_one(args.scheduler, reqs, SchedulerConfig(), cost)
     for k, v in res.summary().items():
         print(f"{k:26s} {v:.4f}")
@@ -66,6 +105,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="serve across N instances (0 = single engine)")
+    ap.add_argument("--router", default="least-kvc", choices=list(ROUTERS))
+    ap.add_argument("--disagg", action="store_true",
+                    help="instance 0 prefills, the rest decode (KV "
+                         "migration); requires --cluster >= 2")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     return run_sim(args) if args.sim else run_engine(args)

@@ -74,7 +74,7 @@ import numpy as np
 
 from repro.core.costmodel import CostModel, ModelProfile
 from repro.core.predictor import NoisyPredictor, apply_padding
-from repro.core.request import Request
+from repro.core.request import Request, State
 from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.models import model
 from repro.models.config import ATTN, ModelConfig
@@ -195,9 +195,13 @@ class ServingEngine:
         self._mega_row = 0
         self._mega_left = 0
         # arrivals submitted while a window is open wait here (delivered
-        # with their true arrival time once the window drains)
+        # with their true arrival time once the window drains), as do KV
+        # injections from a peer engine (cluster prefill→decode migration)
         self._arrivals: List[Tuple[Request, float]] = []
+        self._pending_injects: List[Tuple[dict, float]] = []
         self.n_decode_dispatches = 0
+        self.n_kv_exports = 0
+        self.n_kv_injects = 0
 
         # async bookkeeping: device slot state carried across the fused
         # steps, plus the lag-N readback ring of (tokens, [(row, rid)]).
@@ -373,6 +377,23 @@ class ServingEngine:
             return out, last
 
         self._chunk_prefill = jax.jit(_chunk_fn, donate_argnums=(1,))
+
+        def _inject_fn(caches, kv, slot, length):
+            """Seed a migrated request's KV image into one cache row in a
+            single donated program (cluster prefill→decode handoff). kv
+            leaves are (L, Sb, K, hd) with real data in [0, length); pad
+            positions index C and are dropped."""
+            out = {}
+            for kind, sub in caches.items():
+                C = sub["k"].shape[2]
+                Sb = kv[kind]["k"].shape[1]
+                di = jnp.where(jnp.arange(Sb) < length, jnp.arange(Sb), C)
+                out[kind] = {n: sub[n].at[:, slot, di].set(
+                    kv[kind][n].astype(sub[n].dtype), mode="drop")
+                    for n in ("k", "v")}
+            return out
+
+        self._inject_seed = jax.jit(_inject_fn, donate_argnums=(0,))
         self._seed = jax.jit(self._seed_fn, donate_argnums=(0,))
         self._seed_packed = jax.jit(self._seed_packed_fn,
                                     donate_argnums=(0,))
@@ -419,8 +440,141 @@ class ServingEngine:
         return req.rid
 
     def has_work(self) -> bool:
-        """Scheduler work plus arrivals buffered behind an open window."""
-        return self.scheduler.has_work() or bool(self._arrivals)
+        """Scheduler work plus arrivals/injections buffered behind an open
+        window."""
+        return (self.scheduler.has_work() or bool(self._arrivals)
+                or bool(self._pending_injects))
+
+    # ------------------------------------------------------------------ #
+    # KV migration (cluster disaggregated prefill/decode roles)
+    # ------------------------------------------------------------------ #
+    @property
+    def can_migrate_kv(self) -> bool:
+        """A portable KV image needs identity cache placement: an
+        attention-pure stack (recurrent states are not positionally
+        addressable the same way) and non-ring caches (a sliding-window
+        ring's layout depends on this engine's capacity)."""
+        win = self.cfg.sliding_window
+        return self._pad_prefill and (win is None or self.capacity < win)
+
+    def export_kv(self, rid: int) -> dict:
+        """Extract a queued GT's KV pages + carried slot state so a peer
+        engine can continue decoding it (prefill→decode disaggregation),
+        and remove the request from this engine and its scheduler.
+
+        The returned payload feeds ``inject_kv``. ``payload["kv"]`` is the
+        per-cache-kind {k, v} image of the request's first ``ctx`` context
+        slots, or None when this engine cannot produce a portable image
+        (recurrent stack, ring caches, or a request that lost its slot to
+        preemption) — the receiver then falls back to the swap-recompute
+        path, exactly like a swap-preempted GT."""
+        sched = self.scheduler
+        req = next(r for r in sched.gt_queue if r.rid == rid)
+        if self._pending_drain:
+            # the payload must carry every token generated so far (the
+            # receiver's recompute fallback rebuilds context from g.output)
+            self.sync_counts["flush"] += 1
+            self._drain_tokens(force=True)
+        g = self.requests.pop(rid)
+        slot = self.slot_of.pop(rid, None)
+        kv = None
+        if slot is not None:
+            if self._async:
+                ctx = int(jax.device_get(self._dev["pos"][slot]))
+                last = int(jax.device_get(self._dev["last_tok"][slot]))
+            else:
+                ctx = int(self.pos[slot])
+                last = int(self.last_tok[slot])
+            if self.can_migrate_kv:
+                kv = {kind: {n: np.asarray(sub[n][:, slot, :ctx])
+                             for n in ("k", "v")}
+                      for kind, sub in self.caches.items()}
+            self.free_slots.append(slot)
+        else:
+            ctx = req.prompt_len + req.generated - 1
+            last = g.output[req.generated - 1]
+        sched.gt_queue.remove(req)
+        sched.kvc.free(rid)
+        self._chunk_progress.pop(rid, None)
+        req.occupied_kvc = req.prompt_len + req.generated
+        self.n_kv_exports += 1
+        return {"gen": g, "req": req, "kv": kv, "ctx": ctx,
+                "last_tok": last}
+
+    def inject_kv(self, payload: dict, now: float) -> Optional[int]:
+        """Receive a migrated request. With a KV image (and a free slot +
+        KVC room) the request becomes a queued GT whose decode continues
+        from the injected pages; otherwise it queues with its KV "in host
+        memory" and the engine's existing swap-recompute path re-prefills
+        prompt + generated on first schedule. Deferred while a fused
+        megastep window is open (same contract as ``submit``); returns the
+        assigned rid, or None when deferred."""
+        if self._mega_left > 0:
+            self._pending_injects.append((payload, now))
+            return None
+        return self._apply_inject(payload, now)
+
+    def _apply_inject(self, payload: dict, now: float) -> int:
+        g: GenRequest = payload["gen"]
+        req: Request = payload["req"]
+        rid = self._rid
+        self._rid += 1
+        g.rid = rid
+        req.rid = rid
+        self.requests[rid] = g
+        sched = self.scheduler
+        tokens = req.prompt_len + req.generated
+        kv = payload["kv"]
+        ctx = payload["ctx"]
+        if (kv is not None and self.can_migrate_kv and self.free_slots
+                and ctx <= self.capacity and sched.kvc.can_allocate(tokens)):
+            sched.kvc.allocate(rid, tokens)
+            sched.kvc.set_used(rid, tokens)
+            slot = self.free_slots.pop()
+            self.slot_of[rid] = slot
+            # pad the image to a pow2 token bucket (clamped to capacity)
+            # so the donated seeding program compiles <= log2(capacity)
+            # times, mirroring the chunk-prefill shape policy
+            Sb = seq_bucket(ctx)
+            if Sb > self.capacity:
+                Sb = max(ctx, self.capacity)
+            padded = {}
+            for kind, sub in kv.items():
+                L, _, K, hd = sub["k"].shape
+                padded[kind] = {}
+                for n in ("k", "v"):
+                    buf = np.zeros((L, Sb, K, hd), sub[n].dtype)
+                    buf[:, :ctx] = sub[n]
+                    padded[kind][n] = buf
+            self.caches = self._inject_seed(self.caches, padded,
+                                            np.int32(slot), np.int32(ctx))
+            self.temps[slot] = g.params.temperature
+            self.top_ks[slot] = g.params.top_k
+            self.pos[slot] = ctx
+            last = payload["last_tok"]
+            if self._async:
+                eos = -1 if g.params.eos_token is None else g.params.eos_token
+                one = np.asarray([last], np.int32)
+                self._dev = self._seed_slots(
+                    self._dev, np.asarray([slot], np.int32),
+                    jnp.asarray(one), jnp.asarray(one),
+                    np.zeros(1, bool), np.asarray([ctx], np.int32),
+                    np.asarray([g.params.temperature], np.float32),
+                    np.asarray([g.params.top_k], np.int32),
+                    np.asarray([eos], np.int32))
+            else:
+                self.last_tok[slot] = last
+        else:
+            # swap-recompute fallback: the request queues holding no KVC,
+            # its KV notionally in host memory; when scheduled it arrives
+            # in plan.decode_reqs without a slot and the engine re-prefills
+            # prompt + generated (the existing preemption path)
+            req.prompt_done = req.prompt_len
+        req.occupied_kvc = tokens
+        req.set_state(State.QUEUED_GT, now)
+        sched.gt_queue.append(req)
+        self.n_kv_injects += 1
+        return rid
 
     # ------------------------------------------------------------------ #
     def _is_ring(self, kind: str, sub) -> bool:
@@ -540,8 +694,12 @@ class ServingEngine:
                 "partial chunks are routed through _run_chunk_items"
             g = self.requests[r.rid]
             # after an offload-free preemption the context to recompute is
-            # prompt + everything generated so far
-            ctxs.append(list(g.prompt) + g.output[:r.generated])
+            # prompt + generated-so-far MINUS the newest token: normal
+            # decode writes token t's KV only when t is fed as the next
+            # step's input, so the newest token's KV was never in cache —
+            # it stays the pending decode input (seeding it too would make
+            # the model see it at two positions and shift the stream)
+            ctxs.append(list(g.prompt) + g.output[:max(0, r.generated - 1)])
             slot = self.free_slots.pop()
             self.slot_of[r.rid] = slot
             self.temps[slot] = g.params.temperature
@@ -668,10 +826,11 @@ class ServingEngine:
         for r, chunk in items:
             g = self.requests[r.rid]
             # after an offload-free preemption the context to recompute is
-            # prompt + everything generated; the scheduler's grants cover
-            # prompt_len tokens, so the generated tail rides the chunk
-            # that completes the prompt
-            ctx = list(g.prompt) + g.output[:r.generated]
+            # prompt + the generated tail minus the newest token (whose KV
+            # was never written — it stays the pending decode input, see
+            # _prefill_group); the scheduler's grants cover prompt_len
+            # tokens, so the tail rides the chunk completing the prompt
+            ctx = list(g.prompt) + g.output[:max(0, r.generated - 1)]
             start = self._chunk_progress.get(r.rid, 0)
             completing = r.prompt_done + chunk >= r.prompt_len
             end = len(ctx) if completing else start + chunk
@@ -960,8 +1119,12 @@ class ServingEngine:
     def step(self, now: Optional[float] = None) -> int:
         """One engine iteration. Returns number of completions."""
         now = time.monotonic() if now is None else now
-        if self._mega_left == 0 and self._arrivals:
-            # a fused window just drained: deliver the arrivals it deferred
+        if self._mega_left == 0 and (self._arrivals or self._pending_injects):
+            # a fused window just drained: deliver the arrivals and peer
+            # KV injections it deferred
+            for payload, t_in in self._pending_injects:
+                self._apply_inject(payload, t_in)
+            self._pending_injects.clear()
             for r, t_arr in self._arrivals:
                 self.scheduler.on_arrival(r, t_arr)
             self._arrivals.clear()
@@ -1019,17 +1182,48 @@ class ServingEngine:
             self._drain_tokens(force=True)
         return len(done)
 
-    def run(self, gen_requests: Sequence[GenRequest],
-            max_steps: int = 100_000) -> List[GenRequest]:
-        t = 0.0
-        for g in gen_requests:
-            self.submit(g, t)
-        steps = 0
-        while (self.has_work() and steps < max_steps):
-            t += 1.0
-            self.step(t)
-            steps += 1
+    def flush(self) -> None:
+        """Force-drain the token readback ring so every request's
+        ``output`` is fully materialized on the host (end of a run, or
+        before inspecting outputs mid-stream)."""
         if self._pending_drain:
             self.sync_counts["flush"] += 1
             self._drain_tokens(force=True)
-        return list(gen_requests)
+
+    def run(self, gen_requests: Sequence[GenRequest],
+            arrivals: Optional[Sequence[float]] = None,
+            max_steps: int = 100_000) -> List[GenRequest]:
+        """Serve a batch to completion — or, with ``arrivals``, an online
+        stream: each request is submitted at its arrival time on the
+        engine's iteration clock (the same contract as
+        ``EngineFleet.run``)."""
+        return serve_stream(self, gen_requests, arrivals, max_steps)
+
+
+def serve_stream(server, gen_requests: Sequence[GenRequest],
+                 arrivals: Optional[Sequence[float]] = None,
+                 max_steps: int = 100_000) -> List[GenRequest]:
+    """Drive any submit/step/has_work/flush server (a ``ServingEngine``
+    or a ``repro.cluster.EngineFleet``) over an online request stream on
+    its iteration clock: submit each request at its arrival time, step
+    while there is work, jump the clock across idle gaps, flush the
+    readback ring at the end. The single definition keeps both backends'
+    ``run(reqs, arrivals)`` semantics from drifting."""
+    if arrivals is None:
+        arrivals = [0.0] * len(gen_requests)
+    stream = sorted(zip(gen_requests, arrivals), key=lambda p: p[1])
+    t, i, steps = 0.0, 0, 0
+    while steps < max_steps:
+        while i < len(stream) and stream[i][1] <= t:
+            server.submit(stream[i][0], float(stream[i][1]))
+            i += 1
+        if not server.has_work():
+            if i >= len(stream):
+                break
+            t = max(t, float(stream[i][1]))
+            continue
+        t += 1.0
+        server.step(t)
+        steps += 1
+    server.flush()
+    return list(gen_requests)

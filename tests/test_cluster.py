@@ -1,0 +1,298 @@
+"""Cluster serving layer: routers, autoscaler hysteresis, KV-migration
+token equality, and rid conservation across instances (sim + real fleet).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (AutoscaleConfig, EngineFleet, GoodputAutoscaler,
+                           ROUTERS, make_router)
+from repro.cluster.sim import ClusterSim
+from repro.configs import get_config
+from repro.core import predictor, registry, traces
+from repro.core.costmodel import CostModel
+from repro.core.scheduler import SchedulerConfig, make_econoserve
+from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+# --------------------------------------------------------------------- #
+# routers
+# --------------------------------------------------------------------- #
+class _Stub:
+    """Minimal InstanceStats stand-in."""
+
+    def __init__(self, iid, alloc_frac=0.0, cap=4096, outstanding=0):
+        self.id = iid
+        self._alloc = alloc_frac
+        self._cap = cap
+        self._out = outstanding
+
+    def kvc_allocated_frac(self):
+        return self._alloc
+
+    def kvc_capacity_tokens(self):
+        return self._cap
+
+    def outstanding_tokens(self):
+        return self._out
+
+
+def test_round_robin_cycles_by_id():
+    r = make_router("round-robin")
+    insts = [_Stub(2), _Stub(0), _Stub(1)]
+    picks = [r.choose(insts, 10).id for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_tokens_picks_min():
+    r = make_router("least-tokens")
+    insts = [_Stub(0, outstanding=500), _Stub(1, outstanding=20),
+             _Stub(2, outstanding=300)]
+    assert r.choose(insts, 10).id == 1
+
+
+def test_least_kvc_accounts_for_demand():
+    r = make_router("least-kvc")
+    # instance 0 is less allocated but tiny: the request's demand tips it
+    insts = [_Stub(0, alloc_frac=0.10, cap=256),
+             _Stub(1, alloc_frac=0.30, cap=8192)]
+    assert r.choose(insts, 200).id == 1          # 0.10+0.78 vs 0.30+0.02
+    assert r.choose(insts, 8).id == 0            # 0.13 vs 0.30
+
+
+@pytest.mark.parametrize("name", ROUTERS)
+def test_router_determinism_under_seeded_ties(name):
+    """Identical state + identical seed => identical choice sequences,
+    even when every candidate ties."""
+    def run(seed):
+        r = make_router(name, seed=seed)
+        insts = [_Stub(i, alloc_frac=0.5, outstanding=100)
+                 for i in range(4)]
+        return [r.choose(insts, 64).id for _ in range(12)]
+
+    assert run(3) == run(3)
+    seqs = {tuple(run(s)) for s in range(8)}
+    if name != "round-robin":                    # ties actually random
+        assert len(seqs) > 1
+
+
+# --------------------------------------------------------------------- #
+# autoscaler
+# --------------------------------------------------------------------- #
+def _feed(scaler, t, met, n=1, n_live=2, load=0.5):
+    acts = []
+    for _ in range(n):
+        scaler.record(met)
+        acts.append(scaler.decide(t, n_live=n_live, load_frac=load))
+    return acts
+
+
+def test_autoscaler_scales_up_on_attainment_drop():
+    cfg = AutoscaleConfig(window=8, min_window=4, patience=2, cooldown=10.0)
+    sc = GoodputAutoscaler(cfg)
+    for i in range(8):
+        sc.record(True)
+    assert sc.decide(0.0, n_live=1, load_frac=0.9) == 0   # healthy
+    acts = []
+    t = 100.0
+    for i in range(10):
+        sc.record(False)
+        acts.append(sc.decide(t + i, n_live=1, load_frac=0.9))
+    assert acts.count(+1) == 1                   # exactly one action
+    assert sc.events and sc.events[0][1] == +1
+
+
+def test_autoscaler_no_flap_on_step_load_change():
+    """Load steps up -> one scale-up; the recovered (high) attainment must
+    NOT immediately drain the new instance while it is still loaded."""
+    cfg = AutoscaleConfig(window=8, min_window=4, patience=2,
+                          cooldown=50.0, down_load_cap=0.7)
+    sc = GoodputAutoscaler(cfg)
+    t = 0.0
+    # degraded attainment -> scale up once
+    ups = _feed(sc, t, met=False, n=10, n_live=1, load=0.95)
+    assert ups.count(+1) == 1
+    # recovery: attainment back to 1.0 but survivors would be overloaded
+    t = 10.0
+    acts = []
+    for i in range(30):
+        sc.record(True)
+        acts.append(sc.decide(t + i, n_live=2, load_frac=0.6))
+    # projected load on 1 survivor = 1.2 > cap -> no drain, no flap
+    assert all(a == 0 for a in acts)
+    assert [d for _, d in sc.events] == [+1]
+
+
+def test_autoscaler_drains_idle_capacity():
+    cfg = AutoscaleConfig(window=8, min_window=4, patience=2,
+                          cooldown=5.0, down_load_cap=0.7)
+    sc = GoodputAutoscaler(cfg)
+    acts = []
+    for i in range(10):
+        sc.record(True)
+        acts.append(sc.decide(100.0 + i, n_live=3, load_frac=0.1))
+    assert acts.count(-1) == 1
+
+
+def test_autoscaler_cooldown_blocks_consecutive_actions():
+    cfg = AutoscaleConfig(window=4, min_window=2, patience=1,
+                          cooldown=100.0)
+    sc = GoodputAutoscaler(cfg)
+    a1 = _feed(sc, 0.0, met=False, n=5, n_live=1)
+    assert a1.count(+1) == 1
+    # still degraded, but inside the cooldown window
+    a2 = _feed(sc, 50.0, met=False, n=5, n_live=2)
+    assert a2.count(+1) == 0
+    a3 = _feed(sc, 200.0, met=False, n=5, n_live=2)
+    assert a3.count(+1) == 1
+
+
+# --------------------------------------------------------------------- #
+# cluster simulator
+# --------------------------------------------------------------------- #
+def _sim_trace(n, rate=6.0, seed=0, accuracy=0.75):
+    reqs = traces.generate(traces.SHAREGPT, n, seed=seed, rate=rate)
+    predictor.annotate(reqs, predictor.NoisyPredictor(accuracy=accuracy,
+                                                      seed=seed), 0.15)
+    return reqs
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+def test_cluster_sim_conservation(router):
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=3, router=router, seed=0)
+    res = cs.run(_sim_trace(200))
+    cons = res.conservation()
+    assert cons["ok"], cons
+    assert res.n_migrations == 0                 # unified: no roles
+    # load actually spread: no instance served everything
+    share = [len(v) for v in res.completed_by.values()]
+    assert max(share) < 200 and sum(share) == 200
+
+
+def test_cluster_sim_disagg_roles_migrate_every_request():
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=2, router="least-kvc",
+                    roles=("prefill", "decode"), seed=0)
+    reqs = _sim_trace(150, rate=4.0)
+    res = cs.run(reqs)
+    cons = res.conservation()
+    assert cons["ok"], cons
+    # every request whose RL > 1 crossed the prefill->decode boundary
+    assert res.n_migrations >= sum(1 for r in reqs if r.true_rl > 1)
+    # decode-side completions only (RL==1 requests may finish at prefill)
+    assert len(res.completed_by[1]) >= res.n_migrations
+
+
+def test_cluster_sim_registry_front_door():
+    res = registry.run_cluster("econoserve", _sim_trace(120),
+                               n_instances=2, router="round-robin", seed=1)
+    assert res.conservation()["ok"]
+    assert res.goodput > 0
+
+
+def test_cluster_sim_autoscaler_step_load_no_flap():
+    """A rate step that overloads one instance must scale up (>=1) and
+    never oscillate up->down->up."""
+    cost = CostModel()
+    scaler = GoodputAutoscaler(AutoscaleConfig(
+        window=24, min_window=8, patience=2, cooldown=25.0,
+        max_instances=4))
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=1, router="least-kvc", seed=0,
+                    autoscaler=scaler)
+    res = cs.run(_sim_trace(400, rate=12.0))
+    assert res.conservation()["ok"]
+    dirs = [d for _, d in res.scale_events]
+    assert dirs.count(+1) >= 1
+    for a, b in zip(dirs, dirs[1:]):             # no direction flip-flop
+        assert not (a == -1 and b == +1), res.scale_events
+
+
+# --------------------------------------------------------------------- #
+# real-engine fleet
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+
+def _gen_reqs(cfg, n=6, seed=5):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(8, 24)))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(4, 10)),
+                              temperature=0.0))
+        for _ in range(n)]
+
+
+def test_fleet_conservation_unified(tiny_cfg):
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0)
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=8))
+    cons = fleet.conservation()
+    assert cons["ok"], cons
+    assert all(g.t_done is not None for g in reqs)
+    # both instances actually served something
+    served = [len(i.engine.scheduler.completed) for i in fleet.instances]
+    assert min(served) > 0
+
+
+def test_fleet_kv_migration_token_equality(tiny_cfg):
+    """A request migrated prefill→decode produces a greedy token stream
+    identical to the same request served on a single engine — both for
+    the KV-image path and the swap-recompute fallback."""
+    fleet = EngineFleet(tiny_cfg, n_instances=2,
+                        roles=("prefill", "decode"), router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0)
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg)
+    ref.run(ref_reqs)
+    ref_out = [g.output for g in ref_reqs]
+    assert all(len(o) > 0 for o in ref_out)
+
+    out = [g.output for g in fleet.run(_gen_reqs(tiny_cfg))]
+    assert out == ref_out
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["migrations"] == len(ref_reqs), cons
+    assert fleet.n_kv_fallbacks == 0             # KV images actually moved
+
+    fb = EngineFleet(tiny_cfg, n_instances=2, roles=("prefill", "decode"),
+                     router="round-robin", seed=0, kv_migration=False,
+                     max_batch=4, capacity=256, rl_accuracy=1.0)
+    out_fb = [g.output for g in fb.run(_gen_reqs(tiny_cfg))]
+    assert out_fb == ref_out
+    assert fb.n_kv_fallbacks == fb.n_migrations > 0
+
+
+def test_fleet_engine_export_inject_roundtrip(tiny_cfg):
+    """Unit-level: export removes the request from the source engine
+    (scheduler + slots + KVC) and inject registers it on the target."""
+    src = ServingEngine(tiny_cfg, max_batch=4, capacity=256,
+                        rl_accuracy=1.0, seed=0)
+    dst = ServingEngine(tiny_cfg, params=src.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=1)
+    g = _gen_reqs(tiny_cfg, n=1)[0]
+    t = 0.0
+    src.submit(g, t)
+    while not src.scheduler.gt_queue:
+        t += 1.0
+        src.step(t)
+    rid = next(iter(src.scheduler.gt_queue)).rid
+    payload = src.export_kv(rid)
+    assert not src.has_work()
+    assert rid not in src.slot_of and rid not in src.scheduler.kvc.allocs
+    assert payload["kv"] is not None and payload["ctx"] == len(g.prompt)
+    new_rid = dst.inject_kv(payload, t)
+    assert dst.has_work()
+    assert new_rid in dst.slot_of                # KV path seeded a slot
+    while dst.has_work() and t < 200:
+        t += 1.0
+        dst.step(t)
+    assert g.t_done is not None
+    assert len(g.output) == g.params.max_new_tokens

@@ -63,9 +63,14 @@ _SUBPROC = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_small_mesh_dryrun_subprocess():
+    # JAX_PLATFORMS=cpu must reach the subprocess from the outside too:
+    # the in-script assignment runs before `import jax`, but some jax
+    # versions probe TPU metadata from the plugin discovery path, which
+    # stalls ~8 min on CPU boxes — the env var is the supported switch
     r = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
                        text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
     out = json.loads(line[len("RESULT"):])
