@@ -1,13 +1,16 @@
 """Hot-path microbenchmarks: scheduler form_batch throughput (legacy full
-re-sort vs incremental OrderedQueue with O(1) removal), steady-state
-decode-loop throughput (legacy host-synced vs fused async device-resident)
-with host-blocking-sync counts per iteration, decode-megastep dispatch
-amortization (K fused iterations per dispatch vs one), chunked-prefill
-per-iteration stall bounds under a long-prompt + decode mixed wave, engine
-prefill retrace count under token packing, cluster-layer conservation
-(2-instance real fleet + disaggregated KV-migration pair + ClusterSim,
-every routed request completing exactly once), and paged-attention kernel
-step time single- vs multi-page.
+re-sort vs incremental OrderedQueue with O(1) removal and a skip-list
+priority index), steady-state decode-loop throughput (legacy host-synced
+vs fused async device-resident) with host-blocking-sync counts per
+iteration, decode-megastep dispatch amortization (K fused iterations per
+dispatch vs one) both at empty queues and under a KVC-saturated workload
+whose queues stay non-empty (the pressure-aware horizon), packed
+multi-request chunk waves (>= 2 chunk grants in ONE prefill dispatch),
+chunked-prefill per-iteration stall bounds under a long-prompt + decode
+mixed wave, engine prefill retrace count under token packing,
+cluster-layer conservation (2-instance real fleet + disaggregated
+KV-migration pair + ClusterSim, every routed request completing exactly
+once), and paged-attention kernel step time single- vs multi-page.
 
 Emits before/after numbers to ``BENCH_hotpath.json`` at the repo root —
 the baseline the acceptance criteria check against:
@@ -231,6 +234,137 @@ def bench_decode_megastep(decode_iters: int = 240, seed: int = 0) -> Dict:
     out["dispatch_amortization"] = round(
         out["per_iteration"]["dispatches_per_iter"]
         / max(out["megastep_8"]["dispatches_per_iter"], 1e-9), 1)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 3b. pressure megastep: windows stay fused while the queues are
+#     KVC-blocked (the saturated regime every figure benchmark runs in)
+# --------------------------------------------------------------------- #
+def bench_pressure_megastep(measure_iters: int = 60, seed: int = 0) -> Dict:
+    """KVC-saturated steady state: 4 running requests exact-allocate the
+    whole KVC while 8 more wait, so queues stay non-empty through the
+    measured window. Before the pressure-aware horizon the megastep
+    collapsed to K=1 here (~1x amortization, 1 dispatch/iteration); the
+    no-admission certificate keeps windows fused, and both engines must
+    produce identical token streams. Counter-based, gated by --check."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                               ServingEngine)
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+    mb = 8
+    scfg = SchedulerConfig(kvc_tokens=512, block_size=16, tfs=256,
+                           max_model_len=256, max_batch_reqs=mb,
+                           reserve_frac=0.0, pad_ratio=0.0, bucket=16)
+    out: Dict = {}
+    streams = {}
+    for label, k in (("per_iteration", 1), ("megastep_8", 8)):
+        eng = ServingEngine(cfg, max_batch=mb, capacity=256,
+                            rl_accuracy=1.0, seed=seed, scheduler_cfg=scfg,
+                            engine_cfg=EngineConfig(decode_megastep=k))
+        rng = np.random.default_rng(seed)
+        # 16-token prompt + 112 predicted RL = 8 blocks; 4 fill the
+        # 32-block KVC exactly, 8 wait KVC-blocked
+        reqs = [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 16)),
+                           params=SamplingParams(max_new_tokens=112))
+                for _ in range(12)]
+        t = 0.0
+        for g in reqs:
+            eng.submit(g, t)
+        for _ in range(40):                 # admit + compile + settle
+            t += 1.0
+            eng.step(t)
+        base_iters = eng.decode_iters
+        base_disp = eng.n_decode_dispatches
+        qmin = 10 ** 9
+        t0 = time.perf_counter()
+        for _ in range(measure_iters):
+            t += 1.0
+            eng.step(t)
+            s = eng.scheduler
+            qmin = min(qmin, len(s.pt_queue) + len(s.gt_queue))
+        dt = time.perf_counter() - t0
+        n = eng.decode_iters - base_iters
+        disp = eng.n_decode_dispatches - base_disp
+        while eng.has_work() and t < 5000:   # drain for token equality
+            t += 1.0
+            eng.step(t)
+        eng.flush()
+        streams[label] = [g.output for g in reqs]
+        out[label] = {
+            "iters": n, "seconds": round(dt, 4),
+            "iters_per_s": round(n / dt, 1),
+            "dispatches": disp,
+            "dispatches_per_iter": round(disp / max(n, 1), 4),
+            "min_queued_during_window": qmin,
+        }
+    out["queues_nonempty_throughout"] = (
+        out["per_iteration"]["min_queued_during_window"] >= 1
+        and out["megastep_8"]["min_queued_during_window"] >= 1)
+    out["tokens_equal"] = streams["per_iteration"] == streams["megastep_8"]
+    out["dispatch_amortization"] = round(
+        out["per_iteration"]["dispatches_per_iter"]
+        / max(out["megastep_8"]["dispatches_per_iter"], 1e-9), 1)
+    out["note"] = ("pre-PR5 the horizon returned 1 whenever a queue was "
+                   "non-empty, so this workload ran at 1 dispatch/iter; "
+                   "the KVC-bound certificate keeps windows fused")
+    return out
+
+
+# --------------------------------------------------------------------- #
+# 3c. packed chunk prefill: a >= 2-chunked-request wave in ONE dispatch
+# --------------------------------------------------------------------- #
+def bench_packed_chunk(seed: int = 0) -> Dict:
+    """Several long prompts admitted together under a small TFS produce
+    iterations granting chunks to >= 2 requests. The packed path must run
+    each such wave as ONE prefill dispatch (per-segment prefix views +
+    block-diagonal masking) with token streams identical to the
+    one-call-per-chunk reference. Counter-based, gated by --check."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                               ServingEngine)
+
+    cfg = get_config("qwen3_8b").reduced().with_(dtype="float32",
+                                                 param_dtype="float32")
+    mb, cap, tfs = 4, 256, 64
+    out: Dict = {}
+    streams = {}
+    for label, packed in (("per_chunk_call", False), ("packed", True)):
+        scfg = SchedulerConfig(kvc_tokens=mb * cap, block_size=32, tfs=tfs,
+                               max_model_len=cap, max_batch_reqs=mb)
+        eng = ServingEngine(cfg, max_batch=mb, capacity=cap,
+                            rl_accuracy=1.0, seed=seed, scheduler_cfg=scfg,
+                            engine_cfg=EngineConfig(
+                                packed_chunk_prefill=packed))
+        rng = np.random.default_rng(seed)
+        reqs = [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size, L)),
+            params=SamplingParams(max_new_tokens=6))
+            for L in (96, 80, 72)]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        streams[label] = [g.output for g in reqs]
+        out[label] = {
+            "n_prefill_chunks": eng.n_prefill_chunks,
+            "n_chunk_dispatches": eng.n_chunk_calls,
+            "max_chunk_items_per_dispatch": eng.max_chunk_items_per_call,
+            "seconds": round(dt, 2),
+        }
+    out["tokens_equal"] = streams["per_chunk_call"] == streams["packed"]
+    out["wave_packed"] = out["packed"]["max_chunk_items_per_dispatch"] >= 2
+    out["dispatches_saved"] = (out["per_chunk_call"]["n_chunk_dispatches"]
+                               - out["packed"]["n_chunk_dispatches"])
+    out["note"] = ("the reference path pays one model call per chunked "
+                   "request per iteration; packing flattens the wave into "
+                   "one (1, T) call with per-segment cache-prefix views")
     return out
 
 
@@ -539,6 +673,9 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "decode_loop": bench_decode_loop(decode_iters=60 if quick else 300),
         "decode_megastep": bench_decode_megastep(
             decode_iters=60 if quick else 240),
+        "pressure_megastep": bench_pressure_megastep(
+            measure_iters=40 if quick else 60),
+        "packed_chunk": bench_packed_chunk(),
         "chunked_prefill": bench_chunked_prefill(
             plen=128 if quick else 256, chunk_tfs=32 if quick else 64),
         "form_batch": bench_form_batch(n_reqs=n, iters=iters),
@@ -601,6 +738,8 @@ def check_regression(factor: float = 2.0,
     ref = base.get("quick_reference")
     res = {"decode_loop": bench_decode_loop(decode_iters=60),
            "decode_megastep": bench_decode_megastep(decode_iters=60),
+           "pressure_megastep": bench_pressure_megastep(measure_iters=40),
+           "packed_chunk": bench_packed_chunk(),
            "chunked_prefill": bench_chunked_prefill(plen=128, chunk_tfs=32)}
     res["cluster"] = bench_cluster(n_reqs=8, sim_reqs=200)
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
@@ -634,6 +773,39 @@ def check_regression(factor: float = 2.0,
     if mega_blocking > 0.05:
         failures.append(f"decode_megastep: {mega_blocking} blocking "
                         f"syncs/iter in steady state (expected 0)")
+    # pressure megastep: fused windows under a KVC-saturated workload
+    # whose queues stay non-empty throughout (pre-PR5 this ran at ~1
+    # dispatch/iteration), tokens equal to the per-iteration path
+    pm = res["pressure_megastep"]
+    if not pm["queues_nonempty_throughout"]:
+        failures.append("pressure_megastep: workload lost pressure (a "
+                        "queue drained during the measured window) — the "
+                        "gate no longer tests the saturated regime")
+    pdpi = pm["megastep_8"]["dispatches_per_iter"]
+    if pdpi > 0.5:
+        failures.append(f"pressure_megastep: {pdpi} dispatches/iter under "
+                        f"KVC pressure (expected ~{1 / 8:.3f}, gate 0.5) "
+                        f"— windows collapsing when queues are non-empty")
+    if pm["dispatch_amortization"] < 4.0:
+        failures.append(f"pressure_megastep: amortization "
+                        f"{pm['dispatch_amortization']}x < 4x under "
+                        f"KVC pressure")
+    if not pm["tokens_equal"]:
+        failures.append("pressure_megastep: token streams diverged from "
+                        "the per-iteration path")
+    # packed chunk prefill: a >= 2-chunked-request wave must run as ONE
+    # dispatch with tokens equal to the per-chunk-call reference
+    pc = res["packed_chunk"]
+    if not pc["wave_packed"]:
+        failures.append("packed_chunk: no multi-request chunk wave ran as "
+                        "a single dispatch (max items/dispatch "
+                        f"{pc['packed']['max_chunk_items_per_dispatch']})")
+    if pc["dispatches_saved"] < 1:
+        failures.append("packed_chunk: packing saved no dispatches vs the "
+                        "per-chunk-call path")
+    if not pc["tokens_equal"]:
+        failures.append("packed_chunk: token streams diverged from the "
+                        "per-chunk-call path")
     ck = res["chunked_prefill"]
     chunk_key = next(k for k in ck if k.startswith("chunked_"))
     if ck[chunk_key]["n_chunks"] < 2:
@@ -671,8 +843,11 @@ def check_regression(factor: float = 2.0,
           f"form_batch {res['form_batch']['speedup']}x, "
           f"decode_loop {res['decode_loop']['speedup']}x, "
           f"megastep {res['decode_megastep']['dispatch_amortization']}x "
-          f"dispatch amortization, chunked TTFT bounded, cluster "
-          f"conservation + migration equality hold "
+          f"dispatch amortization "
+          f"({res['pressure_megastep']['dispatch_amortization']}x under "
+          f"KVC pressure), packed chunk wave saved "
+          f"{res['packed_chunk']['dispatches_saved']} dispatches, chunked "
+          f"TTFT bounded, cluster conservation + migration equality hold "
           f"(quick baselines: {ref})")
     return 0
 

@@ -71,6 +71,10 @@ class SchedulerConfig:
     # re-sorts; batch decisions are identical either way (tested) — False
     # keeps the reference path for determinism checks and benchmarks
     incremental_queues: bool = True
+    # priority-index structure inside OrderedQueue: "skiplist" (O(log n)
+    # insert/remove) or the legacy bisected "list" (O(n) memmove each);
+    # decisions are bitwise identical either way (tested)
+    queue_index: str = "skiplist"
 
 
 class BaseScheduler:
@@ -191,29 +195,55 @@ class BaseScheduler:
         admission, KVC allocation, under-provision, preemption, or
         pipelining event can fire before the horizon's last
         ``finish_iteration``. EOS-driven completions *inside* the horizon
-        only ever shrink the batch (queues are empty, so freed KVC admits
-        nothing), which an engine replaying iterations against precomputed
-        results handles without re-planning.
+        only ever shrink the batch when the queues are empty; under memory
+        pressure (non-empty queues certified KVC-blocked by
+        ``_admission_horizon``) an EOS completion frees KVC that could
+        admit a waiter, so an engine fusing a pressure window must
+        truncate it at the first EOS (``ServingEngine`` does — the device
+        while_loop early-exits and the host replays only the iterations
+        that ran).
 
         This is what lets an engine fuse K decode iterations into one
         device dispatch while the per-iteration scheduler replay stays
         bitwise-identical: events are provably absent from the window, so
-        each replayed ``form_batch`` returns the same membership.
+        each replayed ``form_batch`` returns the same membership. The
+        horizon may only ever *underestimate* (a shorter window is always
+        correct, just slower).
         """
         if max_k <= 1 or plan.prompt_items or not plan.decode_reqs:
             return 1
+        k = max_k
         if self.pt_queue or self.gt_queue:
-            return 1            # admissions possible any iteration
+            # non-empty queues: fuse only as far as the KVC-bound
+            # no-admission certificate reaches (policies without one
+            # certify nothing and fall back to per-iteration dispatch)
+            k = min(k, self._admission_horizon(max_k))
         pipe = getattr(self, "pipe", None)
         if pipe is not None and pipe.active:
-            return 1            # hosted-slot deadlines can preempt
-        k = max_k
+            # hosted-slot deadlines preempt at a *known* owner age — fuse
+            # up to (not past) the earliest expiry
+            k = min(k, self._pipe_expiry_horizon(pipe, max_k))
+        if k <= 1:
+            return 1
         for r in plan.decode_reqs:
             # completion at true_rl (EOS may land earlier: handled by the
             # replay); under-provision (rescue/preempt) at alloc_rl
             k = min(k, max(1, r.true_rl - r.generated),
                     max(1, r.alloc_rl - r.generated))
         return k
+
+    def _admission_horizon(self, max_k: int) -> int:
+        """Iterations (starting with the one just planned) during which
+        provably nothing in the waiting queues can be admitted, assuming
+        no completion / under-provision / pipelining event fires earlier
+        (``decode_horizon`` bounds those separately). Base policies have
+        no certificate: 1 (this iteration already admitted nothing)."""
+        return 1
+
+    def _pipe_expiry_horizon(self, pipe, max_k: int) -> int:
+        """Iterations until the earliest hosted-slot deadline can fire.
+        Base policies are conservative: 1 (the old always-bail rule)."""
+        return 1
 
     def _pt_finished(self, req: Request, t: float) -> None:
         """Prompt fully processed → request becomes a queued GT. The PT
@@ -252,8 +282,8 @@ class EconoServeScheduler(BaseScheduler):
         self.zombies: Dict[int, List[Request]] = {}   # host rid -> children
         self.host_of: Dict[int, Request] = {}
         if cfg.ordering and cfg.incremental_queues:
-            self.pt_queue = OrderedQueue(is_gt=False)
-            self.gt_queue = OrderedQueue(is_gt=True)
+            self.pt_queue = OrderedQueue(is_gt=False, index=cfg.queue_index)
+            self.gt_queue = OrderedQueue(is_gt=True, index=cfg.queue_index)
 
     @staticmethod
     def _age_of(req: Request) -> int:
@@ -264,6 +294,86 @@ class EconoServeScheduler(BaseScheduler):
     def _buffer_tokens(self, rl: int) -> int:
         return max(self.cfg.block_size,
                    int(math.ceil(rl * self.cfg.buffer_frac)))
+
+    # -------------------------------------------------------------- #
+    # pressure-proof megastep certificates (decode_horizon hooks)
+    # -------------------------------------------------------------- #
+    def _admission_horizon(self, max_k: int) -> int:
+        """Conservative KVC-bound certificate: during a pure-decode window
+        the KVC counters are frozen (exact allocation — ``used`` grows,
+        ``allocated`` does not, and the caller excludes completion /
+        under-provision / pipelining events from the window), so any
+        admission blocker that is *independent of queue ordering* extends
+        from "blocked now" to "blocked for the whole window". O(1) counter
+        reads except the two explicitly-noted queue scans, which run once
+        per window (not per iteration).
+
+        Ordering-dependent outcomes (deadline buckets roll with t, so a
+        different head may be picked at a later iteration) can never be
+        certified — whenever free KVC could fund *any* pick we bail to 1.
+        """
+        kvc = self.kvc
+        if self.pt_queue:
+            # _fill_pts admits iff budget >= 1 AND kvc_avail >= 1 AND the
+            # picked head is either resident (mid-chunk, exempt from the
+            # concurrency cap) or under the cap. budget and residency are
+            # frozen during the window; kvc_avail = reserve + (general
+            # when no GT waits) is frozen too.
+            budget = self.cfg.tfs - len(self.running_gts)
+            if budget >= 1:
+                fundable = kvc.free_reserve > 0 or (
+                    not self.gt_queue and kvc.free_general > 0)
+                if fundable:
+                    if len(kvc.allocs) < self.cfg.max_batch_reqs:
+                        return 1
+                    # cap reached: only a resident (KVC-holding) PT can be
+                    # granted; the pick is ordering-dependent, so any
+                    # resident waiter voids the certificate (queue scan)
+                    if any(kvc.allocated_tokens(r.rid) > 0
+                           for r in self.pt_queue):
+                        return 1
+        if self.gt_queue:
+            # _fill_gts admits a queued GT iff its exact-allocation demand
+            # (prompt + generated + remaining_predicted - already-held,
+            # all frozen while the GT waits) fits the general pool, and —
+            # for GTs holding no allocation (swapped/migrated) — the
+            # concurrency cap has room. Ordering only changes *which*
+            # admissible candidate goes first, so "no candidate is
+            # admissible" is t-independent and certifies the window
+            # (queue scan, once per window)
+            if kvc.free_general > 0:
+                cap_full = len(kvc.allocs) >= self.cfg.max_batch_reqs
+                for r in self.gt_queue:
+                    if cap_full and r.rid not in kvc.allocs:
+                        continue     # _schedule_gt_member's cap rejects it
+                    need = (r.prompt_len + r.generated
+                            + r.remaining_predicted) \
+                        - kvc.allocated_tokens(r.rid)
+                    if blocks_for(need, self.cfg.block_size) \
+                            <= kvc.free_general:
+                        return 1
+            if self.cfg.pipelining and self.pipe.open_slots:
+                # hosted placement: open-slot capacity *shrinks* as owners
+                # age (1 token/iteration) while queued demand is frozen,
+                # so "cheapest demand exceeds the largest slot now"
+                # certifies the whole window (queue scan)
+                cap = self.pipe.max_hostable(self._age_of)
+                if cap >= 1 and any(max(1, r.remaining_predicted) <= cap
+                                    for r in self.gt_queue):
+                    return 1
+        return max_k
+
+    def _pipe_expiry_horizon(self, pipe, max_k: int) -> int:
+        """A hosted slot expires at the ``finish_iteration`` where its
+        owner's run age reaches ``deadline_age`` — deterministic, so the
+        window may extend through (not past) the earliest expiry.
+        Completed (zombie) owners stop aging and never expire."""
+        k = max_k
+        for s in pipe.active:
+            if s.child is None or s.owner.state != State.RUNNING_GT:
+                continue
+            k = min(k, max(1, s.deadline_age - self._age_of(s.owner)))
+        return k
 
     def _sorted_gt_queue(self, t: float) -> List[Request]:
         if self.cfg.ordering:

@@ -117,6 +117,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     segment_ids: Optional[jax.Array] = None,
+                    kv_segment_ids: Optional[jax.Array] = None,
                     q_positions: Optional[jax.Array] = None,
                     kv_positions: Optional[jax.Array] = None,
                     block_q: int = 128, block_k: int = 128,
@@ -135,9 +136,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     explicit token positions (chunked prefill: the key axis is a seeded
     cache-prefix view plus the chunk, so Sq != Sk is allowed and invalid
     key slots carry ``POS_INVALID``). Both must be given together.
+
+    ``kv_segment_ids`` (B,Sk) gives the key axis its own segment array
+    (packed *multi-request* chunked prefill: the key axis is several
+    requests' cache-prefix views plus the packed chunk wave, so segment
+    arrays differ per side). Requires ``segment_ids``; defaults to it.
     """
     assert (q_positions is None) == (kv_positions is None)
     has_positions = q_positions is not None
+    assert kv_segment_ids is None or segment_ids is not None
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
     assert has_positions or Sq == Sk, \
@@ -157,7 +164,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if segment_ids is not None:
         # pad q segment -1 / pad k segment -2: pad rows never match
         seg_q = _pad1(segment_ids, pad_q, -1)
-        seg_k = _pad1(segment_ids, pad_k, -2)
+        seg_k = _pad1(kv_segment_ids if kv_segment_ids is not None
+                      else segment_ids, pad_k, -2)
     if has_positions:
         # pad queries attend nothing (their rows are sliced off); pad keys
         # carry the invalid sentinel, masked by causality

@@ -25,7 +25,8 @@ def _interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "block_q", "block_k"))
 def flash_attention(q, k, v, segment_ids=None, q_positions=None,
-                    kv_positions=None, *, causal: bool = True,
+                    kv_positions=None, kv_segment_ids=None, *,
+                    causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128):
@@ -39,11 +40,17 @@ def flash_attention(q, k, v, segment_ids=None, q_positions=None,
     switch to explicit-position masking and allow Sq != Sk — the
     chunked-prefill path, where the key axis is a seeded cache-prefix view
     concatenated with the chunk (invalid prefix slots carry
-    ``flash_prefill.POS_INVALID``)."""
+    ``flash_prefill.POS_INVALID``).
+
+    ``kv_segment_ids`` (B,Sk) (optional, with ``segment_ids``) gives the
+    key axis its own segment array — the packed multi-request chunk path,
+    where several requests' prefix views plus their packed chunks share
+    one call."""
     bq = min(block_q, max(16, q.shape[1]))
     bk = min(block_k, max(16, k.shape[1]))
     return _flash_pallas(q, k, v, causal=causal, window=window,
                          softcap=softcap, segment_ids=segment_ids,
+                         kv_segment_ids=kv_segment_ids,
                          q_positions=q_positions, kv_positions=kv_positions,
                          block_q=bq, block_k=bk,
                          interpret=_interpret())

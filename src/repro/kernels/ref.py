@@ -21,6 +21,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     segment_ids: Optional[jax.Array] = None,
+                    kv_segment_ids: Optional[jax.Array] = None,
                     q_positions: Optional[jax.Array] = None,
                     kv_positions: Optional[jax.Array] = None) -> jax.Array:
     """q (B,Sq,H,hd); k/v (B,Sk,K,hd) with H a multiple of K (GQA).
@@ -28,7 +29,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``segment_ids`` (B,S) makes the mask block-diagonal (token packing).
     ``q_positions``/``kv_positions`` (B,Sq)/(B,Sk) drive the mask instead
     of the iota and allow Sq != Sk (chunked prefill over a cache prefix;
-    invalid key slots carry a huge sentinel that causality masks)."""
+    invalid key slots carry a huge sentinel that causality masks).
+    ``kv_segment_ids`` (B,Sk) gives the key axis its own segment array
+    (packed multi-request chunked prefill)."""
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
     K = k.shape[2]
@@ -54,7 +57,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if mask.ndim == 2:
         mask = jnp.broadcast_to(mask[None], (B, Sq, Sk))
     if segment_ids is not None:
-        mask &= segment_ids[:, :, None] == segment_ids[:, None, :]
+        seg_k = kv_segment_ids if kv_segment_ids is not None else segment_ids
+        mask &= segment_ids[:, :, None] == seg_k[:, None, :]
     logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", w, vf)

@@ -60,7 +60,8 @@ def _project_qkv(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
 def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
                pos_q: jax.Array, pos_k: jax.Array, cfg: ModelConfig,
                block_q: int = 512, block_k: int = 1024,
-               segment_ids: Optional[jax.Array] = None) -> jax.Array:
+               segment_ids: Optional[jax.Array] = None,
+               kv_segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """Streaming (flash-style) attention in pure jnp: double lax.scan with
     online softmax — O(S) memory instead of the S^2 logits tensor, and the
     q-block body is rematerialized in the backward pass. This is the XLA
@@ -68,6 +69,9 @@ def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
 
     ``segment_ids`` (B, S) restricts attention to equal segments (token-
     packed prefill: a block-diagonal mask over concatenated prompts).
+    ``kv_segment_ids`` (B, Sk) gives the key axis its own segment array
+    (packed multi-request chunked prefill, where the key axis carries
+    several requests' prefix views plus their chunks).
     """
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
@@ -77,7 +81,8 @@ def _flash_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
     bk = min(block_k, Sk)
     pq = (-Sq) % bq
     pk = (-Sk) % bk
-    seg_q = seg_k = segment_ids
+    seg_q = segment_ids
+    seg_k = kv_segment_ids if kv_segment_ids is not None else segment_ids
     if pq:
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
         pos_q = jnp.pad(pos_q, ((0, 0), (0, pq)), constant_values=-1)
@@ -172,7 +177,9 @@ def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
                  kv_heads: Optional[int] = None, impl: str = "xla",
                  prefix_k: Optional[jax.Array] = None,
                  prefix_v: Optional[jax.Array] = None,
-                 prefix_len: Optional[jax.Array] = None
+                 prefix_len: Optional[jax.Array] = None,
+                 prefix_positions: Optional[jax.Array] = None,
+                 prefix_segment_ids: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """``segment_ids`` (B, S) enables token-packed prefill: several prompts
     concatenated along the sequence axis attend block-diagonally (equal
@@ -184,6 +191,15 @@ def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     placement — token p at slot p, already RoPE'd) and then causally over
     the chunk itself, whose ``positions`` are absolute (offset by the
     prefix). Returns only the *chunk's* K/V for seeding.
+
+    Packed multi-request chunked prefill combines both: ``segment_ids``
+    marks each chunk's tokens, ``prefix_k``/``prefix_v`` concatenate the
+    requests' cache-prefix views along the key axis, and
+    ``prefix_positions``/``prefix_segment_ids`` (B, C) replace the
+    scalar ``prefix_len`` — per-prefix-slot positions (``POS_INVALID``
+    beyond each request's seeded prefix) and owning segment ids. Every
+    chunk then attends over its own prefix view plus itself, block-
+    diagonally, in ONE rectangular call.
     """
     B, S, _ = x.shape
     nkv = kv_heads or cfg.num_kv_heads
@@ -194,26 +210,38 @@ def attn_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         # concatenated with the chunk; invalid prefix slots carry the
         # POS_INVALID sentinel, which causality masks
         C = prefix_k.shape[1]
-        slot = jnp.arange(C)
-        kpos_prefix = jnp.where(slot < prefix_len, slot, POS_INVALID)
-        kpos = jnp.concatenate(
-            [jnp.broadcast_to(kpos_prefix[None], (B, C)), positions], axis=1)
+        if prefix_positions is not None:
+            kpos_prefix = jnp.broadcast_to(prefix_positions, (B, C))
+        else:
+            slot = jnp.arange(C)
+            kpos_prefix = jnp.broadcast_to(
+                jnp.where(slot < prefix_len, slot, POS_INVALID)[None],
+                (B, C))
+        kpos = jnp.concatenate([kpos_prefix, positions], axis=1)
+        kseg = None
+        if segment_ids is not None:
+            kseg = jnp.concatenate(
+                [jnp.broadcast_to(prefix_segment_ids, (B, C)), segment_ids],
+                axis=1)
         k_all = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
         v_all = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
         if impl == "pallas":
             from repro.kernels import ops
-            out = ops.flash_attention(q, k_all, v_all, None, positions,
-                                      kpos, causal=True,
+            out = ops.flash_attention(q, k_all, v_all, segment_ids,
+                                      positions, kpos, kseg, causal=True,
                                       window=cfg.sliding_window,
                                       softcap=cfg.attn_logit_softcap)
         elif C + S > FLASH_THRESHOLD:
-            out = _flash_jnp(q, k_all, v_all, positions, kpos, cfg)
+            out = _flash_jnp(q, k_all, v_all, positions, kpos, cfg,
+                             segment_ids=segment_ids, kv_segment_ids=kseg)
         else:
             ii = positions[:, :, None]  # query positions (B,S,1)
             jj = kpos[:, None, :]       # key positions (B,1,C+S)
             mask = jj <= ii
             if cfg.sliding_window is not None:
                 mask &= jj > ii - cfg.sliding_window
+            if kseg is not None:
+                mask &= segment_ids[:, :, None] == kseg[:, None, :]
             out = _sdpa(q, k_all, v_all, mask, cfg)
     elif impl == "pallas":
         from repro.kernels import ops

@@ -142,9 +142,14 @@ def _constrain_acts(x: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------- #
 def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
                          impl: str, segment_ids=None, prefix=None,
-                         prefix_len=None):
-    """Returns (x_out, cache_slice, aux). ``prefix`` is this layer's seeded
-    cache row {'k','v'} (chunked prefill): the chunk attends over it."""
+                         prefix_len=None, prefix_positions=None,
+                         prefix_segment_ids=None):
+    """Returns (x_out, cache_slice, aux). ``prefix`` is this layer's chunk
+    resume point: for attention, the seeded cache row {'k','v'} the chunk
+    attends over (with ``prefix_len`` or per-slot ``prefix_positions`` /
+    ``prefix_segment_ids`` for the packed multi-request form); for
+    recurrent kinds, the carried state snapshot the chunk continues
+    from."""
     aux = jnp.zeros((), jnp.float32)
     if kind == ATTN:
         h = rms_norm(x, p["norm1"], cfg.rms_eps)
@@ -153,7 +158,8 @@ def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
             segment_ids=segment_ids, impl=impl,
             prefix_k=None if prefix is None else prefix["k"],
             prefix_v=None if prefix is None else prefix["v"],
-            prefix_len=prefix_len)
+            prefix_len=prefix_len, prefix_positions=prefix_positions,
+            prefix_segment_ids=prefix_segment_ids)
         x = x + y
         h = rms_norm(x, p["norm2"], cfg.rms_eps)
         if cfg.is_moe:
@@ -165,11 +171,11 @@ def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, positions,
         return x + y, {"k": k, "v": v}, aux
     h = rms_norm(x, p["norm"], cfg.rms_eps)
     if kind == MAMBA:
-        y, cache = ssm.ssm_prefill(_sub(p, "ssm/"), cfg, h)
+        y, cache = ssm.ssm_prefill(_sub(p, "ssm/"), cfg, h, init=prefix)
     elif kind == MLSTM:
-        y, cache = xlstm.mlstm_prefill(_sub(p, "cell/"), cfg, h)
+        y, cache = xlstm.mlstm_prefill(_sub(p, "cell/"), cfg, h, init=prefix)
     elif kind == SLSTM:
-        y, cache = xlstm.slstm_prefill(_sub(p, "cell/"), cfg, h)
+        y, cache = xlstm.slstm_prefill(_sub(p, "cell/"), cfg, h, init=prefix)
     else:
         raise ValueError(kind)
     return x + y, cache, aux
@@ -203,7 +209,8 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, pos,
 
 
 def _shared_attn_prefill(cfg, params, x, positions, impl, segment_ids=None,
-                         prefix=None, prefix_len=None):
+                         prefix=None, prefix_len=None, prefix_positions=None,
+                         prefix_segment_ids=None):
     scfg = cfg if not cfg.shared_attn_kv_heads else cfg.with_(
         num_kv_heads=cfg.shared_attn_kv_heads)
     p = _sub(params, "shared/")
@@ -213,7 +220,8 @@ def _shared_attn_prefill(cfg, params, x, positions, impl, segment_ids=None,
         segment_ids=segment_ids, kv_heads=scfg.num_kv_heads, impl=impl,
         prefix_k=None if prefix is None else prefix["k"],
         prefix_v=None if prefix is None else prefix["v"],
-        prefix_len=prefix_len)
+        prefix_len=prefix_len, prefix_positions=prefix_positions,
+        prefix_segment_ids=prefix_segment_ids)
     x = x + y
     h = rms_norm(x, p["norm2"], cfg.rms_eps)
     return x + mlp.mlp_apply(_sub(p, "mlp/"), h), (k, v)
@@ -259,12 +267,16 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                positions: jax.Array, impl: str,
                decode: bool = False, pos=None, caches: Optional[Cache] = None,
                segment_ids: Optional[jax.Array] = None,
-               prefix_caches: Optional[Cache] = None, prefix_len=None):
+               prefix_caches: Optional[Cache] = None, prefix_len=None,
+               prefix_positions=None, prefix_segment_ids=None):
     """Shared driver for prefill (decode=False) and decode (decode=True).
 
     ``prefix_caches``/``prefix_len`` (prefill only): per-layer seeded cache
     rows a chunk's queries attend over (chunked prefill) — threaded through
-    the layer scan exactly like decode threads its caches.
+    the layer scan exactly like decode threads its caches. The packed
+    multi-request form replaces the scalar ``prefix_len`` with per-slot
+    ``prefix_positions``/``prefix_segment_ids``; recurrent kinds instead
+    receive their carried state snapshots through the same pytree.
     """
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, List] = {k: [] for k in cfg.block_kinds()}
@@ -327,10 +339,11 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                 def body_pc(carry, xs):
                     xc, aux = carry
                     lp, lc = xs
-                    y, c2, a = _apply_block_prefill(cfg, kind, lp, xc,
-                                                    positions, impl,
-                                                    segment_ids, prefix=lc,
-                                                    prefix_len=prefix_len)
+                    y, c2, a = _apply_block_prefill(
+                        cfg, kind, lp, xc, positions, impl,
+                        segment_ids, prefix=lc, prefix_len=prefix_len,
+                        prefix_positions=prefix_positions,
+                        prefix_segment_ids=prefix_segment_ids)
                     return (y, aux + a), c2
 
                 body = jax.checkpoint(body_pc) if cfg.remat else body_pc
@@ -377,11 +390,11 @@ def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
                         sprefix = {
                             "k": prefix_caches["shared"]["k"][shared_i],
                             "v": prefix_caches["shared"]["v"][shared_i]}
-                    x, (k, v) = _shared_attn_prefill(cfg, params, x,
-                                                     positions, impl,
-                                                     segment_ids,
-                                                     prefix=sprefix,
-                                                     prefix_len=prefix_len)
+                    x, (k, v) = _shared_attn_prefill(
+                        cfg, params, x, positions, impl, segment_ids,
+                        prefix=sprefix, prefix_len=prefix_len,
+                        prefix_positions=prefix_positions,
+                        prefix_segment_ids=prefix_segment_ids)
                     shared_caches.append((k, v))
                 shared_i += 1
 
@@ -425,7 +438,8 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             segment_ids: Optional[jax.Array] = None,
             prefix_caches: Optional[Cache] = None,
-            prefix_len=None) -> Tuple[jax.Array, Cache]:
+            prefix_len=None, prefix_positions=None,
+            prefix_segment_ids=None) -> Tuple[jax.Array, Cache]:
     """Returns (logits, caches seeded with the prompt). ``last_only``
     projects only the final position — serving prefill never needs the
     (B, S, vocab) tensor.
@@ -441,19 +455,41 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     ``prefix_len`` (scalar: valid prefix slots) and absolute ``positions``
     starting at the chunk offset — each attention layer attends over its
     seeded prefix and the chunk itself, and the returned caches hold the
-    *chunk's* K/V only. Attention-pure stacks only (recurrent state has no
-    resumable prefix view; callers re-run the whole prefix instead).
+    *chunk's* K/V only.
+
+    Packed multi-request chunked prefill: additionally pass
+    ``segment_ids`` (B, T) for the packed chunk wave and, instead of the
+    scalar ``prefix_len``, per-prefix-slot ``prefix_positions`` /
+    ``prefix_segment_ids`` (B, C) — the prefix axis concatenates every
+    request's cache-prefix view; each chunk attends block-diagonally over
+    its own view plus itself. Attention-pure stacks only.
+
+    Recurrent chunked prefill (pure SSM/xLSTM stacks): ``prefix_caches``
+    carries the per-layer recurrent-state snapshots from the previous
+    chunk (the shape the prefill itself returns) — the chunk continues
+    the recurrence instead of recomputing its prefix, O(n) total across
+    chunks. Returned caches are the updated snapshots.
     """
+    kinds = set(cfg.pattern())
     if segment_ids is not None:
-        assert set(cfg.pattern()) <= {ATTN}, \
+        assert kinds <= {ATTN}, \
             "token-packed prefill requires a pure-attention stack"
         assert embeds is None, "packed prefill does not take extra embeds"
     if prefix_caches is not None:
-        assert set(cfg.pattern()) <= {ATTN}, \
-            "chunked (prefix) prefill requires a pure-attention stack"
-        assert segment_ids is None, \
-            "chunked prefill runs one request per call, not a packed wave"
-        assert positions is not None and prefix_len is not None
+        if kinds <= {ATTN}:
+            assert positions is not None
+            assert (prefix_len is not None) or (
+                prefix_positions is not None
+                and prefix_segment_ids is not None)
+            assert segment_ids is None or prefix_positions is not None, \
+                "a packed chunk wave needs per-slot prefix positions"
+        else:
+            # recurrent state resume: positions are meaningless to the
+            # recurrence and attention layers have no snapshot to resume
+            assert not (kinds & {ATTN}) and not num_shared_invocations(cfg), \
+                "chunk resume needs a pure-attention (kv prefix) or " \
+                "pure-recurrent (state snapshot) stack"
+            assert segment_ids is None
     x = embed_inputs(cfg, params, tokens, embeds)
     B, S, _ = x.shape
     if positions is None:
@@ -461,7 +497,9 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x, caches, _ = _run_stack(cfg, params, x, positions, impl,
                               segment_ids=segment_ids,
                               prefix_caches=prefix_caches,
-                              prefix_len=prefix_len)
+                              prefix_len=prefix_len,
+                              prefix_positions=prefix_positions,
+                              prefix_segment_ids=prefix_segment_ids)
     if last_only:
         return logits_fn(cfg, params, x[:, -1]), caches
     return logits_fn(cfg, params, x), caches

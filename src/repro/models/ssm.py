@@ -58,11 +58,16 @@ def _segsum(a: jax.Array) -> jax.Array:
     return jnp.where(mask, seg, -jnp.inf)
 
 
-def ssm_prefill(p, cfg: ModelConfig, u: jax.Array,
+def ssm_prefill(p, cfg: ModelConfig, u: jax.Array, init=None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """u (B,S,d) with S a multiple of ssm_chunk (pad upstream).
 
-    Returns (y (B,S,d), cache {h, conv}).
+    Returns (y (B,S,d), cache {h, conv}). ``init`` (a previous call's
+    cache, or a decode cache) resumes the recurrence mid-sequence —
+    chunked prefill carries the state forward instead of recomputing the
+    prefix: the conv history seeds the causal conv window and ``h`` seeds
+    the inter-chunk scan. ``init=None`` is bit-identical to the zero
+    state.
     """
     B, S0, _ = u.shape
     di, nh, n, conv_dim = ssm_dims(cfg)
@@ -76,16 +81,14 @@ def ssm_prefill(p, cfg: ModelConfig, u: jax.Array,
     z, xs, Bm, Cm, dt = _split_proj(p, cfg, u)
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)               # (B,S0,conv)
     w = cfg.ssm_conv_width
-    conv_cache = xbc[:, max(0, S0 - (w - 1)):, :]
-    if conv_cache.shape[1] < w - 1:
-        conv_cache = jnp.pad(conv_cache,
-                             ((0, 0), (w - 1 - conv_cache.shape[1], 0), (0, 0)))
+    history = init["conv"].astype(xbc.dtype) if init is not None \
+        else jnp.zeros((B, w - 1, conv_dim), xbc.dtype)
+    conv_cache = jnp.concatenate([history, xbc], axis=1)[:, S0:]
     if S != S0:
         z, xs, Bm, Cm, dt, xbc = (
             jnp.pad(t, ((0, 0), (0, S - S0), (0, 0)))
             for t in (z, xs, Bm, Cm, dt, xbc))
-    pad = jnp.zeros((B, w - 1, conv_dim), xbc.dtype)
-    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    xbc_pad = jnp.concatenate([history, xbc], axis=1)
     conv = sum(xbc_pad[:, i:i + S] * p["conv_w"][w - 1 - i]
                for i in range(w)) + p["conv_b"]
     conv = jax.nn.silu(conv)
@@ -118,7 +121,8 @@ def ssm_prefill(p, cfg: ModelConfig, u: jax.Array,
         h_new = h * dec[:, :, None, None] + st
         return h_new, h
 
-    h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    h0 = init["h"].astype(jnp.float32) if init is not None \
+        else jnp.zeros((B, nh, hd, n), jnp.float32)
     h_last, h_prevs = jax.lax.scan(
         scan_fn, h0,
         (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))

@@ -52,12 +52,15 @@ def _qkvif(p, cfg, x):
     return q, k, v, i_raw, f_raw
 
 
-def mlstm_prefill(p, cfg: ModelConfig, x: jax.Array
+def mlstm_prefill(p, cfg: ModelConfig, x: jax.Array, init=None
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Chunkwise-parallel stabilized mLSTM (xLSTM paper App. form): a
     lax.scan over chunks carries (C, n, m); within a chunk the quadratic
     decay matrix is only (Q, Q). O(S·Q) memory, not O(S^2); the chunk body
-    is rematerialized in the backward pass."""
+    is rematerialized in the backward pass.
+
+    ``init`` (a previous call's cache) resumes the recurrence mid-sequence
+    for chunked prefill; ``None`` is the zero (empty-memory) state."""
     B, S0, _ = x.shape
     di, nh, hd = _dims(cfg)
     q, k, v, i_raw, f_raw = _qkvif(p, cfg, x)
@@ -115,9 +118,12 @@ def mlstm_prefill(p, cfg: ModelConfig, x: jax.Array
             + jnp.einsum("bth,bthd->bhd", wk, kc)
         return (C_new, n_new, m_next), y
 
-    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
-    n0 = jnp.zeros((B, nh, hd), jnp.float32)
-    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    if init is not None:
+        C0, n0, m0 = init["C"], init["n"], init["m"]
+    else:
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
     (C, nvec, m_end), ys = jax.lax.scan(jax.checkpoint(chunk), (C0, n0, m0),
                                         (qs, ks, vs, is_, fs))
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)[:, :S0].astype(x.dtype)
@@ -199,8 +205,10 @@ def slstm_init_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
     return {"c": z, "n": z, "h": z, "m": jnp.full((batch, di), -1e30, jnp.float32)}
 
 
-def slstm_prefill(p, cfg: ModelConfig, x: jax.Array
+def slstm_prefill(p, cfg: ModelConfig, x: jax.Array, init=None
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``init`` (a previous call's cache) resumes the recurrence mid-
+    sequence for chunked prefill; ``None`` is the zero state."""
     B, S, _ = x.shape
     di, nh, hd = _dims(cfg)
     xproj = jnp.einsum("bsd,dk->bsk", x, p["w_in"])            # (B,S,4di)
@@ -209,7 +217,9 @@ def slstm_prefill(p, cfg: ModelConfig, x: jax.Array
         new = _slstm_step(p, cfg, xt, state)
         return new, new["h"]
 
-    state, hs = jax.lax.scan(step, slstm_init_cache(cfg, B),
+    state, hs = jax.lax.scan(step,
+                             init if init is not None
+                             else slstm_init_cache(cfg, B),
                              jnp.moveaxis(xproj, 0, 1))
     y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,di)
     y = rms_norm(y, p["norm"], cfg.rms_eps)

@@ -34,26 +34,36 @@ Hot-path layout (why the shapes look the way they do):
     ``packed_prefill=False`` for the equivalence tests.
   * Decode *megasteps* (default, ``EngineConfig.decode_megastep`` > 1):
     when the scheduler proves a horizon of K iterations with fixed batch
-    membership (``BaseScheduler.decode_horizon`` — empty queues, no
-    under-provision/pipelining event before the horizon), the engine runs
+    membership (``BaseScheduler.decode_horizon``), the engine runs
     K fused iterations as ONE dispatched ``lax.while_loop`` program and
     the host replays the K scheduler iterations against the precomputed
     (K, B) token matrix — decisions stay bitwise-identical to the
     per-iteration path while steady-state dispatch cost is amortized K×
-    (``n_decode_dispatches`` / ``decode_iters`` instruments it). EOS may
-    fire inside a window: completions with empty queues only shrink the
-    batch, and per-row sampling independence keeps surviving rows'
-    tokens unchanged, so the replay handles it exactly.
+    (``n_decode_dispatches`` / ``decode_iters`` instruments it). The
+    horizon survives *memory pressure*: non-empty waiting queues are
+    certified KVC-blocked from O(1) counters
+    (``_admission_horizon``), so windows keep fusing exactly where the
+    saturated steady state lives. EOS may fire inside a window: with
+    empty queues completions only shrink the batch and the replay
+    handles them; under pressure the freed KVC could admit a waiter, so
+    the fused loop early-exits right after the EOS iteration
+    (``stop_on_eos``) and admission lands at the exact iteration the
+    K=1 path would admit.
   * Prefill is *chunk-capable*: the engine executes the scheduler's
     per-chunk PT grants (``_fill_pts``) instead of requiring TFS >= max
     prompt length. A chunk attends over the request's already-seeded
     cache prefix via a KV-prefix view threaded through ``model.prefill``
     → ``attn_prefill`` → the flash kernel and both jnp fallbacks, and its
-    K/V seed the cache incrementally at [start, start+len). Recurrent
-    stacks (SSM/xLSTM), which have no resumable prefix view, fall back to
-    recomputing the whole prefix each chunk (correct, O(n^2) across
-    chunks); ``incremental_chunk_prefill=False`` forces that reference
-    path everywhere for the equivalence tests.
+    K/V seed the cache incrementally at [start, start+len). A wave of
+    >= 2 chunk grants in one iteration runs as ONE token-packed call
+    (default, ``EngineConfig.packed_chunk_prefill``): per-segment
+    positions and segment ids over the packed chunks, each segment's
+    own cache-prefix view prepended to the key axis, and one donated
+    per-segment seed scatter. Pure-recurrent stacks (SSM/xLSTM) resume
+    chunks from a carried per-request state snapshot (O(n) total);
+    hybrid stacks fall back to recomputing the whole prefix each chunk
+    (correct, O(n^2) across chunks); ``incremental_chunk_prefill=False``
+    forces that reference path everywhere for the equivalence tests.
   * Cache seeding is one jitted, buffer-donated scatter over the whole
     item batch (a per-segment gather for the packed path) — not a
     per-layer host-side pytree rebuild.
@@ -77,6 +87,7 @@ from repro.core.predictor import NoisyPredictor, apply_padding
 from repro.core.request import Request, State
 from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.models import model
+from repro.models.attention import POS_INVALID
 from repro.models.config import ATTN, ModelConfig
 
 from .sampling import SamplingParams, sample_in_graph, sample_per_request
@@ -109,7 +120,11 @@ class EngineConfig:
     (1 = the per-iteration async path; requires ``async_decode``).
     ``incremental_chunk_prefill=False`` makes every prompt chunk recompute
     its full prefix instead of attending over the seeded cache view — the
-    reference path the incremental one is equivalence-tested against.
+    reference path the incremental one is equivalence-tested against
+    (it also covers the recurrent state-carry chunk path).
+    ``packed_chunk_prefill=False`` keeps the one-call-per-chunk reference
+    path: by default a wave of >= 2 chunk grants in one iteration runs as
+    ONE token-packed dispatch with per-segment prefix views.
     """
     async_decode: bool = True
     packed_prefill: bool = True
@@ -117,6 +132,7 @@ class EngineConfig:
     max_pending: int = 8
     decode_megastep: int = 8
     incremental_chunk_prefill: bool = True
+    packed_chunk_prefill: bool = True
 
 
 @dataclass
@@ -185,8 +201,24 @@ class ServingEngine:
         self._chunk_incremental = (self.ecfg.incremental_chunk_prefill
                                    and self._pad_prefill
                                    and (win is None or capacity < win))
+        # packed multi-request chunking: all of an iteration's chunk
+        # grants flatten into one token-packed call with per-segment
+        # prefix views (needs the incremental prefix path + packing)
+        self._chunk_packed = (self.ecfg.packed_chunk_prefill
+                              and self._chunk_incremental and self._packed)
+        # pure-recurrent stacks (SSM/xLSTM, no attention or shared-attn
+        # layers) chunk by carrying the per-request recurrent-state
+        # snapshot across chunks — O(n) total instead of the O(n^2)
+        # recompute fallback
+        kinds = set(cfg.pattern())
+        self._chunk_rec = (self.ecfg.incremental_chunk_prefill
+                           and not (kinds & {ATTN})
+                           and not model.num_shared_invocations(cfg))
+        self._rec_state: Dict[int, dict] = {}       # rid -> state snapshot
         self._chunk_progress: Dict[int, int] = {}   # rid -> ctx tokens seeded
         self.n_prefill_chunks = 0
+        self.n_chunk_calls = 0                      # chunk-prefill dispatches
+        self.max_chunk_items_per_call = 0
         # decode megastep: K fused iterations per dispatch (async only)
         self._mega_max = max(1, int(self.ecfg.decode_megastep)) \
             if self.ecfg.async_decode else 1
@@ -291,29 +323,41 @@ class ServingEngine:
 
         Kmax = self._mega_max
 
-        def _mega_fn(p, caches, st, active, k_iters, need_sample, need_topk):
+        def _mega_fn(p, caches, st, active, k_iters, need_sample, need_topk,
+                     stop_on_eos):
             """Decode megastep: run up to ``k_iters`` (dynamic, <= Kmax)
             fused iterations in ONE dispatched while_loop, collecting each
             iteration's sampled tokens and EOS flags into (Kmax, B)
             buffers the host replays the scheduler against. ``caches`` and
-            ``st`` are donated exactly as in the single-step program."""
+            ``st`` are donated exactly as in the single-step program.
+
+            ``stop_on_eos`` (static): under memory pressure (non-empty
+            queues certified KVC-blocked) an EOS completion frees KVC that
+            the K=1 path would hand to a waiter at the very next
+            iteration, so the loop exits after the iteration where EOS
+            fired — the carried RNG key and caches then advanced exactly
+            as many times as the per-iteration path, and the host resumes
+            fresh scheduling there (it recovers the executed count from
+            the EOS matrix; rows past the exit stay zero)."""
             def cond(c):
-                return c[0] < k_iters
+                return (c[0] < k_iters) & ~c[1]
 
             def body(c):
-                i, caches, st, tb, eb = c
+                i, stop, caches, st, tb, eb = c
                 caches, st, new, eos_hit = _one_iter(
                     p, caches, st, active, need_sample, need_topk)
-                return (i + 1, caches, st,
+                if stop_on_eos:
+                    stop = jnp.any(eos_hit)
+                return (i + 1, stop, caches, st,
                         tb.at[i].set(new), eb.at[i].set(eos_hit))
 
-            init = (jnp.int32(0), caches, st,
+            init = (jnp.int32(0), jnp.asarray(False), caches, st,
                     jnp.zeros((Kmax, max_batch), jnp.int32),
                     jnp.zeros((Kmax, max_batch), bool))
-            _, caches, st, tb, eb = jax.lax.while_loop(cond, body, init)
+            _, _, caches, st, tb, eb = jax.lax.while_loop(cond, body, init)
             return caches, st, tb, eb
 
-        self._mega = jax.jit(_mega_fn, static_argnums=(5, 6),
+        self._mega = jax.jit(_mega_fn, static_argnums=(5, 6, 7),
                              donate_argnums=(1, 2))
 
         def _seed_slots_fn(st, slots, first, fallback, use_first, poss,
@@ -377,6 +421,57 @@ class ServingEngine:
             return out, last
 
         self._chunk_prefill = jax.jit(_chunk_fn, donate_argnums=(1,))
+
+        def _chunks_packed_fn(p, caches, toks, pos, seg, ppos, pseg, slots,
+                              last_idx, src_idx, dst_idx):
+            """Packed multi-request chunk prefill + seed: all chunk grants
+            of an iteration run as ONE token-packed (1, T) call whose key
+            axis prepends every segment's own cache-prefix view (gathered
+            from the donated caches and block-diagonally masked via
+            ``pseg``/``ppos`` — POS_INVALID beyond each seeded prefix);
+            each chunk's K/V then scatter into its slot's row at
+            [start, start+len) in the same donated program. Returns
+            (caches, per-segment last-real-token logits)."""
+            n = slots.shape[0]
+            Cp = ppos.shape[1] // n
+            prefix = {}
+            for kind, sub in caches.items():
+                prefix[kind] = {}
+                for nm in ("k", "v"):
+                    rows = jnp.take(sub[nm], slots, axis=1)  # (L,n,C,K,hd)
+                    rows = jax.lax.slice_in_dim(rows, 0, Cp, axis=2)
+                    L, _, _, Kh, hd = rows.shape
+                    prefix[kind][nm] = rows.reshape(L, 1, n * Cp, Kh, hd)
+            logits, pf = model.prefill(cfg, p, toks, impl=impl,
+                                       positions=pos, segment_ids=seg,
+                                       prefix_caches=prefix,
+                                       prefix_positions=ppos,
+                                       prefix_segment_ids=pseg)
+            last = logits[0, last_idx]
+            out = {}
+            for kind, sub in caches.items():
+                out[kind] = {}
+                for nm in ("k", "v"):
+                    # (L, n, W, K, hd) spans gathered from the packed axis;
+                    # dst positions past each chunk's length index C (drop)
+                    rows = jnp.take(pf[kind][nm][:, 0], src_idx, axis=1)
+                    out[kind][nm] = sub[nm].at[
+                        :, slots[:, None], dst_idx].set(
+                        rows.astype(sub[nm].dtype), mode="drop")
+            return out, last
+
+        self._chunks_packed = jax.jit(_chunks_packed_fn, donate_argnums=(1,))
+
+        def _rec_chunk_fn(p, states, toks):
+            """Recurrent (SSM/xLSTM) chunk prefill resuming from the
+            carried per-request state snapshot — the chunk continues the
+            recurrence instead of recomputing its prefix. Exact shapes
+            (recurrent stacks are not pad-tolerant), donated states."""
+            logits, out_states = model.prefill(cfg, p, toks, impl=impl,
+                                               prefix_caches=states)
+            return out_states, logits[0, toks.shape[1] - 1]
+
+        self._rec_chunk = jax.jit(_rec_chunk_fn, donate_argnums=(1,))
 
         def _inject_fn(caches, kv, slot, length):
             """Seed a migrated request's KV image into one cache row in a
@@ -467,7 +562,16 @@ class ServingEngine:
         slots, or None when this engine cannot produce a portable image
         (recurrent stack, ring caches, or a request that lost its slot to
         preemption) — the receiver then falls back to the swap-recompute
-        path, exactly like a swap-preempted GT."""
+        path, exactly like a swap-preempted GT.
+
+        Must not be called while a fused megastep window is open: freeing
+        the exported request's KVC mid-window could admit a waiter the
+        window's precomputed rows never saw (``submit``/``inject_kv``
+        defer for the same reason; export must return synchronously, so
+        it asserts instead). Fleet callers only export from prefill-role
+        instances, which never decode and so never open windows."""
+        assert self._mega_left == 0, \
+            "export_kv during an open megastep window"
         sched = self.scheduler
         req = next(r for r in sched.gt_queue if r.rid == rid)
         if self._pending_drain:
@@ -496,6 +600,7 @@ class ServingEngine:
         sched.gt_queue.remove(req)
         sched.kvc.free(rid)
         self._chunk_progress.pop(rid, None)
+        self._rec_state.pop(rid, None)
         req.occupied_kvc = req.prompt_len + req.generated
         self.n_kv_exports += 1
         return {"gen": g, "req": req, "kv": kv, "ctx": ctx,
@@ -816,13 +921,16 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def _run_chunk_items(self, items, now: float) -> None:
-        """Execute partial-prompt (chunked) PT grants: each chunk runs as
-        its own call — attending over the request's already-seeded cache
-        prefix (attention-pure stacks) or recomputing the whole prefix
-        (recurrent stacks / the reference path). Only the chunk that
-        completes the prompt samples the first response token; earlier
-        chunks just extend the cache."""
-        finals = []
+        """Execute partial-prompt (chunked) PT grants. A wave of >= 2
+        grants runs as ONE token-packed call with per-segment prefix
+        views (``_exec_chunks_packed``, the default); otherwise each
+        chunk runs as its own call — attending over the request's
+        already-seeded cache prefix (attention-pure stacks), resuming the
+        carried recurrent-state snapshot (pure-recurrent stacks), or
+        recomputing the whole prefix (the reference path). Only the chunk
+        that completes the prompt samples the first response token;
+        earlier chunks just extend the cache."""
+        infos = []
         for r, chunk in items:
             g = self.requests[r.rid]
             # after an offload-free preemption the context to recompute is
@@ -842,13 +950,36 @@ class ServingEngine:
                 self.top_ks[slot] = g.params.top_k
             slot = self.slot_of[r.rid]
             self.n_prefill_chunks += 1
-            if self._chunk_incremental:
-                last = self._exec_chunk_incremental(ctx, start, end, slot)
-            else:
-                last = self._exec_chunk_recompute(ctx, end, slot)
+            infos.append((r, ctx, start, end, slot, completing))
+        if self._chunk_packed and len(infos) >= 2:
+            lasts = self._exec_chunks_packed(infos)
+        else:
+            lasts = []
+            for r, ctx, start, end, slot, completing in infos:
+                self.n_chunk_calls += 1
+                self.max_chunk_items_per_call = max(
+                    self.max_chunk_items_per_call, 1)
+                if self._chunk_incremental:
+                    lasts.append(self._exec_chunk_incremental(
+                        ctx, start, end, slot))
+                elif self._chunk_rec:
+                    lasts.append(self._exec_chunk_state(
+                        ctx, start, end, slot, r.rid))
+                else:
+                    lasts.append(self._exec_chunk_recompute(ctx, end, slot))
+        finals = []
+        for (r, ctx, start, end, slot, completing), last in zip(infos,
+                                                                lasts):
             self._chunk_progress[r.rid] = end
             if completing:
                 del self._chunk_progress[r.rid]
+                if self._chunk_rec:
+                    # the carried snapshot becomes the decode-cache row
+                    states = self._rec_state.pop(r.rid)
+                    self.caches = self._seed(
+                        self.caches, states,
+                        jnp.asarray(np.array([slot], np.int32)),
+                        jnp.asarray(np.array([end], np.int32)))
                 finals.append((r, slot, last, end))
         if not finals:
             return
@@ -903,6 +1034,86 @@ class ServingEngine:
                     self.last_tok[slot] = tok
                 else:
                     self.last_tok[slot] = g.output[r.generated - 1]
+
+    def _exec_chunks_packed(self, infos):
+        """All of an iteration's chunk grants in ONE prefill dispatch: the
+        packed token axis concatenates every chunk with per-segment
+        absolute positions and segment ids; the key axis prepends each
+        segment's own cache-prefix view with per-slot positions
+        (POS_INVALID beyond the seeded prefix — first chunks have empty
+        views). Only the shared axes are pow2-rounded, so compile count
+        stays logarithmic, and pad tokens imply no cache slots (the seed
+        scatter drops them). Returns per-segment last-token logits."""
+        n = len(infos)
+        starts = [i[2] for i in infos]
+        lens = [i[3] - i[2] for i in infos]
+        Tb = seq_bucket(sum(lens))
+        # prefix-view width: pow2 bucket of the deepest seeded prefix,
+        # clamped to the cache capacity (chunk grants never reach past it)
+        Cp = seq_bucket(max(max(starts), 1))
+        if Cp > self.capacity:
+            Cp = self.capacity
+        toks = np.zeros((1, Tb), np.int32)
+        pos = np.zeros((1, Tb), np.int32)
+        seg = np.full((1, Tb), -1, np.int32)
+        last_idx = np.zeros(n, np.int32)
+        offs = np.zeros(n, np.int32)
+        off = 0
+        for i, (r, ctx, start, end, slot, completing) in enumerate(infos):
+            L = end - start
+            toks[0, off:off + L] = ctx[start:end]
+            pos[0, off:off + L] = start + np.arange(L)
+            seg[0, off:off + L] = i
+            offs[i] = off
+            last_idx[i] = off + L - 1
+            off += L
+        ppos = np.full((n, Cp), POS_INVALID, np.int32)
+        pseg = np.repeat(np.arange(n, dtype=np.int32)[:, None], Cp, axis=1)
+        for i, s in enumerate(starts):
+            ppos[i, :min(s, Cp)] = np.arange(min(s, Cp))
+        # seed-scatter indices: chunk i's tokens land at cache positions
+        # [start_i, start_i + len_i); pad columns index capacity (dropped)
+        W = min(seq_bucket(max(lens)), Tb)
+        w_idx = np.arange(W)[None, :]
+        lens_a = np.asarray(lens, np.int32)[:, None]
+        starts_a = np.asarray(starts, np.int32)[:, None]
+        dst_idx = np.where(w_idx < lens_a, starts_a + w_idx, self.capacity)
+        src_idx = offs[:, None] + np.minimum(w_idx, lens_a - 1)
+        slots = np.asarray([i[4] for i in infos], np.int32)
+        self._prefill_shapes.add((1, Tb))
+        self.n_chunk_calls += 1
+        self.max_chunk_items_per_call = max(self.max_chunk_items_per_call,
+                                            n)
+        self.caches, last = self._chunks_packed(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(ppos.reshape(1, n * Cp)),
+            jnp.asarray(pseg.reshape(1, n * Cp)), jnp.asarray(slots),
+            jnp.asarray(last_idx), jnp.asarray(src_idx.astype(np.int32)),
+            jnp.asarray(dst_idx.astype(np.int32)))
+        return [last[i] for i in range(n)]
+
+    def _exec_chunk_state(self, ctx, start: int, end: int, slot: int,
+                          rid: int):
+        """Chunk prefill for pure-recurrent stacks: resume from the
+        carried per-request state snapshot — O(n) total across chunks
+        instead of the recompute fallback's O(n^2). The snapshot seeds
+        the decode cache row when the prompt completes."""
+        L = end - start
+        toks = np.zeros((1, L), np.int32)
+        toks[0, :] = ctx[start:end]
+        self._prefill_shapes.add((1, L))
+        states = self._rec_state.pop(rid, None)
+        if states is None:
+            # first chunk: a plain exact-shape prefill from the zero state
+            last, states = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray(np.array([L], np.int32)))
+            last = last[0]
+        else:
+            states, last = self._rec_chunk(self.params, states,
+                                           jnp.asarray(toks))
+        self._rec_state[rid] = states
+        return last
 
     def _exec_chunk_incremental(self, ctx, start: int, end: int,
                                 slot: int):
@@ -1020,9 +1231,16 @@ class ServingEngine:
             self._active_dev = jnp.asarray(active)
         K = self.scheduler.decode_horizon(plan, self._mega_max)
         if K > 1:
+            # under pressure (waiters certified KVC-blocked) an EOS
+            # completion frees KVC the K=1 path would grant next
+            # iteration — the device loop exits right after the EOS
+            # iteration and the host truncates the window to match
+            sched = self.scheduler
+            stop_on_eos = eos_possible and bool(sched.pt_queue
+                                                or sched.gt_queue)
             self.caches, self._dev, self._mega_toks, eos_buf = self._mega(
                 self.params, self.caches, self._dev, self._active_dev,
-                np.int32(K), need_sample, need_topk)
+                np.int32(K), need_sample, need_topk, stop_on_eos)
             self.n_decode_dispatches += 1
             if eos_possible:
                 # ONE blocking readback per window (the per-iteration path
@@ -1030,6 +1248,11 @@ class ServingEngine:
                 # EOS at the replay iteration it fired
                 self.sync_counts["eos_flags"] += 1
                 self._mega_eos = np.asarray(eos_buf)
+                if stop_on_eos:
+                    slots = [self.slot_of[r.rid] for r in reqs]
+                    hit = self._mega_eos[:K, slots].any(axis=1)
+                    if hit.any():
+                        K = int(hit.argmax()) + 1
             else:
                 self._mega_eos = None
             self._mega_row = -1
@@ -1173,6 +1396,7 @@ class ServingEngine:
             if rid not in self.scheduler.kvc.allocs:
                 self.free_slots.append(self.slot_of.pop(rid))
                 self._chunk_progress.pop(rid, None)
+                self._rec_state.pop(rid, None)
                 freed = True
         if freed and self._pending_drain:
             # completed outputs must be materialized before t_done is

@@ -153,10 +153,96 @@ def test_preempted_request_reprefills_chunked(cfg):
     assert _fingerprint(eng, reqs) == _fingerprint(ref_eng, ref_reqs)
 
 
-def test_recurrent_stack_chunk_fallback():
-    """Recurrent stacks (xLSTM) have no resumable prefix view: chunk
-    grants must fall back to recompute-from-start and still produce the
-    whole-prompt token stream."""
+def _chunk_wave_workload(cfg, seed=13, lens=(96, 80, 72), shorts=0,
+                         max_new=6):
+    """Several long prompts arriving together: with TFS below the prompt
+    lengths, _fill_pts spreads the budget across requests once the head's
+    remaining chunk undershoots it, so iterations carry >= 2 chunk grants
+    — the packed-chunk wave."""
+    def wl():
+        rng = np.random.default_rng(seed)
+        reqs = [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size, L)),
+            params=SamplingParams(max_new_tokens=max_new))
+            for L in lens]
+        for i in range(shorts):
+            t = 1.1 if i % 2 else 0.0
+            reqs.append(GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size, 6 + i)),
+                params=SamplingParams(max_new_tokens=8, temperature=t,
+                                      top_k=4 if t else 0)))
+        return reqs
+    return wl
+
+
+def test_packed_chunk_wave_one_dispatch_tokens_equal(cfg):
+    """A wave of >= 2 chunk grants in one iteration must run as ONE
+    packed prefill dispatch, with the full fingerprint (tokens +
+    scheduler decisions) identical to the one-call-per-chunk reference
+    path."""
+    wl = _chunk_wave_workload(cfg)
+    scfg = _scfg(64, cap=256)
+    packed, reqs_p = _run(cfg, tfs=64, scfg=scfg, cap=256, wl=wl)
+    ref, reqs_r = _run(cfg, tfs=64, scfg=scfg, cap=256, wl=wl,
+                       ecfg=EngineConfig(packed_chunk_prefill=False))
+    assert packed._chunk_packed and not ref._chunk_packed
+    assert packed.n_prefill_chunks == ref.n_prefill_chunks >= 4
+    # the reference pays one dispatch per chunk; the packed engine fuses
+    # every multi-chunk iteration into a single call
+    assert packed.max_chunk_items_per_call >= 2
+    assert ref.max_chunk_items_per_call == 1
+    assert packed.n_chunk_calls < ref.n_chunk_calls
+    assert _fingerprint(packed, reqs_p) == _fingerprint(ref, reqs_r)
+
+
+def test_packed_chunk_mixed_whole_prompt_wave(cfg):
+    """Mixed waves — whole short prompts admitted alongside mid-prompt
+    chunks — must stay fingerprint-identical between the packed and
+    per-chunk paths (whole prompts keep riding the packed whole-prefill
+    call; chunks pack separately)."""
+    wl = _chunk_wave_workload(cfg, lens=(96, 88), shorts=3)
+    scfg = _scfg(64, mb=6, cap=256)
+    packed, reqs_p = _run(cfg, tfs=64, scfg=scfg, mb=6, cap=256, wl=wl)
+    ref, reqs_r = _run(cfg, tfs=64, scfg=scfg, mb=6, cap=256, wl=wl,
+                       ecfg=EngineConfig(packed_chunk_prefill=False))
+    assert packed.max_chunk_items_per_call >= 2
+    assert _fingerprint(packed, reqs_p) == _fingerprint(ref, reqs_r)
+
+
+def test_packed_chunk_preempted_reprefill(cfg):
+    """Offload-free preemptions (always-wrong predictor, no reserve)
+    interleave recompute re-prefills with the chunk waves; the packed
+    path must stay fingerprint-identical to the per-chunk reference
+    through the churn."""
+    def run(ecfg):
+        mb, cap = 4, 192
+        scfg = _scfg(40, mb=mb, cap=cap, pad_ratio=0.0, reserve_frac=0.0,
+                     bucket=8)
+
+        def wl():
+            rng = np.random.default_rng(5)
+            return [GenRequest(
+                prompt=list(rng.integers(0, cfg.vocab_size, 60 - 4 * i)),
+                params=SamplingParams(max_new_tokens=12))
+                for i in range(3)]
+
+        return _run(cfg, tfs=40, ecfg=ecfg, scfg=scfg, rl_accuracy=0.0,
+                    seed=1, wl=wl)
+
+    packed, reqs_p = run(None)
+    ref, reqs_r = run(EngineConfig(packed_chunk_prefill=False))
+    assert packed.scheduler.n_preempt_free > 0
+    assert packed.max_chunk_items_per_call >= 2
+    # the preempted requests' recompute re-prefills themselves ran
+    # through the chunk path (prompt + tail exceed the 40-token TFS)
+    assert packed.n_prefill_chunks > 4
+    assert _fingerprint(packed, reqs_p) == _fingerprint(ref, reqs_r)
+
+
+def test_recurrent_state_carry_matches_recompute():
+    """Pure-recurrent stacks (xLSTM) carry the per-request state snapshot
+    across chunks (O(n) total) — fingerprints must match the recompute-
+    from-start reference path exactly."""
     cfg = get_config("xlstm_125m").reduced().with_(dtype="float32",
                                                    param_dtype="float32")
     mb, cap = 2, 96
@@ -168,9 +254,61 @@ def test_recurrent_stack_chunk_fallback():
                 GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 7)),
                            params=SamplingParams(max_new_tokens=5))]
 
-    chunked, reqs_c = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl)
+    carry, reqs_c = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl)
+    rec, reqs_r = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl,
+                       ecfg=EngineConfig(incremental_chunk_prefill=False))
+    assert carry._chunk_rec and not rec._chunk_rec
+    assert carry.n_prefill_chunks == rec.n_prefill_chunks >= 2
+    assert _fingerprint(carry, reqs_c) == _fingerprint(rec, reqs_r)
+
+
+def test_mamba_state_carry_matches_recompute():
+    """Pure-Mamba2 stack: the SSD recurrence resumes from {h, conv} —
+    conv history must cross chunk boundaries exactly."""
+    from repro.models.config import MAMBA, ModelConfig
+    cfg = ModelConfig(name="mamba-test", arch_type="ssm", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                      d_ff=0, vocab_size=128, ssm_state=16, ssm_expand=2,
+                      ssm_head_dim=16, ssm_chunk=16,
+                      layer_pattern=MAMBA * 2, dtype="float32",
+                      param_dtype="float32")
+    mb, cap = 2, 96
+
+    def wl():
+        rng = np.random.default_rng(9)
+        return [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 50)),
+                           params=SamplingParams(max_new_tokens=4)),
+                GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 9)),
+                           params=SamplingParams(max_new_tokens=4))]
+
+    carry, reqs_c = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl)
+    rec, reqs_r = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl,
+                       ecfg=EngineConfig(incremental_chunk_prefill=False))
+    assert carry._chunk_rec and not rec._chunk_rec
+    assert carry.n_prefill_chunks == rec.n_prefill_chunks >= 2
+    assert _fingerprint(carry, reqs_c) == _fingerprint(rec, reqs_r)
+
+
+def test_recurrent_stack_chunk_fallback():
+    """Recurrent stacks (xLSTM) have no KV-prefix view: with the
+    state-carry path disabled (``incremental_chunk_prefill=False``),
+    chunk grants must fall back to recompute-from-start and still
+    produce the whole-prompt token stream."""
+    cfg = get_config("xlstm_125m").reduced().with_(dtype="float32",
+                                                   param_dtype="float32")
+    mb, cap = 2, 96
+
+    def wl():
+        rng = np.random.default_rng(3)
+        return [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                           params=SamplingParams(max_new_tokens=5)),
+                GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 7)),
+                           params=SamplingParams(max_new_tokens=5))]
+
+    chunked, reqs_c = _run(cfg, tfs=16, mb=mb, cap=cap, wl=wl,
+                           ecfg=EngineConfig(incremental_chunk_prefill=False))
     whole, reqs_w = _run(cfg, tfs=cap, mb=mb, cap=cap, wl=wl)
-    assert not chunked._chunk_incremental       # fallback path
+    assert not chunked._chunk_incremental and not chunked._chunk_rec
     assert chunked.n_prefill_chunks >= 2
     for a, b in zip(reqs_c, reqs_w):
         assert a.output == b.output

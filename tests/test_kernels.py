@@ -118,6 +118,79 @@ def test_flash_prefill_prefix_positions(C, S, plen, win, cap, dtype):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Cp,spans,win,cap", [
+    (64, ((40, 24), (0, 30)),          None, None),   # mid + first chunk
+    (64, ((60, 17), (32, 33), (5, 8)), None, 30.0),   # ragged 3-wave
+    (96, ((90, 20), (48, 40)),         64,   None),   # window across prefix
+])
+def test_flash_prefill_packed_chunk_mask(Cp, spans, win, cap, dtype):
+    """Packed multi-request chunked prefill: the key axis carries every
+    segment's own prefix view (per-slot positions, POS_INVALID beyond
+    each seeded prefix) plus the packed chunk wave, with separate q/kv
+    segment arrays. The kernel must match the oracle, and the oracle must
+    equal each request's isolated prefix-attending call."""
+    from repro.kernels.flash_prefill import POS_INVALID
+    B, H, K, hd = 1, 4, 2, 32
+    n = len(spans)
+    T = sum(L for _, L in spans)
+    ks = jax.random.split(jax.random.PRNGKey(11), 3 + n)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    prefixes = [jax.random.normal(ks[3 + i], (2, B, Cp, K, hd), dtype)
+                for i in range(n)]
+    qpos = np.zeros((B, T), np.int32)
+    qseg = np.zeros((B, T), np.int32)
+    ppos = np.zeros((B, n * Cp), np.int32)
+    pseg = np.zeros((B, n * Cp), np.int32)
+    off = 0
+    for i, (start, L) in enumerate(spans):
+        qpos[:, off:off + L] = start + np.arange(L)
+        qseg[:, off:off + L] = i
+        slot = np.arange(Cp)
+        ppos[:, i * Cp:(i + 1) * Cp] = np.where(slot < start, slot,
+                                                POS_INVALID)
+        pseg[:, i * Cp:(i + 1) * Cp] = i
+        off += L
+    k_all = jnp.concatenate([p[0] for p in prefixes] + [kc], axis=1)
+    v_all = jnp.concatenate([p[1] for p in prefixes] + [vc], axis=1)
+    kpos = jnp.asarray(np.concatenate([ppos, qpos], axis=1))
+    kseg = jnp.asarray(np.concatenate([pseg, qseg], axis=1))
+    out = flash_attention(q, k_all, v_all, causal=True, window=win,
+                          softcap=cap, segment_ids=jnp.asarray(qseg),
+                          kv_segment_ids=kseg,
+                          q_positions=jnp.asarray(qpos), kv_positions=kpos,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention(q, k_all, v_all, causal=True, window=win,
+                               softcap=cap, segment_ids=jnp.asarray(qseg),
+                               kv_segment_ids=kseg,
+                               q_positions=jnp.asarray(qpos),
+                               kv_positions=kpos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype])
+    # oracle cross-check: each packed segment equals its isolated
+    # single-request prefix-attending call
+    off = 0
+    for i, (start, L) in enumerate(spans):
+        qi = q[:, off:off + L]
+        ki = jnp.concatenate([prefixes[i][0], kc[:, off:off + L]], axis=1)
+        vi = jnp.concatenate([prefixes[i][1], vc[:, off:off + L]], axis=1)
+        slot = np.arange(Cp)
+        kpos_i = jnp.asarray(np.concatenate(
+            [np.where(slot < start, slot, POS_INVALID)[None].repeat(B, 0),
+             qpos[:, off:off + L]], axis=1))
+        alone = ref.flash_attention(
+            qi, ki, vi, causal=True, window=win, softcap=cap,
+            q_positions=jnp.asarray(qpos[:, off:off + L]),
+            kv_positions=kpos_i)
+        np.testing.assert_allclose(
+            want[:, off:off + L].astype(jnp.float32),
+            alone.astype(jnp.float32), atol=TOLS[dtype], rtol=TOLS[dtype])
+        off += L
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,H,K,hd,page,MP", [
     (3, 8, 2, 64, 16, 5),
     (2, 4, 4, 128, 32, 4),

@@ -13,9 +13,10 @@ from repro.core.request import Request
 from repro.core.scheduler import SchedulerConfig, make_econoserve
 
 
-def _run(variant, incremental, reqs, rate_cfg=None):
+def _run(variant, incremental, reqs, rate_cfg=None, queue_index="skiplist"):
     cfg = rate_cfg or SchedulerConfig()
-    cfg = dataclasses.replace(cfg, incremental_queues=incremental)
+    cfg = dataclasses.replace(cfg, incremental_queues=incremental,
+                              queue_index=queue_index)
     cost = CostModel()
     rr = copy.deepcopy(reqs)
     predictor.annotate(rr, predictor.NoisyPredictor(seed=0), 0.15)
@@ -35,28 +36,31 @@ def _fingerprint(res):
 
 @pytest.mark.parametrize("variant", ["full", "sdo"])
 @pytest.mark.parametrize("rate", [2.0, 5.0])
-def test_incremental_queues_bitwise_identical(variant, rate):
+@pytest.mark.parametrize("queue_index", ["skiplist", "list"])
+def test_incremental_queues_bitwise_identical(variant, rate, queue_index):
     reqs = traces.generate(traces.SHAREGPT, 250, seed=3, rate=rate)
     legacy = _run(variant, False, reqs)
-    fast = _run(variant, True, reqs)
+    fast = _run(variant, True, reqs, queue_index=queue_index)
     assert len(legacy.samples) == len(fast.samples)
     assert _fingerprint(legacy) == _fingerprint(fast)
 
 
-def test_incremental_identical_with_tight_slos():
+@pytest.mark.parametrize("queue_index", ["skiplist", "list"])
+def test_incremental_identical_with_tight_slos(queue_index):
     """Deadline buckets actually roll over here, exercising lazy re-keying."""
     reqs = traces.generate(traces.SHAREGPT, 150, seed=7, rate=4.0)
     for r in reqs:
         r.slo_deadline = r.arrival + 0.3 + (r.rid % 5) * 0.6
     legacy = _run("full", False, reqs)
-    fast = _run("full", True, reqs)
+    fast = _run("full", True, reqs, queue_index=queue_index)
     assert _fingerprint(legacy) == _fingerprint(fast)
 
 
-def test_ordered_queue_matches_sort_queue_under_churn():
+@pytest.mark.parametrize("queue_index", ["skiplist", "list"])
+def test_ordered_queue_matches_sort_queue_under_churn(queue_index):
     import random
     rng = random.Random(0)
-    oq = OrderedQueue(is_gt=True)
+    oq = OrderedQueue(is_gt=True, index=queue_index)
     plain = []
     now = 0.0
     rid = 0
