@@ -579,6 +579,94 @@ def _cluster_trace(n: int, seed: int):
 
 
 # --------------------------------------------------------------------- #
+# 6b. chaos: seeded fault injection + crash recovery gates
+# --------------------------------------------------------------------- #
+def bench_chaos(n_reqs: int = 8, seed: int = 0) -> Dict:
+    """Fault-tolerance battery (counter-based, gated by --check):
+
+      * a 3-instance fleet loses instance 1 mid-run (scripted kill):
+        every request must still reach exactly one terminal state with
+        zero aborts, >= 1 request must actually take the recovery path,
+        the post-run invariant audit must find no KVC/slot/ring leaks,
+        and the recovered greedy token streams must be bitwise-equal to
+        a fault-free single-engine run of the same stream;
+      * a disaggregated prefill/decode pair has a KV migration payload
+        corrupted in flight: the inject-side checksum must reject it
+        (>= 1 kv_reject), degrade to the recompute fallback, and keep
+        the token streams equal anyway.
+    """
+    import numpy as np
+    from repro.cluster import (EngineFleet, FaultEvent, FaultInjector,
+                               RecoveryConfig, check_fleet_invariants)
+    from repro.configs import get_config
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+    def mk_reqs():
+        rng = np.random.default_rng(seed + 23)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(8, 24)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(6, 14)),
+                                  temperature=0.0))
+            for _ in range(n_reqs)]
+
+    out: Dict = {}
+    t0 = time.perf_counter()
+    fleet = EngineFleet(
+        cfg, n_instances=3, router="least-kvc", seed=seed,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        faults=FaultInjector(
+            schedule=[FaultEvent(t=6.0, kind="kill", target=1)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+    ref = ServingEngine(cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=seed)
+    ref_reqs = mk_reqs()
+    ref.run(ref_reqs)
+    ref_out = [g.output for g in ref_reqs]
+    reqs = fleet.run(mk_reqs())
+    cons = fleet.conservation()
+    try:
+        inv_ok = bool(check_fleet_invariants(fleet)["ok"])
+    except AssertionError as e:
+        inv_ok = False
+        out["invariant_failure"] = str(e)
+    out["kill_recovery"] = {
+        **cons, "invariants_ok": inv_ok,
+        "fault_log": [list(ev) for ev in fleet.faults.log],
+        "tokens_equal_no_fault_run":
+            [g.output for g in reqs] == ref_out,
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    t0 = time.perf_counter()
+    disagg = EngineFleet(
+        cfg, n_instances=2, roles=("prefill", "decode"),
+        router="least-kvc", seed=seed, max_batch=4, capacity=256,
+        rl_accuracy=1.0,
+        faults=FaultInjector(
+            schedule=[FaultEvent(t=1.0, kind="corrupt_kv", count=2)]),
+        recovery=RecoveryConfig())
+    dreqs = disagg.run(mk_reqs())
+    dcons = disagg.conservation()
+    out["corrupt_kv"] = {
+        **dcons, "n_corrupted": disagg.faults.n_corrupted,
+        "tokens_equal_no_fault_run":
+            [g.output for g in dreqs] == ref_out,
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    out["chaos_ok"] = bool(
+        cons["ok"] and inv_ok and cons["aborted"] == 0
+        and cons["recovered"] >= 1
+        and out["kill_recovery"]["tokens_equal_no_fault_run"]
+        and dcons["ok"] and dcons["kv_rejects"] >= 1
+        and out["corrupt_kv"]["tokens_equal_no_fault_run"])
+    return out
+
+
+# --------------------------------------------------------------------- #
 # 7. kernel: single- vs multi-page step time + DMA early-exit accounting
 # --------------------------------------------------------------------- #
 def bench_kernel(reps: int = 3) -> Dict:
@@ -681,6 +769,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "form_batch": bench_form_batch(n_reqs=n, iters=iters),
         "prefill": bench_prefill_retraces(n=8 if quick else 24),
         "cluster": bench_cluster(n_reqs=8, sim_reqs=200 if quick else 400),
+        "chaos": bench_chaos(n_reqs=8),
         "kernel": bench_kernel(reps=2 if quick else 3),
     }
     # speedups scale with problem size (a 10k-queue amplifies the
@@ -743,6 +832,10 @@ def check_regression(factor: float = 2.0,
            "chunked_prefill": bench_chunked_prefill(plen=128, chunk_tfs=32)}
     res["cluster"] = bench_cluster(n_reqs=8, sim_reqs=200)
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
+    # chaos runs LAST: it spins up several fleets of engines, and that
+    # churn collapses the scheduler bench's measured regime (the
+    # quick_reference order must stay a prefix of this rerun's order)
+    res["chaos"] = bench_chaos(n_reqs=8)
     print(json.dumps(res, indent=1))
     failures = []
     if ref is None:
@@ -827,6 +920,16 @@ def check_regression(factor: float = 2.0,
     if cl["fleet_disagg"]["migrations"] < 1:
         failures.append("cluster: disaggregated fleet performed no KV "
                         "migrations")
+    # chaos battery: a mid-run instance kill must be fully absorbed —
+    # exactly-once terminal states, >= 1 recovery, zero leaks, and token
+    # streams bitwise-equal to a fault-free run; a corrupted KV payload
+    # must be checksum-rejected and degrade to recompute without
+    # poisoning the stream. Hard gates, counter-based.
+    ch = res["chaos"]
+    if not ch["chaos_ok"]:
+        failures.append(f"chaos: fault-tolerance gate failed — "
+                        f"kill_recovery={ch['kill_recovery']}, "
+                        f"corrupt_kv={ch['corrupt_kv']}")
     blocking = res["decode_loop"]["async_device"]["blocking_syncs_per_iter"]
     if blocking > 0.05:
         # warn-only: blocking drains also happen when a slow/loaded runner
@@ -847,7 +950,8 @@ def check_regression(factor: float = 2.0,
           f"({res['pressure_megastep']['dispatch_amortization']}x under "
           f"KVC pressure), packed chunk wave saved "
           f"{res['packed_chunk']['dispatches_saved']} dispatches, chunked "
-          f"TTFT bounded, cluster conservation + migration equality hold "
+          f"TTFT bounded, cluster conservation + migration equality hold, "
+          f"chaos battery (kill recovery + KV-corruption rejection) green "
           f"(quick baselines: {ref})")
     return 0
 

@@ -7,18 +7,42 @@ Requests arrive online (Poisson gaps on the iteration clock) through a
 submit/step loop gated on ``has_work()``, and the report includes
 per-request TTFT alongside throughput.
 
+``--chaos SPEC`` injects scripted faults into a cluster run — e.g.
+``kill@25:1`` (kill instance 1 at t=25), ``freeze@40:2/20`` (freeze
+instance 2 for 20 iterations), ``slow@10:0/30x3``, ``corrupt@15``
+(corrupt the next KV migration; caught by the inject-side checksum).
+A fault-free reference run is served first and the chaotic run must
+reproduce its greedy token streams bit-for-bit while every request
+reaches exactly one terminal state (the conservation + invariant audit
+from ``repro.cluster.faults``).
+
   PYTHONPATH=src python examples/serve_trace.py [--impl pallas] [-n 16]
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --router least-kvc
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --disagg --tiny
+  PYTHONPATH=src python examples/serve_trace.py --cluster 3 --tiny \\
+      --chaos kill@25:1
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.cluster import EngineFleet, ROUTERS
+from repro.cluster import (EngineFleet, RecoveryConfig, ROUTERS,
+                           FaultInjector, check_fleet_invariants,
+                           parse_chaos_spec)
 from repro.configs import get_config
 from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+def make_requests(cfg, n, rate, seed):
+    rng = np.random.default_rng(seed)
+    reqs = [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size, rng.integers(6, 40))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(4, 16)),
+                              temperature=0.0))
+        for _ in range(n)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return reqs, arrivals
 
 
 def main():
@@ -34,6 +58,12 @@ def main():
     ap.add_argument("--disagg", action="store_true",
                     help="disaggregated roles: engine 0 prefills, the rest "
                          "decode (KV migration); requires --cluster >= 2")
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="scripted fault schedule for a cluster run, e.g. "
+                         "'kill@25:1,freeze@40:2/20,corrupt@15' — the run "
+                         "must recover: exactly-once terminal states, no "
+                         "leaks, and token streams equal to a fault-free "
+                         "reference; requires --cluster >= 2")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine iteration")
     ap.add_argument("--tiny", action="store_true",
@@ -43,6 +73,8 @@ def main():
 
     if args.disagg and args.cluster < 2:
         ap.error("--disagg needs --cluster >= 2")
+    if args.chaos and args.cluster < 2:
+        ap.error("--chaos needs --cluster >= 2 (a fleet to degrade)")
     cfg = get_config(args.arch).reduced().with_(dtype="float32",
                                                 param_dtype="float32")
     if args.tiny:
@@ -51,21 +83,28 @@ def main():
     kw = dict(max_batch=6, capacity=160, variant=args.variant,
               impl=args.impl)
     n_inst = max(0, args.cluster)
+    fkw = {}
+    if args.chaos:
+        fkw = dict(faults=FaultInjector(schedule=parse_chaos_spec(args.chaos)),
+                   recovery=RecoveryConfig(max_retries=4, backoff_base=1.0))
     if n_inst:
         roles = ["prefill"] + ["decode"] * (n_inst - 1) if args.disagg \
             else None
         server = EngineFleet(cfg, n_instances=n_inst, roles=roles,
-                             router=args.router, seed=args.seed, **kw)
+                             router=args.router, seed=args.seed, **fkw, **kw)
     else:
         server = ServingEngine(cfg, seed=args.seed, **kw)
 
-    rng = np.random.default_rng(args.seed)
-    reqs = [GenRequest(
-        prompt=list(rng.integers(0, cfg.vocab_size, rng.integers(6, 40))),
-        params=SamplingParams(max_new_tokens=int(rng.integers(4, 16)),
-                              temperature=0.0))
-        for _ in range(args.n)]
-    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.n))
+    ref_out = None
+    if args.chaos:
+        # fault-free reference on the same parameters: the chaotic run's
+        # recovered token streams must match it bit-for-bit
+        ref_reqs, ref_arr = make_requests(cfg, args.n, args.rate, args.seed)
+        ref = ServingEngine(cfg, params=server.params, seed=args.seed, **kw)
+        ref.run(ref_reqs, ref_arr)
+        ref_out = [g.output for g in ref_reqs]
+
+    reqs, arrivals = make_requests(cfg, args.n, args.rate, args.seed)
 
     # online submit/step loop on the iteration clock (both backends share
     # the run(reqs, arrivals) contract): requests are delivered at their
@@ -85,6 +124,7 @@ def main():
         kvcs = [i.engine.scheduler.kvc for i in server.instances]
     else:
         completed = server.scheduler.completed
+        cons = None
         extra = "single-engine"
         kvcs = [server.scheduler.kvc]
     ttfts = sorted(r.t_first_token - r.arrival for r in completed
@@ -99,7 +139,21 @@ def main():
     fails = sum(k.n_failures for k in kvcs)
     print(f"KVC accounting: failures={fails}, "
           f"alloc_frac={[round(k.allocated_frac, 2) for k in kvcs]}")
-    if done != args.n:
+
+    if args.chaos:
+        report = check_fleet_invariants(server)
+        equal = [g.output for g in reqs] == ref_out
+        print(f"chaos: faults={server.faults.log} "
+              f"recovered={server.n_recovered} "
+              f"aborted={cons['aborted']} shed={cons['shed']} "
+              f"kv_rejects={cons['kv_rejects']} "
+              f"invariants_ok={report['ok']} tokens_equal={equal}")
+        if not (cons["ok"] and report["ok"] and equal):
+            raise SystemExit(1)
+        terminal = done + cons["aborted"] + cons["shed"]
+        if terminal != args.n:
+            raise SystemExit(1)
+    elif done != args.n:
         raise SystemExit(1)
 
 

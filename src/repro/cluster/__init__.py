@@ -7,8 +7,17 @@ Two interchangeable backends share routers, roles and the autoscaler:
   * ``EngineFleet``  — N real in-process ``ServingEngine``s (shared model
     parameters, per-engine caches/schedulers) driven by one event loop,
     with live KV migration between disaggregated prefill/decode roles.
+
+``repro.cluster.faults`` adds the chaos layer both backends share:
+scripted/probabilistic fault injection (kill / freeze / slow /
+corrupt-KV), bounded-retry crash recovery, and the post-run conservation
+audit (``check_fleet_invariants``).
 """
 from .autoscale import AutoscaleConfig, GoodputAutoscaler
+from .base import DEAD, HEALTH_STATES, HEALTHY, SUSPECT
+from .faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                     InvariantViolation, RecoveryConfig,
+                     check_fleet_invariants, parse_chaos_spec)
 from .fleet import EngineFleet, FleetInstance
 from .router import (LeastKVCRouter, LeastOutstandingTokensRouter, ROUTERS,
                      Router, RoundRobinRouter, make_router)

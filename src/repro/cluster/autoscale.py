@@ -106,6 +106,13 @@ class GoodputAutoscaler:
         self._up_streak = self._down_streak = 0
         return 0
 
+    def invalidate(self) -> None:
+        """Discard the attainment window and breach streaks — called on an
+        instance crash: the window's completions reflect the pre-crash
+        capacity, and acting on them would double-count the failure."""
+        self._met.clear()
+        self._up_streak = self._down_streak = 0
+
     def _act(self, t: float, delta: int) -> None:
         self._last_action_t = t
         self._up_streak = self._down_streak = 0

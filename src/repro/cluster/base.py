@@ -16,6 +16,18 @@ from .autoscale import GoodputAutoscaler
 
 ROLES = ("unified", "prefill", "decode")
 
+# instance health lifecycle (fault injection / recovery):
+#   healthy — routable, stepped normally
+#   suspect — alive but degraded (frozen or slowed): no new routes; its
+#             in-flight state is intact and reachable, so the fleet may
+#             evacuate queued work via real KV re-migration
+#   dead    — crashed: device state lost, never stepped or routed again;
+#             in-flight requests are reclaimed and recovered elsewhere
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+DEAD = "dead"
+HEALTH_STATES = (HEALTHY, SUSPECT, DEAD)
+
 
 def validate_roles(roles, n_instances: int) -> List[str]:
     """Normalize + sanity-check a role assignment: a prefill-only fleet
@@ -40,17 +52,52 @@ class InstanceBase:
         self.role = role
         self.draining = False
         self._n_done = 0              # completions already fed upstream
+        # -- health (fault injection / recovery) ----------------------- #
+        self.health = HEALTHY
+        self.frozen_until = 0.0       # suspect-frozen: not stepped until t
+        self.slow_until = 0.0         # suspect-slow: degraded until t
+        self.slow_factor = 1          # straggler slowdown multiple
+        self._slow_tick = 0
 
     @property
     def scheduler(self):
         raise NotImplementedError
 
+    # -- health -------------------------------------------------------- #
+    @property
+    def alive(self) -> bool:
+        return self.health != DEAD
+
+    def update_health(self, t: float) -> None:
+        """Recover a suspect instance whose freeze/slow episode elapsed."""
+        if self.health == SUSPECT and t >= self.frozen_until \
+                and t >= self.slow_until:
+            self.health = HEALTHY
+            self.slow_factor = 1
+
+    def can_step(self, t: float) -> bool:
+        """Whether the backend may advance this instance at time ``t``:
+        dead never, frozen not before thaw, slowed every Nth tick only."""
+        if self.health == DEAD:
+            return False
+        if self.health == SUSPECT:
+            if t < self.frozen_until:
+                return False
+            if t < self.slow_until and self.slow_factor > 1:
+                self._slow_tick += 1
+                return self._slow_tick % self.slow_factor == 0
+        return True
+
     # -- routing eligibility ------------------------------------------- #
     def accepts_prompts(self) -> bool:
-        return self.role in ("unified", "prefill") and not self.draining
+        return (self.health == HEALTHY
+                and self.role in ("unified", "prefill")
+                and not self.draining)
 
     def accepts_decodes(self) -> bool:
-        return self.role in ("unified", "decode") and not self.draining
+        return (self.health == HEALTHY
+                and self.role in ("unified", "decode")
+                and not self.draining)
 
     # -- InstanceStats protocol ---------------------------------------- #
     def kvc_allocated_frac(self) -> float:
@@ -89,10 +136,10 @@ def execute_autoscale(scaler: GoodputAutoscaler, t: float,
     new routes; it retires once its in-flight work finishes). The scaler
     is told whether a drain victim exists, so a blocked action never
     commits cooldown state."""
-    routable = [i for i in instances if not i.draining]
+    routable = [i for i in instances if not i.draining and i.alive]
     load = sum(i.kvc_allocated_frac() for i in routable) \
         / max(1, len(routable))
-    n_drain = sum(1 for i in instances if i.draining)
+    n_drain = sum(1 for i in instances if i.draining and i.alive)
     victims = [i for i in routable if i.role == "unified"]
     action = scaler.decide(t, n_live=len(routable), n_draining=n_drain,
                            load_frac=load, can_drain=bool(victims))

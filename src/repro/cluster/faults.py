@@ -1,0 +1,267 @@
+"""Deterministic chaos layer for the cluster backends.
+
+``FaultInjector`` fires scripted (or seeded-probabilistic) instance
+faults — crash, freeze, straggler slowdown — and corrupts KV-migration
+payloads in flight.  Both backends poll it from their event loops:
+``EngineFleet`` (real engines) and ``ClusterSim`` (discrete-event model)
+share the same injector, so a fault schedule reproduces bit-for-bit on
+either.
+
+``RecoveryConfig`` bounds what the fleet does about it: per-request
+retry budget with exponential backoff, a hard deadline multiple past
+which requests are aborted, and admission shedding when projected
+completion would blow the SLO anyway.
+
+``check_fleet_invariants`` is the conservation audit run after every
+chaos battery: every submitted request reaches exactly one terminal
+state (completed | aborted | shed), and no live engine leaks KVC
+blocks, batch slots, or ring/drain state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .base import DEAD, HEALTHY, SUSPECT
+
+FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv")
+
+
+@dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One scripted fault. ``target`` is an instance id (-1 = injector
+    picks among the alive); ``duration``/``factor`` only apply to
+    freeze/slow; ``count`` only to corrupt_kv (number of payloads)."""
+    t: float
+    kind: str = "kill"
+    target: int = -1
+    duration: float = 8.0
+    factor: int = 2
+    count: int = 1
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+
+
+@dataclass
+class RecoveryConfig:
+    """Fleet-side policy for surviving injected (or real) faults."""
+    max_retries: int = 3          # recovery attempts per request
+    backoff_base: float = 2.0     # redelivery delay = base * 2**attempt
+    deadline_factor: float = 0.0  # abort past submit + k*(deadline-submit);
+                                  # 0 disables the watchdog
+    shed: bool = False            # reject admissions projected to miss SLO
+    shed_headroom: float = 1.0    # safety multiplier on the projection
+
+
+class InvariantViolation(AssertionError):
+    """A conservation / leak invariant failed after a chaos run."""
+
+
+class FaultInjector:
+    """Schedule-driven + seeded-probabilistic fault source.
+
+    ``poll(t, instances)`` fires every scheduled event with ``ev.t <= t``
+    and then rolls per-alive-instance probabilistic faults; it returns
+    the list of events fired this call (empty most of the time).
+    ``corrupt_payload`` is called by the migration path on every KV
+    payload and flips one tensor element when a corruption is pending.
+
+    Scheduled kills always fire; probabilistic kills never reduce the
+    fleet below ``min_alive``.
+    """
+
+    def __init__(self, schedule: Sequence[FaultEvent] = (),
+                 p_kill: float = 0.0, p_freeze: float = 0.0,
+                 p_corrupt: float = 0.0, freeze_duration: float = 8.0,
+                 seed: int = 0, min_alive: int = 1):
+        self.schedule = sorted(schedule)
+        self._idx = 0
+        self.p_kill = p_kill
+        self.p_freeze = p_freeze
+        self.p_corrupt = p_corrupt
+        self.freeze_duration = freeze_duration
+        self.min_alive = min_alive
+        self.rng = np.random.default_rng(seed)
+        self._pending_corrupt = 0     # payloads left to corrupt
+        self.n_corrupted = 0
+        self.log: List[Tuple[float, str, int]] = []
+
+    # ------------------------------------------------------------------ #
+    def poll(self, t: float, instances: Sequence) -> List[FaultEvent]:
+        fired: List[FaultEvent] = []
+        while self._idx < len(self.schedule) and self.schedule[self._idx].t <= t:
+            ev = self.schedule[self._idx]
+            self._idx += 1
+            if self._apply(ev, t, instances, forced=True):
+                fired.append(ev)
+        if self.p_kill or self.p_freeze or self.p_corrupt:
+            for inst in instances:
+                if not inst.alive:
+                    continue
+                if self.p_kill and self.rng.random() < self.p_kill:
+                    ev = FaultEvent(t=t, kind="kill", target=inst.id)
+                    if self._apply(ev, t, instances, forced=False):
+                        fired.append(ev)
+                elif self.p_freeze and self.rng.random() < self.p_freeze:
+                    ev = FaultEvent(t=t, kind="freeze", target=inst.id,
+                                    duration=self.freeze_duration)
+                    if self._apply(ev, t, instances, forced=False):
+                        fired.append(ev)
+            if self.p_corrupt and self.rng.random() < self.p_corrupt:
+                self._pending_corrupt += 1
+                self.log.append((t, "corrupt_kv", -1))
+        return fired
+
+    def _apply(self, ev: FaultEvent, t: float, instances: Sequence,
+               forced: bool) -> bool:
+        if ev.kind == "corrupt_kv":
+            self._pending_corrupt += ev.count
+            self.log.append((t, ev.kind, ev.target))
+            return True
+        inst = self._resolve(ev.target, instances)
+        if inst is None:
+            return False
+        if ev.kind == "kill":
+            alive = sum(1 for i in instances if i.alive)
+            if not forced and alive <= self.min_alive:
+                return False            # probabilistic kills spare the last
+            inst.health = DEAD
+        elif ev.kind == "freeze":
+            inst.health = SUSPECT
+            inst.frozen_until = max(inst.frozen_until, t + ev.duration)
+        elif ev.kind == "slow":
+            inst.health = SUSPECT
+            inst.slow_until = max(inst.slow_until, t + ev.duration)
+            inst.slow_factor = max(2, int(ev.factor))
+        self.log.append((t, ev.kind, inst.id))
+        return True
+
+    def _resolve(self, target: int, instances: Sequence):
+        if target >= 0:
+            for i in instances:
+                if i.id == target:
+                    return i if i.alive else None
+            return None
+        cands = [i for i in instances if i.health == HEALTHY]
+        if not cands:
+            return None
+        return cands[int(self.rng.integers(len(cands)))]
+
+    # ------------------------------------------------------------------ #
+    def corrupt_payload(self, payload: dict) -> dict:
+        """Bit-flip one element of the first KV tensor when a corruption
+        is pending. The checksum in the payload is left as exported, so
+        the receiver's verify step rejects it."""
+        if self._pending_corrupt <= 0 or payload.get("kv") is None:
+            return payload
+        self._pending_corrupt -= 1
+        self.n_corrupted += 1
+        kv = {kind: {n: np.array(a) for n, a in kv_part.items()}
+              for kind, kv_part in payload["kv"].items()}
+        kind = sorted(kv)[0]
+        arr = kv[kind]["k"]
+        arr.flat[0] = arr.flat[0] + 1
+        out = dict(payload)
+        out["kv"] = kv
+        return out
+
+
+# ---------------------------------------------------------------------- #
+# chaos spec parsing — "kill@25:1,freeze@40:2/20,slow@10:-1/30x3"
+# ---------------------------------------------------------------------- #
+def parse_chaos_spec(spec: str) -> List[FaultEvent]:
+    """Parse ``kind@t[:target][/duration][xfactor]`` items, comma-separated.
+
+    Examples::
+
+        kill@25            kill some healthy instance at t=25
+        kill@25:1          kill instance 1 at t=25
+        freeze@40:2/20     freeze instance 2 for 20s at t=40
+        slow@10:0/30x3     slow instance 0 by 3x for 30s at t=10
+        corrupt@15         corrupt the next KV migration after t=15
+    """
+    events: List[FaultEvent] = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        kind, _, rest = item.partition("@")
+        kind = {"corrupt": "corrupt_kv"}.get(kind, kind)
+        assert kind in FAULT_KINDS, f"unknown fault kind in {item!r}"
+        factor = 2
+        if "x" in rest:
+            rest, _, f = rest.rpartition("x")
+            factor = int(f)
+        duration = 8.0
+        if "/" in rest:
+            rest, _, d = rest.partition("/")
+            duration = float(d)
+        target = -1
+        if ":" in rest:
+            rest, _, tg = rest.partition(":")
+            target = int(tg)
+        events.append(FaultEvent(t=float(rest), kind=kind, target=target,
+                                 duration=duration, factor=factor))
+    return events
+
+
+# ---------------------------------------------------------------------- #
+# conservation / leak audit
+# ---------------------------------------------------------------------- #
+def check_fleet_invariants(fleet, strict: bool = True) -> dict:
+    """Audit an ``EngineFleet`` after it drained: exactly-once terminal
+    states over everything submitted, and zero resource leaks on every
+    live engine. Returns a report dict; raises ``InvariantViolation``
+    listing every failure when ``strict``."""
+    problems: List[str] = []
+    n_completed = n_aborted = n_shed = 0
+    for g in fleet.submitted:
+        status = getattr(g, "status", None)
+        if status == "completed" or (status is None and g.t_done is not None):
+            n_completed += 1
+        elif status == "aborted":
+            n_aborted += 1
+        elif status == "shed":
+            n_shed += 1
+        else:
+            problems.append(f"request non-terminal: status={status!r} "
+                            f"t_done={g.t_done} prompt_len={len(g.prompt)}")
+    if fleet.double_routes:
+        problems.append(f"double routes: {fleet.double_routes}")
+    if getattr(fleet, "_redeliver", None):
+        problems.append(f"undelivered recoveries: {len(fleet._redeliver)}")
+    for inst in fleet.instances:
+        if not inst.alive:
+            continue                   # dead state is by definition lost
+        eng = inst.engine
+        tag = f"instance {inst.id}"
+        if eng.has_work():
+            problems.append(f"{tag}: engine still has work")
+        try:
+            eng.scheduler.kvc.check_invariants()
+        except AssertionError as e:
+            problems.append(f"{tag}: KVC invariant: {e}")
+        if eng.scheduler.kvc.allocs:
+            problems.append(f"{tag}: leaked KVC allocs "
+                            f"{sorted(eng.scheduler.kvc.allocs)}")
+        if len(eng.free_slots) != eng.max_batch:
+            problems.append(f"{tag}: slot leak {len(eng.free_slots)}/"
+                            f"{eng.max_batch}")
+        if eng.slot_of:
+            problems.append(f"{tag}: slot_of not empty {sorted(eng.slot_of)}")
+        for name in ("_pending_drain", "_chunk_progress", "_rec_state",
+                     "_arrivals", "_pending_injects", "_pending_aborts"):
+            v = getattr(eng, name, None)
+            if v:
+                problems.append(f"{tag}: {name} not empty ({len(v)})")
+    report = {
+        "completed": n_completed, "aborted": n_aborted, "shed": n_shed,
+        "submitted": len(fleet.submitted), "problems": problems,
+        "ok": not problems,
+    }
+    if strict and problems:
+        raise InvariantViolation("; ".join(problems))
+    return report

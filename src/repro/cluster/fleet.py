@@ -19,6 +19,28 @@ and schedulers stay per-engine), so an N-instance fleet costs N caches,
 not N models. An optional ``GoodputAutoscaler`` is polled once per loop
 tick: +1 spawns a fresh unified engine from the shared parameters, -1
 marks one draining (no new routes; it retires via ``has_work``).
+
+Fault tolerance (``faults``/``recovery`` kwargs):
+
+  * an optional ``FaultInjector`` is polled every tick; it crashes,
+    freezes, or slows instances (``InstanceBase`` health lifecycle) and
+    corrupts KV payloads in flight (caught by the checksum at inject);
+  * **crash recovery** — when an instance dies, every in-flight request
+    on it is reclaimed and redelivered with bounded retries and
+    exponential backoff. A request with generated tokens is re-seeded
+    through the receiving engine's swap-recompute path (greedy decoding
+    regenerates the lost ring tail bit-exactly); one with none is simply
+    resubmitted at its original arrival time;
+  * **degradation** — a frozen (suspect) instance keeps its device state,
+    so its *queued* GTs are evacuated by real KV re-migration while its
+    running batch waits for the thaw;
+  * **deadline watchdog / shedding** — ``RecoveryConfig.deadline_factor``
+    aborts requests a multiple past their SLO deadline;
+    ``RecoveryConfig.shed`` fast-fails admissions whose projected finish
+    already misses it (typed ``RequestShed``).
+
+``repro.cluster.faults.check_fleet_invariants`` audits the terminal
+exactly-once + zero-leak contract after any run, chaotic or not.
 """
 from __future__ import annotations
 
@@ -27,14 +49,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core.predictor import apply_padding, bucketize
 from repro.core.request import Request
 from repro.models import model
 from repro.models.config import ModelConfig
-from repro.serving import GenRequest, ServingEngine
+from repro.serving import GenRequest, RequestShed, ServingEngine
 from repro.serving.engine import serve_stream
 
 from .autoscale import GoodputAutoscaler
-from .base import InstanceBase, ROLES, execute_autoscale, validate_roles
+from .base import (HEALTHY, SUSPECT, InstanceBase, ROLES,
+                   execute_autoscale, validate_roles)
+from .faults import FaultInjector, RecoveryConfig
 from .router import Router, make_router
 
 __all__ = ["EngineFleet", "FleetInstance", "ROLES"]
@@ -59,13 +84,17 @@ class EngineFleet:
                  router: str = "least-kvc", seed: int = 0,
                  kv_migration: bool = True,
                  autoscaler: Optional[GoodputAutoscaler] = None,
+                 faults: Optional[FaultInjector] = None,
+                 recovery: Optional[RecoveryConfig] = None,
                  **engine_kwargs):
         """``engine_kwargs`` are forwarded to every ``ServingEngine``
         (max_batch, capacity, scheduler_cfg, engine_cfg, impl, ...).
         ``kv_migration=False`` forces the swap-recompute fallback for every
         migration (the reference path the KV image is tested against).
         Fleet size under autoscaling is bounded by the scaler's
-        ``AutoscaleConfig.max_instances``."""
+        ``AutoscaleConfig.max_instances``. ``faults=None`` (the default)
+        leaves every fault-tolerance path dormant: no injector polls, no
+        recovery bookkeeping touches the hot loop."""
         self.cfg = cfg
         self.kv_migration = kv_migration
         self.engine_kwargs = dict(engine_kwargs)
@@ -78,6 +107,8 @@ class EngineFleet:
         self.router: Router = make_router(router, seed)
         self.decode_router: Router = make_router(router, seed + 1)
         self.autoscaler = autoscaler
+        self.faults = faults
+        self.recovery = recovery or RecoveryConfig()
         # conservation accounting: a GenRequest is routed exactly once
         self.route_of: Dict[int, int] = {}       # id(GenRequest) -> iid
         self.submitted: List[GenRequest] = []
@@ -86,6 +117,15 @@ class EngineFleet:
         self.n_kv_fallbacks = 0
         self.scale_events: List[Tuple[float, int]] = []
         self._next_id = n_instances
+        # crash recovery state
+        self._redeliver: List[Tuple[float, GenRequest]] = []
+        self._retries: Dict[int, int] = {}       # id(GenRequest) -> attempts
+        self._dead_handled: set = set()          # instance ids reclaimed
+        self.n_recovered = 0
+        self.n_failed_recoveries = 0
+        self.n_evacuations = 0
+        self.n_shed = 0
+        self.n_deadline_aborts = 0
 
     def _make_engine(self, i: int) -> ServingEngine:
         return ServingEngine(self.cfg, params=self.params,
@@ -93,58 +133,244 @@ class EngineFleet:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: GenRequest, now: float) -> int:
-        """Route and submit one request; returns the serving instance id."""
+        """Route and submit one request; returns the serving instance id.
+        Raises ``RequestShed`` (after recording the terminal state) when
+        admission control projects an unavoidable SLO miss, or when no
+        live instance exists to serve it."""
         if id(req) in self.route_of:
             self.double_routes += 1
         cands = [i for i in self.instances if i.accepts_prompts()]
         if not cands:
             cands = [i for i in self.instances
-                     if i.role in ("unified", "prefill")]
+                     if i.alive and i.role in ("unified", "prefill")]
+        if not cands:
+            return self._shed(req, now, "no-live-instance")
         demand = len(req.prompt) + req.params.max_new_tokens
         inst = self.router.choose(cands, demand)
+        if self.recovery.shed and req.deadline != float("inf"):
+            # projected finish on the chosen instance, on the fleet's
+            # iteration clock: drain the backlog (~1 token/slot/iter),
+            # then produce this request's own tokens
+            backlog = inst.outstanding_tokens() / max(1, inst.engine.max_batch)
+            eta = now + (backlog + len(req.prompt) / 64.0
+                         + req.params.max_new_tokens) \
+                * self.recovery.shed_headroom
+            if eta > req.deadline:
+                return self._shed(req, now, "projected-slo-miss")
         inst.engine.submit(req, now)
         self.route_of[id(req)] = inst.id
         self.submitted.append(req)
         return inst.id
 
+    def _shed(self, req: GenRequest, now: float, reason: str) -> int:
+        req.t_submit = now
+        req.status = "shed"
+        req.fail_reason = reason
+        self.submitted.append(req)
+        self.n_shed += 1
+        raise RequestShed(req, reason)
+
     def has_work(self) -> bool:
-        return any(i.engine.has_work() for i in self.instances)
+        return any(i.alive and i.engine.has_work()
+                   for i in self.instances) or bool(self._redeliver)
 
     # ------------------------------------------------------------------ #
     def step(self, now: Optional[float] = None) -> int:
-        """One fleet tick: step every engine with work, then migrate
-        finished prompts off prefill-role engines. Returns completions."""
+        """One fleet tick: inject scheduled faults, reclaim/redeliver
+        crashed work, enforce deadlines, step every live engine with work,
+        then migrate finished prompts off prefill-role engines. Returns
+        completions."""
         now = time.monotonic() if now is None else now
+        if self.faults is not None:
+            self.faults.poll(now, self.instances)
+        self._reclaim_dead(now)
+        if self._redeliver:
+            self._deliver_redeliveries(now)
+        if self.recovery.deadline_factor > 0:
+            self._enforce_deadlines(now)
         done = 0
         for inst in self.instances:
-            if inst.engine.has_work():
+            inst.update_health(now)
+            if inst.alive and inst.engine.has_work() and inst.can_step(now):
                 done += inst.engine.step(now)
         for inst in self.instances:
-            if inst.role == "prefill":
+            if not inst.alive:
+                continue
+            if inst.role == "prefill" and inst.health == HEALTHY:
                 self._migrate_ready(inst, now)
+            elif inst.health == SUSPECT and now < inst.frozen_until:
+                # frozen-but-reachable: evacuate queued GTs by real KV
+                # re-migration so they decode elsewhere during the outage
+                self._evacuate(inst, now)
         if self.autoscaler is not None:
             self._autoscale(now)
         return done
 
+    # -- crash recovery ------------------------------------------------- #
+    def _reclaim_dead(self, now: float) -> None:
+        """Sweep newly-dead instances: every non-terminal request they
+        held is queued for redelivery (bounded retries + backoff). The
+        dead engine's undrained ring tokens are dropped — device state is
+        gone; greedy recompute regenerates them bit-exactly."""
+        for inst in self.instances:
+            if inst.alive or inst.id in self._dead_handled:
+                continue
+            self._dead_handled.add(inst.id)
+            eng = inst.engine
+            eng._pending_drain.clear()       # ring state died with the device
+            victims = [g for g in eng.requests.values() if not g.finished]
+            for payload, _ in eng._pending_injects:   # migrated in, unapplied
+                if not payload["gen"].finished:
+                    victims.append(payload["gen"])
+            eng._pending_injects.clear()
+            eng._pending_aborts.clear()
+            for g in victims:
+                self._requeue(g, now, "crash")
+            if self.autoscaler is not None:
+                self.autoscaler.invalidate()
+
+    def _requeue(self, g: GenRequest, now: float, reason: str) -> None:
+        att = self._retries.get(id(g), 0)
+        if att >= self.recovery.max_retries:
+            g.status = "aborted"
+            g.fail_reason = f"retries-exhausted({reason})"
+            self.n_failed_recoveries += 1
+            return
+        self._retries[id(g)] = att + 1
+        delay = self.recovery.backoff_base * (2.0 ** att)
+        self._redeliver.append((now + delay, g))
+
+    def _deliver_redeliveries(self, now: float) -> None:
+        due = [(t, g) for t, g in self._redeliver if t <= now]
+        if not due:
+            return
+        self._redeliver = [(t, g) for t, g in self._redeliver if t > now]
+        for _, g in due:
+            if g.finished:               # aborted while waiting (deadline)
+                continue
+            out, eos = g.output, g.params.eos_token
+            rl = g.params.max_new_tokens
+            if eos is not None and eos in out:
+                rl = out.index(eos) + 1
+            if len(out) >= rl:
+                # everything needed was already drained before the crash
+                del out[rl:]
+                g.status = "completed"
+                g.t_done = now
+                self.n_recovered += 1
+                continue
+            cands = [i for i in self.instances if i.accepts_prompts()] \
+                or [i for i in self.instances if i.alive and not i.draining] \
+                or [i for i in self.instances if i.alive]
+            if not cands:
+                self._requeue(g, now, "no-live-instance")  # burns a retry
+                continue
+            demand = len(g.prompt) + rl - len(out)
+            tgt = self.router.choose(cands, demand)
+            if out:
+                # re-seed through the swap-recompute inject path: the
+                # receiver re-prefills prompt + generated-so-far and
+                # continues decoding from the last drained token
+                r = Request(rid=-1, prompt_len=len(g.prompt), true_rl=rl,
+                            arrival=g.t_submit, slo_deadline=g.deadline)
+                r.generated = len(out)
+                r.prompt_done = r.prompt_len
+                r.n_preemptions = 1      # recovery is a forced preemption
+                r.predicted_rl = tgt.engine.predictor.predict(r)
+                scfg = tgt.engine.scheduler.cfg
+                r.padded_rl = apply_padding(r.predicted_rl, scfg.pad_ratio,
+                                            scfg.bucket)
+                if r.padded_rl <= r.generated:
+                    r.padded_rl = bucketize(r.generated + scfg.bucket,
+                                            scfg.bucket)
+                payload = {"gen": g, "req": r, "kv": None,
+                           "ctx": len(g.prompt) + len(out) - 1,
+                           "last_tok": out[-1], "kv_crc": None}
+                tgt.engine.inject_kv(payload, now)
+            else:
+                tgt.engine.submit(g, g.t_submit)
+            self.route_of[id(g)] = tgt.id    # re-route, not a double route
+            self.n_recovered += 1
+
+    # -- deadline watchdog ---------------------------------------------- #
+    def _enforce_deadlines(self, now: float) -> None:
+        k = self.recovery.deadline_factor
+        for inst in self.instances:
+            if not inst.alive:
+                continue
+            for g in list(inst.engine.requests.values()):
+                if g.finished or g.deadline == float("inf"):
+                    continue
+                if now > g.t_submit + k * (g.deadline - g.t_submit):
+                    if inst.engine.abort(g.rid, now, "deadline"):
+                        self.n_deadline_aborts += 1
+        kept = []
+        for t, g in self._redeliver:
+            if (not g.finished and g.deadline != float("inf")
+                    and now > g.t_submit + k * (g.deadline - g.t_submit)):
+                g.status = "aborted"
+                g.fail_reason = "deadline"
+                self.n_deadline_aborts += 1
+            else:
+                kept.append((t, g))
+        self._redeliver = kept
+
+    # -- migration / evacuation ----------------------------------------- #
+    def _decode_targets(self, exclude_id: int = -1) -> List[FleetInstance]:
+        cands = [i for i in self.instances
+                 if i.accepts_decodes() and i.id != exclude_id]
+        if not cands:
+            cands = [i for i in self.instances
+                     if i.health == HEALTHY
+                     and i.role in ("unified", "decode")
+                     and i.id != exclude_id]
+        return cands
+
+    def _transfer(self, src: FleetInstance, r, tgt: FleetInstance,
+                  now: float) -> None:
+        payload = src.engine.export_kv(r.rid)
+        if not self.kv_migration:
+            payload["kv"] = None
+        if self.faults is not None:
+            payload = self.faults.corrupt_payload(payload)
+        if payload["kv"] is None:
+            self.n_kv_fallbacks += 1
+        tgt.engine.inject_kv(payload, now)
+        self.route_of[id(payload["gen"])] = tgt.id
+
     def _migrate_ready(self, inst: FleetInstance, now: float) -> None:
         """Move every queued GT off a prefill engine to a decode engine."""
+        if inst.engine._mega_left > 0:
+            # only possible when a prior tick had no live decode target and
+            # the stranded GTs started decoding here; wait for the window
+            return
         sched = inst.engine.scheduler
         for r in list(sched.gt_queue):
-            payload = inst.engine.export_kv(r.rid)
-            if not self.kv_migration:
-                payload["kv"] = None
-            cands = [i for i in self.instances if i.accepts_decodes()]
+            cands = self._decode_targets()
             if not cands:
-                cands = [i for i in self.instances
-                         if i.role in ("unified", "decode")]
-            demand = payload["req"].prompt_len \
-                + payload["req"].remaining_predicted
+                return                   # no live receiver; retry next tick
+            demand = r.prompt_len + r.remaining_predicted
             tgt = self.decode_router.choose(cands, demand)
-            if payload["kv"] is None:
-                self.n_kv_fallbacks += 1
-            tgt.engine.inject_kv(payload, now)
+            self._transfer(inst, r, tgt, now)
             self.n_migrations += 1
 
+    def _evacuate(self, inst: FleetInstance, now: float) -> None:
+        """Drain a frozen instance's *queued* GTs to healthy peers via
+        real KV re-migration (its device state is intact, just slow to
+        schedule); the running batch rides out the freeze in place."""
+        if inst.engine._mega_left > 0:
+            return                       # window open: state not exportable
+        sched = inst.engine.scheduler
+        for r in list(sched.gt_queue):
+            cands = self._decode_targets(exclude_id=inst.id)
+            if not cands:
+                return
+            demand = r.prompt_len + r.remaining_predicted
+            tgt = self.decode_router.choose(cands, demand)
+            self._transfer(inst, r, tgt, now)
+            self.n_evacuations += 1
+
+    # ------------------------------------------------------------------ #
     def _spawn(self, now: float) -> None:
         iid = self._next_id
         self._next_id += 1
@@ -162,15 +388,37 @@ class EngineFleet:
     # ------------------------------------------------------------------ #
     def run(self, gen_requests: Sequence[GenRequest],
             arrivals: Optional[Sequence[float]] = None,
-            max_steps: int = 100_000) -> List[GenRequest]:
+            max_steps: int = 100_000,
+            stall_limit: int = 2_000) -> List[GenRequest]:
         """Serve a batch (or, with ``arrivals``, an online stream on the
         fleet's iteration clock) to completion — the same contract as
         ``ServingEngine.run``, one shared driver."""
-        return serve_stream(self, gen_requests, arrivals, max_steps)
+        return serve_stream(self, gen_requests, arrivals, max_steps,
+                            stall_limit)
 
     def flush(self) -> None:
         for inst in self.instances:
-            inst.engine.flush()
+            if inst.alive:
+                inst.engine.flush()
+
+    # -- liveness / diagnostics ----------------------------------------- #
+    def progress_state(self) -> tuple:
+        """Monotone fleet fingerprint for the ``serve_stream`` watchdog."""
+        insts = tuple((i.id, i.health, i.engine.progress_state())
+                      for i in self.instances)
+        term = sum(1 for g in self.submitted if g.finished)
+        return (insts, term, self.n_migrations, self.n_recovered,
+                self.n_evacuations, len(self._redeliver))
+
+    def debug_state(self) -> Dict[str, object]:
+        state: Dict[str, object] = {
+            f"instance_{inst.id}": {"health": inst.health,
+                                    "role": inst.role,
+                                    "draining": inst.draining,
+                                    **inst.engine.debug_state()}
+            for inst in self.instances}
+        state["redeliver"] = len(self._redeliver)
+        return state
 
     # ------------------------------------------------------------------ #
     def completed_requests(self) -> List[Request]:
@@ -179,11 +427,27 @@ class EngineFleet:
                 for r in inst.engine.scheduler.completed]
 
     def conservation(self) -> Dict[str, int]:
-        """Every submitted request finished exactly once, somewhere."""
-        done = sum(1 for g in self.submitted if g.t_done is not None)
+        """Every submitted request reached exactly one terminal state."""
+        done = aborted = shed = 0
+        for g in self.submitted:
+            status = getattr(g, "status", None)
+            if status == "completed" or (status is None
+                                         and g.t_done is not None):
+                done += 1
+            elif status == "aborted":
+                aborted += 1
+            elif status == "shed":
+                shed += 1
+        pending = len(self.submitted) - done - aborted - shed
         return {"submitted": len(self.submitted),
                 "completed": done,
+                "aborted": aborted,
+                "shed": shed,
+                "pending": pending,
                 "double_routes": self.double_routes,
                 "migrations": self.n_migrations,
-                "ok": int(self.double_routes == 0
-                          and done == len(self.submitted))}
+                "recovered": self.n_recovered,
+                "evacuations": self.n_evacuations,
+                "kv_rejects": sum(i.engine.n_kv_rejects
+                                  for i in self.instances),
+                "ok": int(self.double_routes == 0 and pending == 0)}

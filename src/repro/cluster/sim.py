@@ -40,12 +40,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CostModel
 from repro.core.metrics import SimResult
-from repro.core.request import Request
+from repro.core.request import Request, State
 from repro.core.scheduler import BaseScheduler
 from repro.core.simulator import SimInstance
 
 from .autoscale import GoodputAutoscaler
-from .base import InstanceBase, ROLES, execute_autoscale, validate_roles
+from .base import (SUSPECT, InstanceBase, ROLES, execute_autoscale,
+                   validate_roles)
+from .faults import FaultInjector, RecoveryConfig
 from .router import Router, make_router
 
 _INF = float("inf")
@@ -77,11 +79,16 @@ class ClusterInstance(InstanceBase):
 
     # -- event-loop interface ------------------------------------------ #
     def next_time(self) -> float:
+        if not self.alive:
+            return _INF
+        t = _INF
         if self.sim.has_work() and not self.stalled:
-            return self.sim.t
-        if self.pending:
-            return max(self.sim.t, self.pending[0][0])
-        return _INF
+            t = self.sim.t
+        elif self.pending:
+            t = max(self.sim.t, self.pending[0][0])
+        if t != _INF and self.health == SUSPECT:
+            t = max(t, self.frozen_until)    # frozen: wakes at the thaw
+        return t
 
     def deliver_due(self) -> None:
         if not self.pending:
@@ -113,6 +120,9 @@ class ClusterResult:
     route_of: Dict[int, int] = field(default_factory=dict)
     completed_by: Dict[int, List[int]] = field(default_factory=dict)
     scale_events: List[Tuple[float, int]] = field(default_factory=list)
+    aborted: List[int] = field(default_factory=list)   # terminal, not done
+    n_recovered: int = 0
+    fault_log: List[Tuple[float, str, int]] = field(default_factory=list)
 
     @property
     def n_instances(self) -> int:
@@ -138,23 +148,31 @@ class ClusterResult:
         return len(self.completed) / max(1e-9, self.wall_time)
 
     def conservation(self) -> Dict[str, int]:
-        """Structural invariant: every routed rid completes exactly once,
-        on exactly one instance, with zero double-routes."""
+        """Structural invariant: every routed rid reaches exactly one
+        terminal state — completed on exactly one instance, or aborted
+        (retry budget / deadline / no-live-instance) — with zero
+        double-routes."""
         counts: Dict[int, int] = {}
         for rids in self.completed_by.values():
             for rid in rids:
                 counts[rid] = counts.get(rid, 0) + 1
+        aborted = set(self.aborted)
         dups = sum(1 for c in counts.values() if c > 1)
-        missing = sum(1 for rid in self.route_of if counts.get(rid, 0) == 0)
+        both = sum(1 for rid in aborted if counts.get(rid, 0) > 0)
+        missing = sum(1 for rid in self.route_of
+                      if counts.get(rid, 0) == 0 and rid not in aborted)
         return {"submitted": len(self.requests),
                 "routed": self.n_routed,
                 "completed": len(counts),
+                "aborted": len(aborted),
                 "duplicate_completions": dups,
                 "uncompleted_routed": missing,
                 "double_routes": self.double_routes,
-                "ok": int(dups == 0 and self.double_routes == 0
+                "ok": int(dups == 0 and both == 0
+                          and self.double_routes == 0
                           and missing == 0
-                          and len(counts) == len(self.requests))}
+                          and len(counts) + len(aborted)
+                          == len(self.requests))}
 
 
 class ClusterSim:
@@ -164,11 +182,15 @@ class ClusterSim:
                  roles: Optional[Sequence[str]] = None,
                  seed: int = 0,
                  autoscaler: Optional[GoodputAutoscaler] = None,
+                 faults: Optional[FaultInjector] = None,
+                 recovery: Optional[RecoveryConfig] = None,
                  collect_samples: bool = False,
                  name: Optional[str] = None):
         self.factory = scheduler_factory
         self.cost = cost
         self.collect_samples = collect_samples
+        self.faults = faults
+        self.recovery = recovery or RecoveryConfig()
         roles = validate_roles(roles, n_instances)
         self.instances: List[ClusterInstance] = [
             ClusterInstance(i, SimInstance(scheduler_factory(i), cost,
@@ -189,22 +211,36 @@ class ClusterSim:
         self.scale_events: List[Tuple[float, int]] = []
         self._next_id = n_instances
         self._mig_seq = 0
+        # fault-tolerance accounting
+        self._retries: Dict[int, int] = {}       # rid -> recovery attempts
+        self._dead_handled: set = set()
+        self.aborted_rids: List[int] = []
+        self.n_recovered = 0
 
     # ------------------------------------------------------------------ #
-    def _route(self, req: Request, t: float, as_gt: bool) -> None:
+    def _route(self, req: Request, t: float, as_gt: bool,
+               rerouted: bool = False) -> None:
         cands = [i for i in self.instances
                  if (i.accepts_decodes() if as_gt else i.accepts_prompts())]
         if not cands:
-            # every eligible instance is draining: fall back to the right
-            # role regardless (a route beats dropping the request)
+            # every eligible instance is draining or degraded: fall back
+            # to any live instance of the right role (a route beats
+            # dropping the request), then to any live instance at all
             want = ("unified", "decode") if as_gt else ("unified", "prefill")
-            cands = [i for i in self.instances if i.role in want] \
-                or self.instances
+            cands = [i for i in self.instances
+                     if i.alive and i.role in want] \
+                or [i for i in self.instances if i.alive]
+        if not cands:
+            # whole fleet is dead: the request cannot be served, ever —
+            # record a terminal abort instead of losing it silently
+            req.set_state(State.ABORTED, t)
+            self.aborted_rids.append(req.rid)
+            return
         demand = req.prompt_len + max(req.padded_rl, req.predicted_rl, 1)
         router = self.decode_router if as_gt else self.router
         inst = router.choose(cands, demand)
         if not as_gt:
-            if req.rid in self.route_of:
+            if req.rid in self.route_of and not rerouted:
                 self.double_routes += 1
             self.route_of[req.rid] = inst.id
         inst.pending.append((t, req, as_gt))
@@ -224,8 +260,64 @@ class ClusterSim:
             xfer = self.cost.kv_transfer_time(tokens)
             r.swap_time += xfer
             self._mig_seq += 1
-            heapq.heappush(heap, (inst.sim.t + xfer, self._mig_seq, r))
+            heapq.heappush(heap, (inst.sim.t + xfer, self._mig_seq, r, True))
             self.n_migrations += 1
+
+    # -- fault handling / crash recovery -------------------------------- #
+    def _reclaim_dead(self, t: float, heap: List) -> None:
+        """Sweep newly-dead instances: pull every non-terminal request off
+        the carcass (undelivered pendings, queues, running groups — the
+        scheduler's ``cancel`` releases KVC and cascades pipelined
+        orphans) and queue each for recovery elsewhere."""
+        for inst in self.instances:
+            if inst.alive or inst.id in self._dead_handled:
+                continue
+            self._dead_handled.add(inst.id)
+            victims = [r for _, r, _ in inst.pending]
+            inst.pending.clear()
+            inst.stalled = False
+            sched = inst.sim.scheduler
+            while True:
+                nxt = next(iter(sched.pt_queue), None) \
+                    or next(iter(sched.gt_queue), None)
+                if nxt is None:
+                    nxt = next((m for g in sched.running_groups
+                                for m in g.members), None)
+                if nxt is None:
+                    break
+                c = sched.cancel(nxt.rid, t)
+                if c is None:          # defensive: avoid an infinite sweep
+                    break
+                victims.append(c)
+            for r in victims:
+                self._recover(r, t, heap)
+            if self.autoscaler is not None:
+                self.autoscaler.invalidate()
+
+    def _recover(self, req: Request, t: float, heap: List) -> None:
+        """Requeue a reclaimed request with bounded retries + exponential
+        backoff. Progressed requests re-enter as queued GTs holding their
+        context 'in host memory' (the swap-recompute path re-onboards
+        them); unstarted ones are re-routed as fresh PTs."""
+        att = self._retries.get(req.rid, 0)
+        if att >= self.recovery.max_retries:
+            req.set_state(State.ABORTED, t)
+            self.aborted_rids.append(req.rid)
+            return
+        self._retries[req.rid] = att + 1
+        delay = self.recovery.backoff_base * (2.0 ** att)
+        as_gt = req.generated > 0
+        if as_gt:
+            req.prompt_done = req.prompt_len
+            req.occupied_kvc = req.prompt_len + req.generated
+        else:
+            req.prompt_done = 0
+            req.occupied_kvc = 0
+        req.n_preemptions += 1
+        req.set_state(State.QUEUED_GT if as_gt else State.QUEUED_PT, t)
+        self._mig_seq += 1
+        heapq.heappush(heap, (t + delay, self._mig_seq, req, as_gt))
+        self.n_recovered += 1
 
     # ------------------------------------------------------------------ #
     def _spawn(self, t: float) -> None:
@@ -248,7 +340,7 @@ class ClusterSim:
         reqs = sorted(requests, key=lambda r: r.arrival)
         n = len(reqs)
         i_arr = 0
-        migrations: List[Tuple[float, int, Request]] = []
+        migrations: List[Tuple[float, int, Request, bool]] = []
         total_iters = 0
 
         while total_iters < max_iters:
@@ -260,8 +352,17 @@ class ClusterSim:
                 ti = inst.next_time()
                 if ti < t_inst:
                     t_inst, nxt = ti, inst
-            if min(t_arr, t_mig, t_inst) == _INF:
+            t_now = min(t_arr, t_mig, t_inst)
+            if t_now == _INF:
                 break
+            if self.faults is not None:
+                for inst in self.instances:
+                    inst.update_health(t_now)
+                if self.faults.poll(t_now, self.instances):
+                    # faults change health/eligibility: reclaim any dead
+                    # instance's work and re-evaluate the event horizon
+                    self._reclaim_dead(t_now, migrations)
+                    continue
             if t_arr <= t_mig and t_arr <= t_inst:
                 req = reqs[i_arr]
                 i_arr += 1
@@ -269,15 +370,23 @@ class ClusterSim:
                 self._route(req, t_arr, as_gt=False)
                 continue
             if t_mig <= t_inst:
-                ready, _, req = heapq.heappop(migrations)
-                self._route(req, ready, as_gt=True)
+                ready, _, req, as_gt = heapq.heappop(migrations)
+                self._route(req, ready, as_gt=as_gt, rerouted=True)
                 continue
             assert nxt is not None
+            if nxt.frozen_until > nxt.sim.t:
+                # thaw: the freeze consumed this wall-clock interval
+                nxt.sim.advance_to(nxt.frozen_until)
             nxt.deliver_due()
+            t_before = nxt.sim.t
             status = nxt.sim.step()
             if status == SimInstance.STEPPED:
                 total_iters += 1
                 nxt.stalled = False
+                if nxt.slow_factor > 1 and t_before < nxt.slow_until:
+                    # straggler: dilate the iteration it just committed
+                    nxt.sim.t += (nxt.slow_factor - 1) \
+                        * (nxt.sim.t - t_before)
                 if nxt.role == "prefill":
                     self._collect_migrations(nxt, migrations)
                 if self.autoscaler is not None:
@@ -299,4 +408,7 @@ class ClusterSim:
             n_migrations=self.n_migrations,
             double_routes=self.double_routes,
             route_of=dict(self.route_of), completed_by=completed_by,
-            scale_events=list(self.scale_events))
+            scale_events=list(self.scale_events),
+            aborted=list(self.aborted_rids),
+            n_recovered=self.n_recovered,
+            fault_log=list(self.faults.log) if self.faults else [])

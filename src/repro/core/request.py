@@ -19,6 +19,7 @@ class State(enum.Enum):
     RUNNING_GT = "running_gt"
     PREEMPTED = "preempted"          # paused; may or may not hold KVC
     COMPLETED = "completed"
+    ABORTED = "aborted"              # cancelled (deadline, crash, user)
 
 
 @dataclass(eq=False)          # identity equality: queue membership tests and

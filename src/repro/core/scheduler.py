@@ -245,6 +245,42 @@ class BaseScheduler:
         Base policies are conservative: 1 (the old always-bail rule)."""
         return 1
 
+    def cancel(self, rid: int, t: float) -> Optional[Request]:
+        """Remove a request from every scheduler structure — waiting
+        queues, running groups — and free its KVC. Returns the detached
+        ``Request`` (state ``ABORTED``), or None when the rid is unknown
+        or already completed. This is the hook the engine's ``abort`` and
+        the cluster's crash recovery lean on; policies with extra
+        bookkeeping (KVC pipelining) override and extend it."""
+        req = None
+        for q in (self.pt_queue, self.gt_queue):
+            for r in list(q):
+                if r.rid == rid:
+                    q.remove(r)
+                    req = r
+                    break
+            if req is not None:
+                break
+        if req is None:
+            for grp in self.running_groups:
+                for m in grp.members:
+                    if m.rid == rid:
+                        grp.members.remove(m)
+                        req = m
+                        break
+                if req is not None:
+                    break
+            if req is not None and any(not g.members
+                                       for g in self.running_groups):
+                self.running_groups = [g for g in self.running_groups
+                                       if g.members]
+                self.group_completed = True    # mirror finish_iteration
+        if req is None:
+            return None
+        self.kvc.free(rid)
+        req.set_state(State.ABORTED, t)
+        return req
+
     def _pt_finished(self, req: Request, t: float) -> None:
         """Prompt fully processed → request becomes a queued GT. The PT
         iteration itself produces the first response token (§1)."""
@@ -374,6 +410,27 @@ class EconoServeScheduler(BaseScheduler):
                 continue
             k = min(k, max(1, s.deadline_age - self._age_of(s.owner)))
         return k
+
+    def cancel(self, rid: int, t: float) -> Optional[Request]:
+        """Cancel with KVC-pipelining bookkeeping: vacate the lent slot a
+        hosted victim occupied, preempt children hosted inside the
+        victim's span (their memory disappears with it), and release the
+        host's zombie allocation when the victim was its last child."""
+        req = super().cancel(rid, t)
+        if req is None:
+            return None
+        self.pipe.release_child(req)
+        host = self.host_of.pop(rid, None)
+        orphans = self.pipe.drop_owner(req)
+        for o in orphans:
+            for g in self.running_groups:
+                if o in g.members:
+                    g.members.remove(o)
+            self._preempt(o, t, offload_free=False)
+        self.running_groups = [g for g in self.running_groups if g.members]
+        if host is not None:
+            self._maybe_free_zombie(host)
+        return req
 
     def _sorted_gt_queue(self, t: float) -> List[Request]:
         if self.cfg.ordering:

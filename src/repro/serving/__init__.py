@@ -1,4 +1,5 @@
 """Serving engine: continuous batching of real JAX models under the
 EconoServe scheduler."""
-from .engine import EngineConfig, GenRequest, ServingEngine
+from .engine import (EngineConfig, FleetStalled, GenRequest,
+                     InvalidRequestError, RequestShed, ServingEngine)
 from .sampling import SamplingParams

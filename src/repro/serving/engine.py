@@ -95,6 +95,47 @@ from .sampling import SamplingParams, sample_in_graph, sample_per_request
 MIN_SEQ_BUCKET = 16
 
 
+class InvalidRequestError(ValueError):
+    """Typed rejection for malformed ``GenRequest``s: the engine fails
+    fast at ``submit`` instead of surfacing a deep scatter/shape error
+    iterations later."""
+
+
+class RequestShed(RuntimeError):
+    """Typed admission rejection: the fleet's projected goodput says the
+    request cannot meet its deadline, so it is fast-failed (marked
+    ``status="shed"``) instead of queued into certain SLO violation.
+    Carries the request as ``.request``."""
+
+    def __init__(self, request, reason: str):
+        super().__init__(reason)
+        self.request = request
+        self.reason = reason
+
+
+class FleetStalled(RuntimeError):
+    """``serve_stream`` watchdog: work remains but N consecutive steps
+    made no progress (no completions, drains, dispatches, or deliveries).
+    Carries a per-instance diagnostic snapshot as ``.debug``."""
+
+    def __init__(self, msg: str, debug=None):
+        super().__init__(msg)
+        self.debug = debug or {}
+
+
+def kv_checksum(kv: dict) -> int:
+    """CRC over a KV-migration image, computed at export and verified at
+    inject — a corrupted payload (fault injection, or a real transport
+    bug) must degrade to the recompute fallback, never poison a cache."""
+    import zlib
+    crc = 0
+    for kind in sorted(kv):
+        for n in ("k", "v"):
+            crc = zlib.crc32(np.ascontiguousarray(kv[kind][n]).tobytes(),
+                             crc)
+    return crc
+
+
 def seq_bucket(n: int) -> int:
     """Power-of-two padded length (floor MIN_SEQ_BUCKET)."""
     b = MIN_SEQ_BUCKET
@@ -143,6 +184,14 @@ class GenRequest:
     output: List[int] = field(default_factory=list)
     t_submit: float = 0.0
     t_done: Optional[float] = None
+    # --- fault tolerance / SLO enforcement -----------------------------
+    deadline: float = float("inf")   # absolute (iteration-clock) deadline
+    status: Optional[str] = None     # terminal: completed | aborted | shed
+    fail_reason: Optional[str] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.status is not None or self.t_done is not None
 
 
 class ServingEngine:
@@ -231,9 +280,16 @@ class ServingEngine:
         # injections from a peer engine (cluster prefill→decode migration)
         self._arrivals: List[Tuple[Request, float]] = []
         self._pending_injects: List[Tuple[dict, float]] = []
+        # aborts requested while a window is open are deferred the same
+        # way (mutating batch membership mid-window would desync the
+        # device state the window already computed against)
+        self._pending_aborts: List[Tuple[int, float, str]] = []
         self.n_decode_dispatches = 0
         self.n_kv_exports = 0
         self.n_kv_injects = 0
+        self.n_kv_rejects = 0        # corrupted KV images refused at inject
+        self.n_aborted = 0
+        self.n_prefill_waves = 0     # whole-prompt prefill dispatch waves
 
         # async bookkeeping: device slot state carried across the fused
         # steps, plus the lag-N readback ring of (tokens, [(row, rid)]).
@@ -518,11 +574,13 @@ class ServingEngine:
         unaffected — and delivered when the window drains, at most
         ``decode_megastep - 1`` iterations later. This is the standard
         multi-step-scheduling trade (scheduling decisions every K steps)."""
+        self.validate(req)
         req.rid = self._rid
         self._rid += 1
         req.t_submit = now
         r = Request(rid=req.rid, prompt_len=len(req.prompt),
-                    true_rl=req.params.max_new_tokens, arrival=now)
+                    true_rl=req.params.max_new_tokens, arrival=now,
+                    slo_deadline=req.deadline)
         r.predicted_rl = self.predictor.predict(r)
         r.padded_rl = apply_padding(r.predicted_rl,
                                     self.scheduler.cfg.pad_ratio,
@@ -534,11 +592,84 @@ class ServingEngine:
             self.scheduler.on_arrival(r, now)
         return req.rid
 
+    def validate(self, req: GenRequest) -> None:
+        """Reject malformed requests with a typed error at the submit
+        boundary — the engine's shape machinery assumes a non-empty
+        prompt that fits its cache row and KVC, and a positive token
+        budget; violating any of these used to surface as a deep
+        scatter/shape failure mid-iteration."""
+        if req.params.max_new_tokens <= 0:
+            raise InvalidRequestError(
+                f"max_new_tokens must be >= 1, got "
+                f"{req.params.max_new_tokens}")
+        if not req.prompt:
+            raise InvalidRequestError("empty prompt")
+        kvc_cap = self.scheduler.kvc.capacity_tokens
+        if len(req.prompt) + 1 > min(self.capacity, kvc_cap):
+            raise InvalidRequestError(
+                f"prompt of {len(req.prompt)} tokens (+1 response token) "
+                f"exceeds capacity (cache row {self.capacity} slots, "
+                f"KVC {kvc_cap} tokens)")
+
     def has_work(self) -> bool:
-        """Scheduler work plus arrivals/injections buffered behind an open
-        window."""
+        """Scheduler work plus arrivals/injections/aborts buffered behind
+        an open window."""
         return (self.scheduler.has_work() or bool(self._arrivals)
-                or bool(self._pending_injects))
+                or bool(self._pending_injects)
+                or bool(self._pending_aborts))
+
+    # ------------------------------------------------------------------ #
+    # abort / cancellation (deadline enforcement, crash recovery)
+    # ------------------------------------------------------------------ #
+    def abort(self, rid: int, now: float, reason: str = "aborted") -> bool:
+        """Cancel an in-flight request: force-drain the token ring (lag-N
+        entries for the victim must materialize, never drop), detach it
+        from the scheduler (freeing KVC) and release its engine slot.
+
+        While a fused megastep window is open the abort is *deferred* —
+        mutating batch membership mid-window would desync the device
+        state the window precomputed — and applied when the window
+        drains, exactly like deferred arrivals/injects. If the request
+        completes inside the remaining window rows, completion wins and
+        the abort becomes a no-op (terminal state stays exactly-once).
+
+        Returns True when the abort was applied or queued, False when the
+        rid is unknown or already terminal."""
+        g = self.requests.get(rid)
+        if g is None or g.finished:
+            return False
+        if self._mega_left > 0:
+            if not any(p[0] == rid for p in self._pending_aborts):
+                self._pending_aborts.append((rid, now, reason))
+            return True
+        self._apply_abort(rid, now, reason)
+        return True
+
+    def _apply_abort(self, rid: int, now: float, reason: str) -> None:
+        assert self._mega_left == 0, "abort applied inside an open window"
+        g = self.requests.get(rid)
+        if g is None or g.finished:
+            return                    # completed while the abort waited
+        if self._pending_drain:
+            # materialize ring tokens first: g.output must be complete
+            # before the request leaves the engine (satellite: lag-N ring
+            # entries for aborted requests are never dropped)
+            self.sync_counts["flush"] += 1
+            self._drain_tokens(force=True)
+        for k, (r, _) in enumerate(self._arrivals):
+            if r.rid == rid:          # still buffered behind a window
+                self._arrivals.pop(k)
+                break
+        else:
+            self.scheduler.cancel(rid, now)
+        slot = self.slot_of.pop(rid, None)
+        if slot is not None:
+            self.free_slots.append(slot)
+        self._chunk_progress.pop(rid, None)
+        self._rec_state.pop(rid, None)
+        g.status = "aborted"
+        g.fail_reason = reason
+        self.n_aborted += 1
 
     # ------------------------------------------------------------------ #
     # KV migration (cluster disaggregated prefill/decode roles)
@@ -604,7 +735,8 @@ class ServingEngine:
         req.occupied_kvc = req.prompt_len + req.generated
         self.n_kv_exports += 1
         return {"gen": g, "req": req, "kv": kv, "ctx": ctx,
-                "last_tok": last}
+                "last_tok": last,
+                "kv_crc": kv_checksum(kv) if kv is not None else None}
 
     def inject_kv(self, payload: dict, now: float) -> Optional[int]:
         """Receive a migrated request. With a KV image (and a free slot +
@@ -631,6 +763,14 @@ class ServingEngine:
         tokens = req.prompt_len + req.generated
         kv = payload["kv"]
         ctx = payload["ctx"]
+        if kv is not None:
+            crc = payload.get("kv_crc")
+            if crc is not None and kv_checksum(kv) != crc:
+                # corrupted in transit: refuse the image and degrade to
+                # the recompute fallback — the host-side token stream is
+                # the ground truth, so the output stays bitwise-correct
+                kv = None
+                self.n_kv_rejects += 1
         if (kv is not None and self.can_migrate_kv and self.free_slots
                 and ctx <= self.capacity and sched.kvc.can_allocate(tokens)):
             sched.kvc.allocate(rid, tokens)
@@ -785,6 +925,7 @@ class ServingEngine:
             else:
                 chunked.append((r, chunk))
         if whole:
+            self.n_prefill_waves += 1
             groups = [whole] if self._pad_prefill \
                 else [[it] for it in whole]
             for group in groups:
@@ -1342,9 +1483,14 @@ class ServingEngine:
     def step(self, now: Optional[float] = None) -> int:
         """One engine iteration. Returns number of completions."""
         now = time.monotonic() if now is None else now
-        if self._mega_left == 0 and (self._arrivals or self._pending_injects):
-            # a fused window just drained: deliver the arrivals and peer
-            # KV injections it deferred
+        if self._mega_left == 0 and (self._arrivals or self._pending_injects
+                                     or self._pending_aborts):
+            # a fused window just drained: apply the aborts it deferred
+            # (freed slots/KVC are then visible to the injects/arrivals),
+            # then deliver arrivals and peer KV injections
+            for rid, t_ab, reason in self._pending_aborts:
+                self._apply_abort(rid, t_ab, reason)
+            self._pending_aborts.clear()
             for payload, t_in in self._pending_injects:
                 self._apply_inject(payload, t_in)
             self._pending_injects.clear()
@@ -1386,6 +1532,7 @@ class ServingEngine:
         for r in done:
             g = self.requests[r.rid]
             g.t_done = r.t_complete
+            g.status = "completed"
             slot = self.slot_of.pop(r.rid, None)
             if slot is not None:
                 self.free_slots.append(slot)
@@ -1414,33 +1561,82 @@ class ServingEngine:
             self.sync_counts["flush"] += 1
             self._drain_tokens(force=True)
 
+    # ------------------------------------------------------------------ #
+    # liveness / diagnostics (serve_stream watchdog, invariant checker)
+    # ------------------------------------------------------------------ #
+    def progress_state(self) -> tuple:
+        """Monotone fingerprint of forward progress: any iteration that
+        decodes, prefills, completes, aborts, or accepts work changes it.
+        ``serve_stream`` raises ``FleetStalled`` when it freezes while
+        ``has_work()`` holds (e.g. a scheduler wedged on an unplaceable
+        request)."""
+        return (self.decode_iters, self.n_prefill_waves,
+                self.n_prefill_chunks, len(self.scheduler.completed),
+                self.n_aborted, self.n_kv_injects, self._rid)
+
+    def debug_state(self) -> Dict[str, object]:
+        """Queue/KVC snapshot for stall diagnostics."""
+        s = self.scheduler
+        return {"pt_queue": len(s.pt_queue), "gt_queue": len(s.gt_queue),
+                "running": len(s.running_gts),
+                "kvc_alloc_frac": round(s.kvc.allocated_frac, 3),
+                "kvc_free_blocks": s.kvc.free_blocks,
+                "free_slots": len(self.free_slots),
+                "pending_drain": len(self._pending_drain),
+                "mega_left": self._mega_left,
+                "buffered_arrivals": len(self._arrivals),
+                "pending_injects": len(self._pending_injects),
+                "pending_aborts": len(self._pending_aborts)}
+
     def run(self, gen_requests: Sequence[GenRequest],
             arrivals: Optional[Sequence[float]] = None,
-            max_steps: int = 100_000) -> List[GenRequest]:
+            max_steps: int = 100_000, stall_limit: int = 2_000
+            ) -> List[GenRequest]:
         """Serve a batch to completion — or, with ``arrivals``, an online
         stream: each request is submitted at its arrival time on the
         engine's iteration clock (the same contract as
         ``EngineFleet.run``)."""
-        return serve_stream(self, gen_requests, arrivals, max_steps)
+        return serve_stream(self, gen_requests, arrivals, max_steps,
+                            stall_limit)
 
 
 def serve_stream(server, gen_requests: Sequence[GenRequest],
                  arrivals: Optional[Sequence[float]] = None,
-                 max_steps: int = 100_000) -> List[GenRequest]:
+                 max_steps: int = 100_000,
+                 stall_limit: int = 2_000) -> List[GenRequest]:
     """Drive any submit/step/has_work/flush server (a ``ServingEngine``
     or a ``repro.cluster.EngineFleet``) over an online request stream on
     its iteration clock: submit each request at its arrival time, step
     while there is work, jump the clock across idle gaps, flush the
     readback ring at the end. The single definition keeps both backends'
-    ``run(reqs, arrivals)`` semantics from drifting."""
+    ``run(reqs, arrivals)`` semantics from drifting.
+
+    Two robustness contracts live here:
+
+      * a typed ``RequestShed`` from ``submit`` (fleet admission control)
+        is caught and the stream continues — the server already recorded
+        the terminal ``shed`` state;
+      * a no-progress watchdog: ``stall_limit`` consecutive steps whose
+        ``progress_state()`` fingerprint never moves (while ``has_work()``
+        holds) raise ``FleetStalled`` with per-instance queue/KVC state,
+        instead of the pre-fault-tolerance behavior of spinning on
+        ``has_work()`` forever. The limit must exceed any legitimate
+        quiet period (fault-injected freezes, recovery backoff waits).
+    """
     if arrivals is None:
         arrivals = [0.0] * len(gen_requests)
     stream = sorted(zip(gen_requests, arrivals), key=lambda p: p[1])
-    t, i, steps = 0.0, 0, 0
+    fingerprint = getattr(server, "progress_state", None)
+    t, i, steps, stalled, last_fp = 0.0, 0, 0, 0, None
     while steps < max_steps:
+        submitted = False
         while i < len(stream) and stream[i][1] <= t:
-            server.submit(stream[i][0], float(stream[i][1]))
+            try:
+                server.submit(stream[i][0], float(stream[i][1]))
+            except RequestShed:
+                pass              # typed fast-fail; terminal state recorded
             i += 1
+            submitted = True
         if not server.has_work():
             if i >= len(stream):
                 break
@@ -1449,5 +1645,18 @@ def serve_stream(server, gen_requests: Sequence[GenRequest],
         t += 1.0
         server.step(t)
         steps += 1
+        if fingerprint is not None:
+            fp = fingerprint()
+            if fp == last_fp and not submitted:
+                stalled += 1
+                if stalled >= stall_limit:
+                    dbg = getattr(server, "debug_state", dict)()
+                    raise FleetStalled(
+                        f"no progress for {stall_limit} consecutive steps "
+                        f"with work outstanding (t={t}); per-instance "
+                        f"state: {dbg}", debug=dbg)
+            else:
+                stalled = 0
+            last_fp = fp
     server.flush()
     return list(gen_requests)

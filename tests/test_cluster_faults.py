@@ -1,0 +1,487 @@
+"""Fault-tolerance battery: chaos injection, crash recovery with KV
+re-migration, deadline-aware abort/shedding, the serve_stream stall
+watchdog, submit validation, and the post-run conservation/leak audit.
+
+Everything greedy is checked bitwise against a fault-free run — crash
+recovery re-seeds through the deterministic recompute path, so a fleet
+that loses an instance mid-run must still produce the exact token
+streams of an undisturbed engine.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (EngineFleet, FaultEvent, FaultInjector,
+                           InvariantViolation, RecoveryConfig,
+                           check_fleet_invariants, parse_chaos_spec)
+from repro.cluster.base import DEAD, HEALTHY, SUSPECT
+from repro.cluster.sim import ClusterSim
+from repro.configs import get_config
+from repro.core import predictor, traces
+from repro.core.costmodel import CostModel
+from repro.core.scheduler import SchedulerConfig, make_econoserve
+from repro.serving import (EngineConfig, FleetStalled, GenRequest,
+                           InvalidRequestError, RequestShed, SamplingParams,
+                           ServingEngine)
+from repro.serving.engine import serve_stream
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+
+def _gen_reqs(cfg, n=6, seed=5, lo=4, hi=10):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(8, 24)))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(lo, hi)),
+                              temperature=0.0))
+        for _ in range(n)]
+
+
+def _sim_trace(n, rate=6.0, seed=0):
+    reqs = traces.generate(traces.SHAREGPT, n, seed=seed, rate=rate)
+    predictor.annotate(reqs, predictor.NoisyPredictor(accuracy=0.75,
+                                                      seed=seed), 0.15)
+    return reqs
+
+
+# --------------------------------------------------------------------- #
+# fault injector mechanics
+# --------------------------------------------------------------------- #
+def test_parse_chaos_spec():
+    evs = parse_chaos_spec("kill@25:1,freeze@40:2/20,slow@10:0/30x3,"
+                           "corrupt@15")
+    assert [(e.kind, e.t, e.target) for e in evs] == [
+        ("kill", 25.0, 1), ("freeze", 40.0, 2), ("slow", 10.0, 0),
+        ("corrupt_kv", 15.0, -1)]
+    assert evs[1].duration == 20.0 and evs[2].factor == 3
+    with pytest.raises(AssertionError):
+        parse_chaos_spec("explode@3")
+
+
+class _HealthStub:
+    def __init__(self, iid):
+        self.id = iid
+        self.health = HEALTHY
+        self.frozen_until = 0.0
+        self.slow_until = 0.0
+        self.slow_factor = 1
+
+    @property
+    def alive(self):
+        return self.health != DEAD
+
+
+def test_injector_scheduled_and_seeded_faults_deterministic():
+    def run(seed):
+        inj = FaultInjector(schedule=[FaultEvent(t=5.0, kind="kill",
+                                                 target=0)],
+                            p_freeze=0.2, seed=seed, min_alive=1)
+        insts = [_HealthStub(i) for i in range(4)]
+        for t in range(20):
+            inj.poll(float(t), insts)
+        return inj.log
+
+    assert run(3) == run(3)                      # seeded: reproducible
+    log = run(3)
+    assert (5.0, "kill", 0) in log               # schedule always fires
+
+
+def test_injector_probabilistic_kill_spares_last_instance():
+    inj = FaultInjector(p_kill=1.0, seed=0, min_alive=1)
+    insts = [_HealthStub(i) for i in range(3)]
+    for t in range(10):
+        inj.poll(float(t), insts)
+    assert sum(1 for i in insts if i.alive) == 1
+
+
+# --------------------------------------------------------------------- #
+# crash recovery (real fleet): token equality with a fault-free run
+# --------------------------------------------------------------------- #
+def test_fleet_kill_recovery_token_equality(tiny_cfg):
+    """Instance 1 of 3 dies mid-run: every in-flight request must be
+    recovered elsewhere and the greedy streams must equal a fault-free
+    single-engine run, with exactly-once terminal states and no leaks."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=3, router="least-kvc", seed=0,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        faults=FaultInjector(
+            schedule=[FaultEvent(t=6.0, kind="kill", target=1)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=8, lo=6, hi=14)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=14))
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["aborted"] == 0 and cons["shed"] == 0, cons
+    assert fleet.n_recovered >= 1        # the kill actually stranded work
+    assert not fleet.instances[1].alive
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    assert check_fleet_invariants(fleet)["ok"]
+
+
+def test_fleet_retry_budget_exhausts_to_abort(tiny_cfg):
+    """With every instance dead, redelivery burns its bounded retries and
+    lands in a terminal abort — never an infinite redeliver loop."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=2, router="least-kvc", seed=0,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=4.0, kind="kill", target=0),
+            FaultEvent(t=4.0, kind="kill", target=1)]),
+        recovery=RecoveryConfig(max_retries=2, backoff_base=1.0))
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=4, lo=8, hi=16))
+    cons = fleet.conservation()
+    assert cons["ok"], cons              # all terminal, just not completed
+    assert cons["aborted"] >= 1
+    dead = [g for g in reqs if g.status == "aborted"]
+    assert dead and all("retries-exhausted" in g.fail_reason
+                        or g.fail_reason == "no-live-instance"
+                        for g in dead)
+
+
+def test_fleet_freeze_evacuates_queued_gts_via_kv_migration(tiny_cfg):
+    """A frozen (suspect) instance's device state is intact: its queued
+    GTs must be evacuated by real KV re-migration and finish elsewhere,
+    token-equal to an undisturbed run."""
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="round-robin",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0,
+                        faults=FaultInjector(),   # enables fault paths
+                        recovery=RecoveryConfig())
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    g_ref = _gen_reqs(tiny_cfg, n=1, lo=8, hi=9)[0]
+    ref.run([g_ref])
+
+    g = _gen_reqs(tiny_cfg, n=1, lo=8, hi=9)[0]
+    iid = fleet.submit(g, 0.0)
+    src = next(i for i in fleet.instances if i.id == iid)
+    t = 0.0
+    while not src.engine.scheduler.gt_queue:     # stop right after prefill
+        t += 1.0
+        src.engine.step(t)
+    src.health = SUSPECT
+    src.frozen_until = t + 1_000.0               # long outage
+    while fleet.has_work() and t < 300.0:
+        t += 1.0
+        fleet.step(t)
+    assert fleet.n_evacuations >= 1
+    assert g.t_done is not None and g.output == g_ref.output
+    assert fleet.conservation()["ok"]
+
+
+def test_fleet_corrupt_kv_rejected_by_checksum(tiny_cfg):
+    """A KV payload corrupted in flight must be refused at inject (crc)
+    and degrade to the recompute fallback — bitwise-identical tokens."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=2, roles=("prefill", "decode"),
+        router="least-kvc", seed=0, max_batch=4, capacity=256,
+        rl_accuracy=1.0,
+        faults=FaultInjector(
+            schedule=[FaultEvent(t=1.0, kind="corrupt_kv", count=2)]),
+        recovery=RecoveryConfig())
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=6)
+    ref.run(ref_reqs)
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=6))
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["kv_rejects"] >= 1, cons
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+
+
+# --------------------------------------------------------------------- #
+# abort: deadline enforcement, megastep windows, ring draining
+# --------------------------------------------------------------------- #
+def test_engine_abort_defers_across_open_megastep_window(tiny_cfg):
+    eng = ServingEngine(tiny_cfg, max_batch=4, capacity=256,
+                        rl_accuracy=1.0, seed=0)
+    victim, bystander = _gen_reqs(tiny_cfg, n=2, lo=64, hi=65)
+    t = 0.0
+    eng.submit(victim, t)
+    eng.submit(bystander, t)
+    while eng._mega_left == 0:
+        t += 1.0
+        eng.step(t)
+    assert eng.abort(victim.rid, t) is True
+    assert victim.status is None         # deferred: window still open
+    assert eng.abort(victim.rid, t) is True      # idempotent queueing
+    assert len(eng._pending_aborts) == 1
+    while eng.has_work() and t < 500:
+        t += 1.0
+        eng.step(t)
+    assert victim.status == "aborted"
+    assert bystander.t_done is not None
+    assert len(bystander.output) == bystander.params.max_new_tokens
+    assert not eng.slot_of and len(eng.free_slots) == eng.max_batch
+    assert not eng.scheduler.kvc.allocs
+    eng.scheduler.kvc.check_invariants()
+    assert eng.abort(victim.rid, t) is False     # already terminal
+
+
+def test_engine_abort_force_drains_lagged_ring(tiny_cfg):
+    """Satellite: with readback_lag > 1, tokens the device produced but
+    the host hasn't drained must materialize on abort — never drop."""
+    ecfg = EngineConfig(readback_lag=3)
+    eng = ServingEngine(tiny_cfg, max_batch=2, capacity=256,
+                        rl_accuracy=1.0, seed=0, engine_cfg=ecfg)
+    ref = ServingEngine(tiny_cfg, params=eng.params, max_batch=2,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    g_ref = _gen_reqs(tiny_cfg, n=1, lo=32, hi=33)[0]
+    ref.run([g_ref])
+
+    g = _gen_reqs(tiny_cfg, n=1, lo=32, hi=33)[0]
+    t = 0.0
+    eng.submit(g, t)
+    while not eng._pending_drain:        # decode until the ring lags
+        t += 1.0
+        eng.step(t)
+    drained_before = len(g.output)
+    while eng._mega_left > 0:            # abort applies at window close
+        t += 1.0
+        eng.step(t)
+    eng.abort(g.rid, t)
+    assert g.status == "aborted"
+    assert not eng._pending_drain        # ring force-drained, not dropped
+    assert len(g.output) > drained_before or drained_before > 0
+    # everything materialized is a prefix of the reference greedy stream
+    assert g.output == g_ref.output[:len(g.output)] and g.output
+
+
+def test_fleet_deadline_watchdog_aborts_overdue(tiny_cfg):
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0,
+                        recovery=RecoveryConfig(deadline_factor=2.0))
+    hopeless = GenRequest(
+        prompt=list(range(10)),
+        params=SamplingParams(max_new_tokens=400, temperature=0.0),
+        deadline=3.0)                    # ~400 iters of work, 3-iter SLO
+    easy = _gen_reqs(tiny_cfg, n=2)
+    fleet.run([hopeless] + easy)
+    assert hopeless.status == "aborted"
+    assert hopeless.fail_reason == "deadline"
+    assert fleet.n_deadline_aborts >= 1
+    assert all(g.t_done is not None for g in easy)
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["aborted"] == 1, cons
+    assert check_fleet_invariants(fleet)["ok"]
+
+
+def test_fleet_sheds_admissions_projected_to_miss_slo(tiny_cfg):
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0,
+                        recovery=RecoveryConfig(shed=True))
+    doomed = GenRequest(
+        prompt=list(range(10)),
+        params=SamplingParams(max_new_tokens=200, temperature=0.0),
+        deadline=5.0)
+    with pytest.raises(RequestShed):
+        fleet.submit(doomed, 0.0)
+    assert doomed.status == "shed"
+    assert doomed.fail_reason == "projected-slo-miss"
+    # the stream driver absorbs the typed rejection and carries on
+    ok = _gen_reqs(tiny_cfg, n=2)
+    reqs = fleet.run([GenRequest(
+        prompt=list(range(10)),
+        params=SamplingParams(max_new_tokens=200, temperature=0.0),
+        deadline=5.0)] + ok)
+    assert reqs[0].status == "shed"
+    assert all(g.t_done is not None for g in ok)
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["shed"] >= 1, cons
+
+
+# --------------------------------------------------------------------- #
+# submit validation (typed, at the boundary)
+# --------------------------------------------------------------------- #
+def test_submit_validation_typed_errors(tiny_cfg):
+    eng = ServingEngine(tiny_cfg, max_batch=2, capacity=64, rl_accuracy=1.0)
+    with pytest.raises(InvalidRequestError, match="max_new_tokens"):
+        eng.submit(GenRequest(prompt=[1, 2],
+                              params=SamplingParams(max_new_tokens=0)), 0.0)
+    with pytest.raises(InvalidRequestError, match="empty prompt"):
+        eng.submit(GenRequest(prompt=[],
+                              params=SamplingParams(max_new_tokens=4)), 0.0)
+    with pytest.raises(InvalidRequestError, match="exceeds capacity"):
+        eng.submit(GenRequest(prompt=list(range(200)),
+                              params=SamplingParams(max_new_tokens=4)), 0.0)
+    assert not eng.has_work()            # rejected before any state change
+    assert not eng.requests
+
+
+# --------------------------------------------------------------------- #
+# serve_stream stall watchdog
+# --------------------------------------------------------------------- #
+class _WedgedServer:
+    """has_work forever, never progresses — the failure mode the watchdog
+    must convert from an infinite spin into a diagnostic exception."""
+
+    def submit(self, req, now):
+        pass
+
+    def has_work(self):
+        return True
+
+    def step(self, now):
+        return 0
+
+    def flush(self):
+        pass
+
+    def progress_state(self):
+        return (0,)
+
+    def debug_state(self):
+        return {"pt_queue": 1, "gt_queue": 0, "kvc_free_blocks": 0}
+
+
+def test_serve_stream_raises_fleet_stalled_with_diagnostics():
+    with pytest.raises(FleetStalled) as ei:
+        serve_stream(_WedgedServer(), [], stall_limit=40)
+    assert "no progress for 40" in str(ei.value)
+    assert ei.value.debug.get("kvc_free_blocks") == 0
+
+
+def test_serve_stream_tolerates_quiet_recovery_gaps(tiny_cfg):
+    """Legitimate chaos-induced quiet periods (backoff waits) must stay
+    under the watchdog: a chaotic run with default stall_limit finishes."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=3, router="least-kvc", seed=0,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        faults=FaultInjector(
+            schedule=[FaultEvent(t=5.0, kind="kill", target=2)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=4.0))
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=6))
+    assert fleet.conservation()["ok"]
+    assert all(g.finished for g in reqs)
+
+
+# --------------------------------------------------------------------- #
+# inject_kv degradation under a full target
+# --------------------------------------------------------------------- #
+def test_inject_kv_full_target_swaps_to_recompute(tiny_cfg):
+    """Satellite: a migration landing on an engine with no free slot must
+    take the slotless swap-recompute fallback and still finish with the
+    exact greedy stream."""
+    src = ServingEngine(tiny_cfg, max_batch=4, capacity=256,
+                        rl_accuracy=1.0, seed=0)
+    dst = ServingEngine(tiny_cfg, params=src.params, max_batch=1,
+                        capacity=256, rl_accuracy=1.0, seed=1)
+    ref = ServingEngine(tiny_cfg, params=src.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=2)
+    g_ref = _gen_reqs(tiny_cfg, n=1, lo=6, hi=7)[0]
+    ref.run([g_ref])
+
+    # occupy dst's only slot with a long-running request
+    hog = _gen_reqs(tiny_cfg, n=1, seed=9, lo=64, hi=65)[0]
+    t = 0.0
+    dst.submit(hog, t)
+    while not dst.slot_of:
+        t += 1.0
+        dst.step(t)
+
+    g = _gen_reqs(tiny_cfg, n=1, lo=6, hi=7)[0]
+    src.submit(g, t)
+    while not src.scheduler.gt_queue:
+        t += 1.0
+        src.step(t)
+    payload = src.export_kv(g.rid)
+    assert payload["kv"] is not None
+    assert not dst.free_slots
+    dst.inject_kv(payload, t)
+    while dst.has_work() and t < 800:
+        t += 1.0
+        dst.step(t)
+    assert g.t_done is not None and g.output == g_ref.output
+    assert hog.t_done is not None
+
+
+# --------------------------------------------------------------------- #
+# ClusterSim chaos + routing fallbacks
+# --------------------------------------------------------------------- #
+def test_sim_kill_mid_run_conserves_and_recovers():
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=3, router="least-kvc", seed=0,
+                    faults=FaultInjector(schedule=[
+                        FaultEvent(t=5.0, kind="kill", target=1)]),
+                    recovery=RecoveryConfig(max_retries=3,
+                                            backoff_base=0.5))
+    res = cs.run(_sim_trace(200))
+    cons = res.conservation()
+    assert cons["ok"], cons
+    assert res.n_recovered >= 1
+    assert res.fault_log and res.fault_log[0][1] == "kill"
+
+
+def test_sim_freeze_and_slow_degrade_without_loss():
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=3, router="least-kvc", seed=0,
+                    faults=FaultInjector(schedule=[
+                        FaultEvent(t=3.0, kind="freeze", target=0,
+                                   duration=10.0),
+                        FaultEvent(t=8.0, kind="slow", target=2,
+                                   duration=15.0, factor=3)]),
+                    recovery=RecoveryConfig())
+    res = cs.run(_sim_trace(200))
+    assert res.conservation()["ok"], res.conservation()
+    assert len(res.fault_log) == 2
+
+
+def test_sim_all_draining_router_fallback():
+    """Satellite: when every instance is draining, arrivals must still be
+    routed (to a role-eligible instance) rather than dropped."""
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=2, router="least-kvc", seed=0)
+    for inst in cs.instances:
+        inst.draining = True
+    res = cs.run(_sim_trace(60))
+    cons = res.conservation()
+    assert cons["ok"] and cons["completed"] == 60, cons
+
+
+def test_sim_whole_fleet_dead_aborts_terminally():
+    cost = CostModel()
+    cs = ClusterSim(lambda i: make_econoserve(SchedulerConfig(), cost),
+                    cost, n_instances=2, router="least-kvc", seed=0,
+                    faults=FaultInjector(schedule=[
+                        FaultEvent(t=2.0, kind="kill", target=0),
+                        FaultEvent(t=2.0, kind="kill", target=1)]),
+                    recovery=RecoveryConfig(max_retries=1,
+                                            backoff_base=0.5))
+    res = cs.run(_sim_trace(80, rate=8.0))
+    cons = res.conservation()
+    assert cons["ok"], cons              # exactly-once: completed OR aborted
+    assert cons["aborted"] >= 1
+    assert cons["completed"] + cons["aborted"] == 80
+
+
+# --------------------------------------------------------------------- #
+# invariant checker actually detects corruption
+# --------------------------------------------------------------------- #
+def test_invariant_checker_flags_leaks(tiny_cfg):
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0)
+    fleet.run(_gen_reqs(tiny_cfg, n=4))
+    assert check_fleet_invariants(fleet)["ok"]
+    # a leaked slot must fail the audit
+    leaked = fleet.instances[0].engine.free_slots.pop()
+    with pytest.raises(InvariantViolation, match="slot leak"):
+        check_fleet_invariants(fleet)
+    rep = check_fleet_invariants(fleet, strict=False)
+    assert not rep["ok"] and rep["problems"]
+    # a non-terminal submitted request must fail it too
+    fleet.instances[0].engine.free_slots.append(leaked)
+    assert check_fleet_invariants(fleet)["ok"]
+    fleet.submitted[0].status = None
+    fleet.submitted[0].t_done = None
+    with pytest.raises(InvariantViolation, match="non-terminal"):
+        check_fleet_invariants(fleet)
