@@ -593,12 +593,18 @@ def bench_chaos(n_reqs: int = 8, seed: int = 0) -> Dict:
       * a disaggregated prefill/decode pair has a KV migration payload
         corrupted in flight: the inject-side checksum must reject it
         (>= 1 kv_reject), degrade to the recompute fallback, and keep
-        the token streams equal anyway.
+        the token streams equal anyway;
+      * a KVC-saturated 2-instance fleet takes a mid-run ``squeeze``
+        (capacity cut to half): the cut must land and fully drain on
+        both instances, the pressure ladder must absorb it (zero
+        aborts, zero sheds), and the recovered greedy streams must stay
+        bitwise-equal to a pressure-free single-engine run.
     """
     import numpy as np
     from repro.cluster import (EngineFleet, FaultEvent, FaultInjector,
                                RecoveryConfig, check_fleet_invariants)
     from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
     from repro.serving import GenRequest, SamplingParams, ServingEngine
 
     cfg = get_config("qwen3_8b").reduced(layers=1).with_(
@@ -657,13 +663,145 @@ def bench_chaos(n_reqs: int = 8, seed: int = 0) -> Dict:
             [g.output for g in dreqs] == ref_out,
         "seconds": round(time.perf_counter() - t0, 2)}
 
+    t0 = time.perf_counter()
+
+    def mk_sq_reqs():
+        rng = np.random.default_rng(5)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(8, 24)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(8, 16)),
+                                  temperature=0.0))
+            for _ in range(10)]
+
+    sq = EngineFleet(
+        cfg, n_instances=2, router="least-kvc", seed=seed,
+        max_batch=4, capacity=128, rl_accuracy=1.0,
+        scheduler_cfg=SchedulerConfig(kvc_tokens=224, block_size=16,
+                                      tfs=128, max_model_len=128,
+                                      max_batch_reqs=4),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=3.0, kind="squeeze", target=0, frac=0.5),
+            FaultEvent(t=3.0, kind="squeeze", target=1, frac=0.5)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+    sref = ServingEngine(cfg, params=sq.params, max_batch=4,
+                         capacity=128, rl_accuracy=1.0, seed=seed)
+    sref_reqs = mk_sq_reqs()
+    sref.run(sref_reqs)
+    sreqs = sq.run(mk_sq_reqs())
+    scons = sq.conservation()
+    try:
+        sq_inv_ok = bool(check_fleet_invariants(sq)["ok"])
+    except AssertionError as e:
+        sq_inv_ok = False
+        out["squeeze_invariant_failure"] = str(e)
+    sq_drained = all(
+        i.engine.scheduler.kvc.total_blocks <= 7
+        and i.engine.scheduler.kvc.pending_shrink == 0
+        for i in sq.instances)
+    sq_pressure = sum(i.engine.scheduler.n_preempt_swap
+                      + i.engine.scheduler.kvc.n_swap_outs
+                      for i in sq.instances)
+    out["squeeze"] = {
+        **scons, "invariants_ok": sq_inv_ok,
+        "cut_drained": sq_drained, "pressure_events": sq_pressure,
+        "tokens_equal_no_fault_run":
+            [g.output for g in sreqs] == [g.output for g in sref_reqs],
+        "seconds": round(time.perf_counter() - t0, 2)}
+
     out["chaos_ok"] = bool(
         cons["ok"] and inv_ok and cons["aborted"] == 0
         and cons["recovered"] >= 1
         and out["kill_recovery"]["tokens_equal_no_fault_run"]
         and dcons["ok"] and dcons["kv_rejects"] >= 1
-        and out["corrupt_kv"]["tokens_equal_no_fault_run"])
+        and out["corrupt_kv"]["tokens_equal_no_fault_run"]
+        and scons["ok"] and scons["aborted"] == 0
+        and scons["shed"] == 0 and sq_inv_ok and sq_drained
+        and sq_pressure >= 1
+        and out["squeeze"]["tokens_equal_no_fault_run"])
     return out
+
+
+def bench_swap(seed: int = 0) -> Dict:
+    """Host-offload KV swap tier (counter-based, gated by --check):
+
+      * a KVC-starved single engine must take the swap rung of the
+        pressure ladder: >= 1 preempted request captured to the bounded
+        host pool and restored by page re-seed (``n_swap_restores``, no
+        recompute re-prefill for it), greedy streams bitwise-equal to a
+        pressure-free run, and the swap ledger / image store empty when
+        the run drains;
+      * the tier must be free when idle: a pressure-free run with
+        ``host_swap`` on performs exactly the same blocking syncs as one
+        with it off — the capture sync is only ever paid on the
+        preemption path, never in the no-swap steady state.
+    """
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                               ServingEngine)
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+    def mk_reqs():
+        rng = np.random.default_rng(seed + 3)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(12, 28)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(8, 20)),
+                                  temperature=0.0))
+            for _ in range(10)]
+
+    def run(kvc_tokens, host_swap=True):
+        scfg = SchedulerConfig(kvc_tokens=kvc_tokens, block_size=16,
+                               tfs=128, max_model_len=128,
+                               max_batch_reqs=4)
+        eng = ServingEngine(cfg, max_batch=4, capacity=128,
+                            scheduler_cfg=scfg, rl_accuracy=0.5,
+                            seed=seed,
+                            engine_cfg=EngineConfig(host_swap=host_swap))
+        reqs = mk_reqs()
+        eng.run(reqs)
+        return eng, [tuple(g.output) for g in reqs]
+
+    t0 = time.perf_counter()
+    _, free_streams = run(6 * 128)              # pressure-free reference
+    eng, out = run(160)                         # starved: swap rung fires
+    s = eng.scheduler
+    pressure = {
+        "preempt_swaps": s.n_preempt_swap,
+        "captures": eng.n_swap_captures,
+        "restores": eng.n_swap_restores,
+        "drops": eng.n_swap_drops,
+        "rejects": eng.n_swap_rejects,
+        "tokens_equal_pressure_free": out == free_streams,
+        "ledger_empty": not s.kvc.swapped and not eng._host_swap
+                        and not s.swap_hold,
+    }
+    # steady state: identical blocking-sync profile with the tier on/off
+    on, out_on = run(6 * 128, host_swap=True)
+    off, out_off = run(6 * 128, host_swap=False)
+    steady = {
+        "syncs_swap_on": dict(on.sync_counts),
+        "syncs_swap_off": dict(off.sync_counts),
+        "extra_syncs": sum(on.sync_counts.values())
+                       - sum(off.sync_counts.values()),
+        "tokens_equal": out_on == out_off,
+    }
+    return {
+        "pressure": pressure, "steady": steady,
+        "swap_ok": bool(
+            pressure["restores"] >= 1
+            and pressure["restores"] == pressure["captures"]
+            and pressure["rejects"] == 0
+            and pressure["tokens_equal_pressure_free"]
+            and pressure["ledger_empty"]
+            and steady["extra_syncs"] == 0 and steady["tokens_equal"]),
+        "seconds": round(time.perf_counter() - t0, 2),
+    }
 
 
 # --------------------------------------------------------------------- #
@@ -769,6 +907,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "form_batch": bench_form_batch(n_reqs=n, iters=iters),
         "prefill": bench_prefill_retraces(n=8 if quick else 24),
         "cluster": bench_cluster(n_reqs=8, sim_reqs=200 if quick else 400),
+        "swap": bench_swap(),
         "chaos": bench_chaos(n_reqs=8),
         "kernel": bench_kernel(reps=2 if quick else 3),
     }
@@ -819,8 +958,12 @@ def check_regression(factor: float = 2.0,
         chunks with tokens equal to the whole-prompt run, and the cluster
         layer must conserve requests (every routed request completes
         exactly once across instances; a migrated prefill→decode stream
-        stays greedy-token-equal to a single engine). These are
-        counter-based and immune to wall-clock noise.
+        stays greedy-token-equal to a single engine), the host-offload
+        swap tier must restore >= 1 page image without recompute while
+        adding zero blocking syncs to the no-swap steady state, and the
+        chaos battery (kill recovery, KV-corruption rejection, mid-run
+        capacity squeeze) must stay green. These are counter-based and
+        immune to wall-clock noise.
     """
     with open(OUT_PATH) as f:
         base = json.load(f)
@@ -832,6 +975,7 @@ def check_regression(factor: float = 2.0,
            "chunked_prefill": bench_chunked_prefill(plen=128, chunk_tfs=32)}
     res["cluster"] = bench_cluster(n_reqs=8, sim_reqs=200)
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
+    res["swap"] = bench_swap()
     # chaos runs LAST: it spins up several fleets of engines, and that
     # churn collapses the scheduler bench's measured regime (the
     # quick_reference order must stay a prefix of this rerun's order)
@@ -929,7 +1073,16 @@ def check_regression(factor: float = 2.0,
     if not ch["chaos_ok"]:
         failures.append(f"chaos: fault-tolerance gate failed — "
                         f"kill_recovery={ch['kill_recovery']}, "
-                        f"corrupt_kv={ch['corrupt_kv']}")
+                        f"corrupt_kv={ch['corrupt_kv']}, "
+                        f"squeeze={ch['squeeze']}")
+    # swap tier: >= 1 host-pool capture restored by page re-seed (no
+    # recompute), streams bitwise-equal under pressure, ledger drained,
+    # and ZERO blocking syncs added to the no-swap steady state
+    sw = res["swap"]
+    if not sw["swap_ok"]:
+        failures.append(f"swap: host-offload KV swap gate failed — "
+                        f"pressure={sw['pressure']}, "
+                        f"steady={sw['steady']}")
     blocking = res["decode_loop"]["async_device"]["blocking_syncs_per_iter"]
     if blocking > 0.05:
         # warn-only: blocking drains also happen when a slow/loaded runner
@@ -951,7 +1104,9 @@ def check_regression(factor: float = 2.0,
           f"KVC pressure), packed chunk wave saved "
           f"{res['packed_chunk']['dispatches_saved']} dispatches, chunked "
           f"TTFT bounded, cluster conservation + migration equality hold, "
-          f"chaos battery (kill recovery + KV-corruption rejection) green "
+          f"swap tier restored {res['swap']['pressure']['restores']} "
+          f"host images sync-free, chaos battery (kill recovery + "
+          f"KV-corruption rejection + squeeze absorption) green "
           f"(quick baselines: {ref})")
     return 0
 

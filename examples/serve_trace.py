@@ -10,17 +10,25 @@ per-request TTFT alongside throughput.
 ``--chaos SPEC`` injects scripted faults into a cluster run — e.g.
 ``kill@25:1`` (kill instance 1 at t=25), ``freeze@40:2/20`` (freeze
 instance 2 for 20 iterations), ``slow@10:0/30x3``, ``corrupt@15``
-(corrupt the next KV migration; caught by the inject-side checksum).
-A fault-free reference run is served first and the chaotic run must
-reproduce its greedy token streams bit-for-bit while every request
-reaches exactly one terminal state (the conservation + invariant audit
-from ``repro.cluster.faults``).
+(corrupt the next KV migration; caught by the inject-side checksum),
+``squeeze@20:0/0.5`` (permanently drop half of instance 0's KVC
+capacity at t=20 — the ``/`` clause is the fraction removed, not a
+duration; pair with ``--kvc-tokens`` so the cache is tight enough for
+the cut to bite). A fault-free reference run is served first and the
+chaotic run must reproduce its greedy token streams bit-for-bit while
+every request reaches exactly one terminal state (the conservation +
+invariant audit from ``repro.cluster.faults``). A squeeze may push a
+queued request past even the *empty* post-cut cache; rung 4 of the
+pressure ladder sheds it terminally (``kvc-infeasible``) instead of
+livelocking, and the equality gate covers every non-shed stream.
 
   PYTHONPATH=src python examples/serve_trace.py [--impl pallas] [-n 16]
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --router least-kvc
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --disagg --tiny
   PYTHONPATH=src python examples/serve_trace.py --cluster 3 --tiny \\
       --chaos kill@25:1
+  PYTHONPATH=src python examples/serve_trace.py --cluster 2 --tiny \\
+      --kvc-tokens 256 --chaos squeeze@20:0/0.5,squeeze@20:1/0.5
 """
 import argparse
 import time
@@ -31,6 +39,7 @@ from repro.cluster import (EngineFleet, RecoveryConfig, ROUTERS,
                            FaultInjector, check_fleet_invariants,
                            parse_chaos_spec)
 from repro.configs import get_config
+from repro.core.scheduler import SchedulerConfig
 from repro.serving import GenRequest, SamplingParams, ServingEngine
 
 
@@ -60,10 +69,19 @@ def main():
                          "decode (KV migration); requires --cluster >= 2")
     ap.add_argument("--chaos", default="", metavar="SPEC",
                     help="scripted fault schedule for a cluster run, e.g. "
-                         "'kill@25:1,freeze@40:2/20,corrupt@15' — the run "
-                         "must recover: exactly-once terminal states, no "
-                         "leaks, and token streams equal to a fault-free "
-                         "reference; requires --cluster >= 2")
+                         "'kill@25:1,freeze@40:2/20,corrupt@15,"
+                         "squeeze@20:0/0.5' (for squeeze the '/' clause is "
+                         "the capacity fraction removed, default 0.5 — "
+                         "permanent, not a duration) — the run must "
+                         "recover: exactly-once terminal states, no leaks, "
+                         "and every non-shed token stream equal to a "
+                         "fault-free reference; requires --cluster >= 2")
+    ap.add_argument("--kvc-tokens", type=int, default=0,
+                    help="override the per-instance KVC budget in tokens "
+                         "(0 = the derived max_batch*capacity default); "
+                         "small values saturate the cache so pressure-"
+                         "ladder smokes (e.g. --chaos squeeze@...) "
+                         "actually bite")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine iteration")
     ap.add_argument("--tiny", action="store_true",
@@ -82,6 +100,10 @@ def main():
                         head_dim=32, d_ff=256, vocab_size=256)
     kw = dict(max_batch=6, capacity=160, variant=args.variant,
               impl=args.impl)
+    if args.kvc_tokens:
+        kw["scheduler_cfg"] = SchedulerConfig(
+            kvc_tokens=args.kvc_tokens, block_size=32, tfs=160,
+            max_model_len=160, max_batch_reqs=6)
     n_inst = max(0, args.cluster)
     fkw = {}
     if args.chaos:
@@ -142,7 +164,10 @@ def main():
 
     if args.chaos:
         report = check_fleet_invariants(server)
-        equal = [g.output for g in reqs] == ref_out
+        # a squeeze may shed permanently-infeasible requests (rung 4);
+        # every surviving stream must still match the fault-free run
+        equal = all(g.output == r for g, r in zip(reqs, ref_out)
+                    if g.status != "shed")
         print(f"chaos: faults={server.faults.log} "
               f"recovered={server.n_recovered} "
               f"aborted={cons['aborted']} shed={cons['shed']} "

@@ -10,13 +10,14 @@ Two interchangeable backends share routers, roles and the autoscaler:
 
 ``repro.cluster.faults`` adds the chaos layer both backends share:
 scripted/probabilistic fault injection (kill / freeze / slow /
-corrupt-KV), bounded-retry crash recovery, and the post-run conservation
-audit (``check_fleet_invariants``).
+corrupt-KV / KVC squeeze), bounded-retry crash recovery with seeded
+backoff jitter, and the post-run conservation audit
+(``check_fleet_invariants``).
 """
 from .autoscale import AutoscaleConfig, GoodputAutoscaler
 from .base import DEAD, HEALTH_STATES, HEALTHY, SUSPECT
-from .faults import (FAULT_KINDS, FaultEvent, FaultInjector,
-                     InvariantViolation, RecoveryConfig,
+from .faults import (ChaosSpecError, FAULT_KINDS, FaultEvent, FaultInjector,
+                     InvariantViolation, RecoveryConfig, backoff_delay,
                      check_fleet_invariants, parse_chaos_spec)
 from .fleet import EngineFleet, FleetInstance
 from .router import (LeastKVCRouter, LeastOutstandingTokensRouter, ROUTERS,

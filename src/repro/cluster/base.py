@@ -88,6 +88,15 @@ class InstanceBase:
                 return self._slow_tick % self.slow_factor == 0
         return True
 
+    def squeeze_kvc(self, frac: float) -> int:
+        """Chaos ``squeeze``: permanently remove ``frac`` of this
+        instance's KVC capacity (free blocks immediately, held blocks
+        harvested as allocations free — ``BlockKVC.shrink``). Backends
+        with stricter timing contracts (the real engine's megastep
+        windows) override to defer the cut to a safe boundary."""
+        kvc = self.scheduler.kvc
+        return kvc.shrink(int(kvc.capacity_tokens * frac))
+
     # -- routing eligibility ------------------------------------------- #
     def accepts_prompts(self) -> bool:
         return (self.health == HEALTHY

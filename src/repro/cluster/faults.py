@@ -1,8 +1,9 @@
 """Deterministic chaos layer for the cluster backends.
 
 ``FaultInjector`` fires scripted (or seeded-probabilistic) instance
-faults — crash, freeze, straggler slowdown — and corrupts KV-migration
-payloads in flight.  Both backends poll it from their event loops:
+faults — crash, freeze, straggler slowdown, live KVC capacity squeeze —
+and corrupts KV-migration payloads in flight.  Both backends poll it
+from their event loops:
 ``EngineFleet`` (real engines) and ``ClusterSim`` (discrete-event model)
 share the same injector, so a fault schedule reproduces bit-for-bit on
 either.
@@ -26,34 +27,57 @@ import numpy as np
 
 from .base import DEAD, HEALTHY, SUSPECT
 
-FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv")
+FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv", "squeeze")
 
 
 @dataclass(frozen=True, order=True)
 class FaultEvent:
     """One scripted fault. ``target`` is an instance id (-1 = injector
     picks among the alive); ``duration``/``factor`` only apply to
-    freeze/slow; ``count`` only to corrupt_kv (number of payloads)."""
+    freeze/slow; ``count`` only to corrupt_kv (number of payloads);
+    ``frac`` only to squeeze (fraction of KVC capacity removed)."""
     t: float
     kind: str = "kill"
     target: int = -1
     duration: float = 8.0
     factor: int = 2
     count: int = 1
+    frac: float = 0.5
 
     def __post_init__(self):
         assert self.kind in FAULT_KINDS, self.kind
+        if self.kind == "squeeze":
+            assert 0.0 < self.frac <= 1.0, self.frac
 
 
 @dataclass
 class RecoveryConfig:
-    """Fleet-side policy for surviving injected (or real) faults."""
+    """Fleet-side policy for surviving injected (or real) faults.
+
+    ``jitter`` spreads redelivery backoff to avoid synchronized retry
+    herds after a mass reclaim: each delay is stretched by up to
+    ``jitter`` (fractionally), keyed on a CRC of (rid, attempt,
+    ``jitter_seed``) — fully deterministic under a fixed seed, and the
+    default ``jitter=0.0`` reproduces the legacy schedule bit-for-bit."""
     max_retries: int = 3          # recovery attempts per request
     backoff_base: float = 2.0     # redelivery delay = base * 2**attempt
     deadline_factor: float = 0.0  # abort past submit + k*(deadline-submit);
                                   # 0 disables the watchdog
     shed: bool = False            # reject admissions projected to miss SLO
     shed_headroom: float = 1.0    # safety multiplier on the projection
+    jitter: float = 0.0           # max fractional backoff stretch
+    jitter_seed: int = 0          # decorrelates fleets sharing a schedule
+
+
+def backoff_delay(rc: RecoveryConfig, rid: int, attempt: int) -> float:
+    """Exponential backoff with deterministic seeded jitter (shared by
+    both backends so a recovery schedule reproduces bit-for-bit)."""
+    import zlib
+    delay = rc.backoff_base * (2.0 ** attempt)
+    if rc.jitter:
+        h = zlib.crc32(f"{rid}:{attempt}:{rc.jitter_seed}".encode())
+        delay *= 1.0 + rc.jitter * (h / 0xFFFFFFFF)
+    return delay
 
 
 class InvariantViolation(AssertionError):
@@ -136,6 +160,11 @@ class FaultInjector:
             inst.health = SUSPECT
             inst.slow_until = max(inst.slow_until, t + ev.duration)
             inst.slow_factor = max(2, int(ev.factor))
+        elif ev.kind == "squeeze":
+            # live capacity reduction: the instance sheds `frac` of its
+            # KVC (free blocks immediately, held blocks as they free) and
+            # must degrade through the ladder, not crash on allocation
+            inst.squeeze_kvc(ev.frac)
         self.log.append((t, ev.kind, inst.id))
         return True
 
@@ -172,6 +201,20 @@ class FaultInjector:
 # ---------------------------------------------------------------------- #
 # chaos spec parsing — "kill@25:1,freeze@40:2/20,slow@10:-1/30x3"
 # ---------------------------------------------------------------------- #
+class ChaosSpecError(ValueError):
+    """A malformed ``--chaos`` clause, named precisely. A typo in a chaos
+    schedule must fail loudly at parse time — not half-parse into a no-op
+    (or wrong-target) fault that silently weakens the chaos run."""
+
+
+def _chaos_num(text: str, what: str, clause: str, conv):
+    try:
+        return conv(text)
+    except ValueError:
+        raise ChaosSpecError(
+            f"bad {what} {text!r} in chaos clause {clause!r}") from None
+
+
 def parse_chaos_spec(spec: str) -> List[FaultEvent]:
     """Parse ``kind@t[:target][/duration][xfactor]`` items, comma-separated.
 
@@ -182,29 +225,51 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
         freeze@40:2/20     freeze instance 2 for 20s at t=40
         slow@10:0/30x3     slow instance 0 by 3x for 30s at t=10
         corrupt@15         corrupt the next KV migration after t=15
+        squeeze@30:1/0.5   drop half of instance 1's KVC capacity at t=30
+
+    For ``squeeze`` the ``/`` clause is the capacity *fraction* removed
+    (default 0.5), not a duration — a squeeze is permanent. Malformed
+    input raises :class:`ChaosSpecError` naming the offending clause and
+    field.
     """
     events: List[FaultEvent] = []
     for item in spec.split(","):
         item = item.strip()
         if not item:
             continue
-        kind, _, rest = item.partition("@")
-        kind = {"corrupt": "corrupt_kv"}.get(kind, kind)
-        assert kind in FAULT_KINDS, f"unknown fault kind in {item!r}"
+        raw_kind, sep, rest = item.partition("@")
+        if not sep or not rest:
+            raise ChaosSpecError(
+                f"chaos clause {item!r} is not of the form "
+                f"'kind@t[:target][/duration][xfactor]'")
+        kind = {"corrupt": "corrupt_kv"}.get(raw_kind, raw_kind)
+        if kind not in FAULT_KINDS:
+            raise ChaosSpecError(
+                f"unknown fault kind {raw_kind!r} in chaos clause "
+                f"{item!r} (valid: kill, freeze, slow, corrupt, squeeze)")
         factor = 2
         if "x" in rest:
             rest, _, f = rest.rpartition("x")
-            factor = int(f)
-        duration = 8.0
+            factor = _chaos_num(f, "slowdown factor", item, int)
+        duration, frac = 8.0, 0.5
         if "/" in rest:
             rest, _, d = rest.partition("/")
-            duration = float(d)
+            if kind == "squeeze":
+                frac = _chaos_num(d, "capacity fraction", item, float)
+                if not 0.0 < frac <= 1.0:
+                    raise ChaosSpecError(
+                        f"squeeze fraction {frac} outside (0, 1] in "
+                        f"chaos clause {item!r}")
+            else:
+                duration = _chaos_num(d, "duration", item, float)
         target = -1
         if ":" in rest:
             rest, _, tg = rest.partition(":")
-            target = int(tg)
-        events.append(FaultEvent(t=float(rest), kind=kind, target=target,
-                                 duration=duration, factor=factor))
+            target = _chaos_num(tg, "target instance", item, int)
+        t = _chaos_num(rest, "fire time", item, float)
+        events.append(FaultEvent(t=t, kind=kind, target=target,
+                                 duration=duration, factor=factor,
+                                 frac=frac))
     return events
 
 
@@ -247,13 +312,20 @@ def check_fleet_invariants(fleet, strict: bool = True) -> dict:
         if eng.scheduler.kvc.allocs:
             problems.append(f"{tag}: leaked KVC allocs "
                             f"{sorted(eng.scheduler.kvc.allocs)}")
+        if eng.scheduler.kvc.swapped:
+            problems.append(f"{tag}: leaked swap-ledger entries "
+                            f"{sorted(eng.scheduler.kvc.swapped)}")
+        if getattr(eng.scheduler, "swap_hold", None):
+            problems.append(f"{tag}: leaked swap holds "
+                            f"{sorted(eng.scheduler.swap_hold)}")
         if len(eng.free_slots) != eng.max_batch:
             problems.append(f"{tag}: slot leak {len(eng.free_slots)}/"
                             f"{eng.max_batch}")
         if eng.slot_of:
             problems.append(f"{tag}: slot_of not empty {sorted(eng.slot_of)}")
         for name in ("_pending_drain", "_chunk_progress", "_rec_state",
-                     "_arrivals", "_pending_injects", "_pending_aborts"):
+                     "_arrivals", "_pending_injects", "_pending_aborts",
+                     "_host_swap"):
             v = getattr(eng, name, None)
             if v:
                 problems.append(f"{tag}: {name} not empty ({len(v)})")

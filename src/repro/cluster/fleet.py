@@ -27,10 +27,14 @@ Fault tolerance (``faults``/``recovery`` kwargs):
     corrupts KV payloads in flight (caught by the checksum at inject);
   * **crash recovery** — when an instance dies, every in-flight request
     on it is reclaimed and redelivered with bounded retries and
-    exponential backoff. A request with generated tokens is re-seeded
-    through the receiving engine's swap-recompute path (greedy decoding
-    regenerates the lost ring tail bit-exactly); one with none is simply
-    resubmitted at its original arrival time;
+    exponential backoff (optionally jittered — ``RecoveryConfig.jitter``
+    — to spread the retry herd, deterministically under a fixed seed).
+    A host-offloaded KV image that survived the crash (the device state
+    is gone, the host pool is not) is salvaged and re-seeded into the
+    receiving engine; otherwise a request with generated tokens goes
+    through the swap-recompute path (greedy decoding regenerates the
+    lost tail bit-exactly), and one with none is simply resubmitted at
+    its original arrival time;
   * **degradation** — a frozen (suspect) instance keeps its device state,
     so its *queued* GTs are evacuated by real KV re-migration while its
     running batch waits for the thaw;
@@ -59,7 +63,7 @@ from repro.serving.engine import serve_stream
 from .autoscale import GoodputAutoscaler
 from .base import (HEALTHY, SUSPECT, InstanceBase, ROLES,
                    execute_autoscale, validate_roles)
-from .faults import FaultInjector, RecoveryConfig
+from .faults import FaultInjector, RecoveryConfig, backoff_delay
 from .router import Router, make_router
 
 __all__ = ["EngineFleet", "FleetInstance", "ROLES"]
@@ -76,6 +80,10 @@ class FleetInstance(InstanceBase):
     @property
     def scheduler(self):
         return self.engine.scheduler
+
+    def squeeze_kvc(self, frac: float) -> int:
+        # the engine defers a mid-megastep cut to the window boundary
+        return self.engine.squeeze_kvc(frac)
 
 
 class EngineFleet:
@@ -121,6 +129,10 @@ class EngineFleet:
         self._redeliver: List[Tuple[float, GenRequest]] = []
         self._retries: Dict[int, int] = {}       # id(GenRequest) -> attempts
         self._dead_handled: set = set()          # instance ids reclaimed
+        # host-pool KV images harvested off dead engines, keyed by
+        # id(GenRequest): redelivery re-seeds pages instead of recomputing
+        self._salvaged: Dict[int, dict] = {}
+        self.n_salvaged_restores = 0
         self.n_recovered = 0
         self.n_failed_recoveries = 0
         self.n_evacuations = 0
@@ -219,9 +231,21 @@ class EngineFleet:
             eng = inst.engine
             eng._pending_drain.clear()       # ring state died with the device
             victims = [g for g in eng.requests.values() if not g.finished]
+            # host-offloaded KV images outlive the device: harvest them so
+            # redelivery restores pages instead of recomputing
+            for rid, img in eng._host_swap.items():
+                g = eng.requests.get(rid)
+                if g is not None and not g.finished:
+                    self._salvaged[id(g)] = img
+            eng._host_swap.clear()
             for payload, _ in eng._pending_injects:   # migrated in, unapplied
                 if not payload["gen"].finished:
                     victims.append(payload["gen"])
+                    if payload.get("kv") is not None:
+                        # an in-flight KV image is just as salvageable
+                        self._salvaged[id(payload["gen"])] = {
+                            "kv": payload["kv"], "ctx": payload["ctx"],
+                            "crc": payload.get("kv_crc")}
             eng._pending_injects.clear()
             eng._pending_aborts.clear()
             for g in victims:
@@ -235,9 +259,10 @@ class EngineFleet:
             g.status = "aborted"
             g.fail_reason = f"retries-exhausted({reason})"
             self.n_failed_recoveries += 1
+            self._salvaged.pop(id(g), None)
             return
         self._retries[id(g)] = att + 1
-        delay = self.recovery.backoff_base * (2.0 ** att)
+        delay = backoff_delay(self.recovery, g.rid, att)
         self._redeliver.append((now + delay, g))
 
     def _deliver_redeliveries(self, now: float) -> None:
@@ -247,6 +272,7 @@ class EngineFleet:
         self._redeliver = [(t, g) for t, g in self._redeliver if t > now]
         for _, g in due:
             if g.finished:               # aborted while waiting (deadline)
+                self._salvaged.pop(id(g), None)
                 continue
             out, eos = g.output, g.params.eos_token
             rl = g.params.max_new_tokens
@@ -258,6 +284,7 @@ class EngineFleet:
                 g.status = "completed"
                 g.t_done = now
                 self.n_recovered += 1
+                self._salvaged.pop(id(g), None)
                 continue
             cands = [i for i in self.instances if i.accepts_prompts()] \
                 or [i for i in self.instances if i.alive and not i.draining] \
@@ -286,8 +313,22 @@ class EngineFleet:
                 payload = {"gen": g, "req": r, "kv": None,
                            "ctx": len(g.prompt) + len(out) - 1,
                            "last_tok": out[-1], "kv_crc": None}
+                # a salvaged host-pool image whose extent matches the
+                # drained tail restores pages instead of recomputing;
+                # a mismatch (undrained ring tokens died with the
+                # device) falls back — the recompute path regenerates
+                # them bit-exactly
+                img = self._salvaged.pop(id(g), None)
+                if (img is not None and img.get("kv") is not None
+                        and img["ctx"] == payload["ctx"]):
+                    payload["kv"] = img["kv"]
+                    payload["kv_crc"] = img.get("crc")
+                    self.n_salvaged_restores += 1
+                if self.faults is not None:
+                    payload = self.faults.corrupt_payload(payload)
                 tgt.engine.inject_kv(payload, now)
             else:
+                self._salvaged.pop(id(g), None)
                 tgt.engine.submit(g, g.t_submit)
             self.route_of[id(g)] = tgt.id    # re-route, not a double route
             self.n_recovered += 1
@@ -447,6 +488,7 @@ class EngineFleet:
                 "double_routes": self.double_routes,
                 "migrations": self.n_migrations,
                 "recovered": self.n_recovered,
+                "salvaged": self.n_salvaged_restores,
                 "evacuations": self.n_evacuations,
                 "kv_rejects": sum(i.engine.n_kv_rejects
                                   for i in self.instances),

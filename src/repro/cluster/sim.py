@@ -47,7 +47,7 @@ from repro.core.simulator import SimInstance
 from .autoscale import GoodputAutoscaler
 from .base import (SUSPECT, InstanceBase, ROLES, execute_autoscale,
                    validate_roles)
-from .faults import FaultInjector, RecoveryConfig
+from .faults import FaultInjector, RecoveryConfig, backoff_delay
 from .router import Router, make_router
 
 _INF = float("inf")
@@ -98,7 +98,7 @@ class ClusterInstance(InstanceBase):
         while self.pending and self.pending[0][0] <= self.sim.t + _EPS:
             _, req, as_gt = self.pending.pop(0)
             if as_gt:
-                self.sim.scheduler.gt_queue.append(req)
+                self.sim.scheduler.enqueue_gt(req)
             else:
                 self.sim.deliver(req, self.sim.t)
             self.stalled = False
@@ -305,7 +305,7 @@ class ClusterSim:
             self.aborted_rids.append(req.rid)
             return
         self._retries[req.rid] = att + 1
-        delay = self.recovery.backoff_base * (2.0 ** att)
+        delay = backoff_delay(self.recovery, req.rid, att)
         as_gt = req.generated > 0
         if as_gt:
             req.prompt_done = req.prompt_len
@@ -380,6 +380,14 @@ class ClusterSim:
             nxt.deliver_due()
             t_before = nxt.sim.t
             status = nxt.sim.step()
+            sched = nxt.sim.scheduler
+            if sched.infeasible_shed:
+                # rung 4: a squeeze made these permanently inadmissible
+                # on this instance — record the terminal shed
+                for r in sched.infeasible_shed:
+                    r.set_state(State.ABORTED, nxt.sim.t)
+                    self.aborted_rids.append(r.rid)
+                sched.infeasible_shed.clear()
             if status == SimInstance.STEPPED:
                 total_iters += 1
                 nxt.stalled = False

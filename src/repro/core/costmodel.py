@@ -152,6 +152,16 @@ class CostModel:
         """Offload (or restore) `tokens` of KV to/from host memory."""
         return tokens * self.model.kv_bytes_per_token / self.hw.swap_bw
 
+    def swap_out_time(self, tokens: int) -> float:
+        """Device→host leg only. The tiered ladder charges each direction
+        where it happens (out at swap-out, in at swap-in) instead of the
+        legacy 2x round-trip charged up front."""
+        return self.swap_time(tokens)
+
+    def swap_in_time(self, tokens: int) -> float:
+        """Host→device leg only (restore of a host-offloaded image)."""
+        return self.swap_time(tokens)
+
     def kv_transfer_time(self, tokens: int) -> float:
         """DistServe-style prefill→decode instance KV handoff."""
         return tokens * self.model.kv_bytes_per_token / self.hw.link_bw

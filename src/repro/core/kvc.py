@@ -18,11 +18,21 @@ Accounting distinguishes *allocated* from *used* tokens: KVC utilization
 between the two is exactly what KVCPipe closes. Both are maintained as
 running counters — the simulator reads them every iteration, so they must
 be O(1), not O(#allocations).
+
+The *swap ledger* tracks per-rid KV page images offloaded to host memory
+(rung 2 of the pressure-degradation ladder: lending → host swap →
+recompute → shed). The ledger holds token extents only — the actual page
+bytes live engine-side — under a bounded ``host_pool_tokens`` budget.
+Registering past the budget evicts the oldest unpinned images (those
+requests degrade one rung, to recompute); pinned images (in-flight
+swap-in) are never evicted. ``shrink`` models a live capacity squeeze:
+blocks that cannot be removed immediately are parked in
+``pending_shrink`` and harvested as allocations free.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, List, Optional
 
 
 class AllocationError(Exception):
@@ -41,9 +51,17 @@ class Allocation:
     lent_tokens: int = 0        # KVCPipe: capacity granted inside a host span
 
 
+@dataclass
+class SwapEntry:
+    """One host-offloaded KV image: token extent + eviction protection."""
+    tokens: int = 0
+    pinned: bool = False        # in-flight swap-in: never evicted
+
+
 class BlockKVC:
     def __init__(self, capacity_tokens: int, block_size: int = 32,
-                 reserve_frac: float = 0.0):
+                 reserve_frac: float = 0.0,
+                 host_pool_tokens: Optional[int] = None):
         self.block_size = block_size
         self.total_blocks = capacity_tokens // block_size
         self.reserve_target = int(self.total_blocks * reserve_frac)
@@ -53,6 +71,18 @@ class BlockKVC:
         self.n_failures = 0
         self.n_allocs = 0
         self._used_tokens = 0          # running sum of per-alloc used_tokens
+        # -- host swap ledger (rung 2) --
+        self.host_pool_tokens = (self.total_blocks * block_size
+                                 if host_pool_tokens is None
+                                 else int(host_pool_tokens))
+        self.swapped: Dict[int, SwapEntry] = {}   # insertion order = age
+        self.host_used = 0
+        self.n_swap_outs = 0
+        self.n_swap_ins = 0
+        self.n_host_evictions = 0
+        # -- live capacity squeeze --
+        self.pending_shrink = 0        # blocks owed, harvested by free()
+        self.n_shrinks = 0             # squeezes applied (gates rung-4 shed)
 
     # ------------------------------------------------------------------ #
     @property
@@ -166,7 +196,89 @@ class BlockKVC:
         self.free_blocks += a.blocks + a.reserve_blocks
         self.reserve_in_use -= a.reserve_blocks
         self._used_tokens -= a.used_tokens
+        if self.pending_shrink:
+            h = min(self.pending_shrink, self.free_blocks)
+            self.free_blocks -= h
+            self.total_blocks -= h
+            self.pending_shrink -= h
         return (a.blocks + a.reserve_blocks) * self.block_size
+
+    # ------------------------------------------------------------------ #
+    # host swap ledger (pressure ladder rung 2)
+    # ------------------------------------------------------------------ #
+    def swap_register(self, rid: int, tokens: int) -> Optional[List[int]]:
+        """Record a host-offloaded KV image of ``tokens`` extent.
+
+        Returns the rids of older unpinned images evicted to make room
+        (each degrades one rung, to recompute), or ``None`` when the
+        image cannot fit the budget even after evicting everything
+        unpinned — the caller must drop the image and recompute.
+        """
+        assert rid not in self.swapped, rid
+        tokens = max(0, tokens)
+        if tokens > self.host_pool_tokens:
+            return None
+        evicted: List[int] = []
+        if self.host_used + tokens > self.host_pool_tokens:
+            freed = 0
+            for old_rid, e in self.swapped.items():
+                if e.pinned:
+                    continue
+                evicted.append(old_rid)
+                freed += e.tokens
+                if self.host_used - freed + tokens <= self.host_pool_tokens:
+                    break
+            if self.host_used - freed + tokens > self.host_pool_tokens:
+                return None            # everything left is pinned
+            for old_rid in evicted:    # fits: commit the evictions
+                self.host_used -= self.swapped.pop(old_rid).tokens
+                self.n_host_evictions += 1
+        self.swapped[rid] = SwapEntry(tokens=tokens)
+        self.host_used += tokens
+        self.n_swap_outs += 1
+        return evicted
+
+    def swap_release(self, rid: int, restored: bool = False) -> int:
+        """Drop a ledger entry (image restored, dropped, or request done).
+        Returns the tokens released; counts a swap-in when ``restored``."""
+        e = self.swapped.pop(rid, None)
+        if e is None:
+            return 0
+        self.host_used -= e.tokens
+        if restored:
+            self.n_swap_ins += 1
+        return e.tokens
+
+    def swap_pin(self, rid: int) -> None:
+        e = self.swapped.get(rid)
+        if e is not None:
+            e.pinned = True
+
+    def swap_unpin(self, rid: int) -> None:
+        e = self.swapped.get(rid)
+        if e is not None:
+            e.pinned = False
+
+    def swapped_tokens(self, rid: int) -> int:
+        e = self.swapped.get(rid)
+        return 0 if e is None else e.tokens
+
+    # ------------------------------------------------------------------ #
+    def shrink(self, tokens: int) -> int:
+        """Live capacity squeeze (chaos ``squeeze`` event): remove up to
+        ``tokens`` worth of blocks. Blocks still held by allocations are
+        owed — parked in ``pending_shrink`` and harvested as requests
+        free. Returns blocks removed immediately. Never invalidates a
+        no-admission certificate: capacity only shrinks."""
+        want = blocks_for(tokens, self.block_size)
+        now = min(want, self.free_blocks)
+        self.free_blocks -= now
+        self.total_blocks -= now
+        self.pending_shrink += want - now
+        self.reserve_target = max(self.reserve_in_use,
+                                  min(self.reserve_target, self.total_blocks))
+        self.n_shrinks += 1
+        return now
 
     # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
@@ -184,3 +296,9 @@ class BlockKVC:
         for rid, a in self.allocs.items():
             assert a.used_tokens <= (a.blocks + a.reserve_blocks) \
                 * self.block_size + a.lent_tokens, rid
+        host_held = sum(e.tokens for e in self.swapped.values())
+        assert host_held == self.host_used, (host_held, self.host_used)
+        assert 0 <= self.host_used <= self.host_pool_tokens, \
+            (self.host_used, self.host_pool_tokens)
+        assert self.pending_shrink >= 0, self.pending_shrink
+        assert self.total_blocks >= 0, self.total_blocks

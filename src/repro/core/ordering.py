@@ -246,6 +246,11 @@ class OrderedQueue:
     def __contains__(self, req: Request) -> bool:
         return self._order.get(req.rid) is req
 
+    def get(self, rid: int) -> Optional[Request]:
+        """O(1) member lookup by rid (None when not queued) — what lets
+        the scheduler's incremental min-demand heaps validate lazily."""
+        return self._order.get(rid)
+
     def __repr__(self) -> str:
         return f"OrderedQueue({list(self._order.values())!r})"
 

@@ -1,0 +1,76 @@
+"""Watermark-guarded KVC pressure controller.
+
+``WatermarkGuard`` turns raw KVC occupancy into a stable two-state
+backpressure signal: an :class:`EWMA` smooths the per-step occupancy,
+and high/low watermarks with hysteresis (plus a patience count on the
+way up) decide when the engine should proactively swap waiting GTs out
+to the host pool versus release them back for admission. Hysteresis is
+what keeps the ladder from thrashing — a single controller decision
+covers the whole span between the watermarks.
+
+The controller is deterministic: state depends only on the sequence of
+observed occupancies, and the engine only feeds it at megastep-window
+boundaries (occupancy is frozen inside a certified window), so a K=8
+fused run observes exactly the same sequence as a K=1 run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class EWMA:
+    """Exponentially-weighted moving average, seeded by first sample."""
+    alpha: float = 0.5
+    value: float = 0.0
+    _primed: bool = False
+
+    def update(self, x: float) -> float:
+        if not self._primed:
+            self.value = float(x)
+            self._primed = True
+        else:
+            self.value += self.alpha * (float(x) - self.value)
+        return self.value
+
+
+@dataclass
+class WatermarkGuard:
+    """Hysteresis state machine over EWMA'd KVC occupancy.
+
+    ``observe(frac)`` returns the current state: ``True`` means the
+    guard is in *pressure* mode (swap out, hold admissions), ``False``
+    means relaxed (swap back in). Entry requires the smoothed occupancy
+    to sit above ``high`` for ``patience`` consecutive observations;
+    exit requires it to fall below ``low`` (no patience on the way
+    down — releasing pressure late is the expensive direction).
+    """
+    high: float = 0.92
+    low: float = 0.70
+    alpha: float = 0.5
+    patience: int = 2
+    ewma: EWMA = field(default_factory=EWMA)
+    pressure: bool = False
+    _over: int = 0              # consecutive observations above high
+    n_trips: int = 0            # relaxed -> pressure transitions
+    n_releases: int = 0         # pressure -> relaxed transitions
+
+    def __post_init__(self):
+        assert 0.0 <= self.low <= self.high <= 1.0, (self.low, self.high)
+        self.ewma.alpha = self.alpha
+
+    def observe(self, occupied_frac: float) -> bool:
+        v = self.ewma.update(occupied_frac)
+        if not self.pressure:
+            if v >= self.high:
+                self._over += 1
+                if self._over >= self.patience:
+                    self.pressure = True
+                    self.n_trips += 1
+            else:
+                self._over = 0
+        elif v <= self.low:
+            self.pressure = False
+            self._over = 0
+            self.n_releases += 1
+        return self.pressure

@@ -12,6 +12,7 @@ The EconoServe variants map to the paper's ablation:
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -98,6 +99,23 @@ class BaseScheduler:
         self.n_hosted = 0
         self.pending_extra_time = 0.0
         self.iter_completion_counts: List[int] = []
+        # watermark-guard backpressure: queued GTs swapped out to host and
+        # held out of admission until the guard releases pressure
+        self.swap_hold: Dict[int, Request] = {}
+        self.n_guard_swaps = 0
+        # pressure-ladder rung 4: requests a capacity squeeze made
+        # permanently inadmissible, cancelled by form_batch's deadlock
+        # relief and parked here for the backend to surface terminally
+        self.infeasible_shed: List[Request] = []
+        self.n_infeasible_shed = 0
+        # incrementally-maintained queue-minimum-demand heaps (lazy):
+        # entries (value, rid); stale/changed entries are discarded or
+        # re-keyed at query time. Only EconoServe with an OrderedQueue
+        # maintains them (the only policy with a KVC certificate).
+        self._track_gt_demand = False
+        self._gt_need_heap: List[Tuple[int, int]] = []      # need blocks
+        self._gt_need_res_heap: List[Tuple[int, int]] = []  # resident only
+        self._gt_host_heap: List[Tuple[int, int]] = []      # remaining RL
 
     # ---------------------------------------------------------------- #
     def on_arrival(self, req: Request, t: float) -> None:
@@ -177,6 +195,7 @@ class BaseScheduler:
         req.set_state(State.COMPLETED, t)
         req.t_complete = t
         self.kvc.free(req.rid)
+        self.kvc.swap_release(req.rid)     # defensive: no image outlives it
         self.completed.append(req)
 
     def notify_eos(self, req: Request, at_generated: int) -> None:
@@ -277,7 +296,9 @@ class BaseScheduler:
                 self.group_completed = True    # mirror finish_iteration
         if req is None:
             return None
+        self.swap_hold.pop(rid, None)
         self.kvc.free(rid)
+        self.kvc.swap_release(rid)         # drop any host-offloaded image
         req.set_state(State.ABORTED, t)
         return req
 
@@ -295,7 +316,64 @@ class BaseScheduler:
             self._complete(req, t)
             return
         req.set_state(State.QUEUED_GT, t)
+        self.enqueue_gt(req)
+
+    # ---------------------------------------------------------------- #
+    # GT-queue chokepoint + incremental min-demand accounting
+    # ---------------------------------------------------------------- #
+    def _gt_need_blocks(self, r: Request) -> int:
+        """Exact-allocation demand of a queued GT, in blocks — the quantity
+        ``_schedule_gt_member`` tests against ``free_general``."""
+        need = (r.prompt_len + r.generated + r.remaining_predicted) \
+            - self.kvc.allocated_tokens(r.rid)
+        return blocks_for(need, self.cfg.block_size)
+
+    def enqueue_gt(self, req: Request) -> None:
+        """Every GT enqueue goes through here so the min-demand heaps stay
+        consistent with the queue. Policies without a KVC certificate skip
+        the bookkeeping (``_track_gt_demand`` False)."""
         self.gt_queue.append(req)
+        if self._track_gt_demand:
+            self._push_gt_demand(req)
+
+    def _push_gt_demand(self, req: Request) -> None:
+        nb = self._gt_need_blocks(req)
+        heapq.heappush(self._gt_need_heap, (nb, req.rid))
+        if req.rid in self.kvc.allocs:
+            heapq.heappush(self._gt_need_res_heap, (nb, req.rid))
+        heapq.heappush(self._gt_host_heap,
+                       (max(1, req.remaining_predicted), req.rid))
+
+    def _heap_min(self, heap: List[Tuple[int, int]], value_fn,
+                  resident_only: bool = False) -> Optional[int]:
+        """Smallest current value over queued (non-held) GTs. Lazy: dead
+        entries are popped, re-keyed entries re-pushed — each discard or
+        re-key is paid for by the queue/demand event that caused it, so
+        the certificate query is O(1) amortized instead of a queue scan."""
+        while heap:
+            val, rid = heap[0]
+            r = self.gt_queue.get(rid)
+            if r is None or rid in self.swap_hold \
+                    or (resident_only and rid not in self.kvc.allocs):
+                heapq.heappop(heap)
+                continue
+            cur = value_fn(r)
+            if cur != val:
+                heapq.heapreplace(heap, (cur, rid))
+                continue
+            return val
+        return None
+
+    def release_swap_holds(self) -> None:
+        """Guard pressure released: held GTs rejoin the admission path
+        (their swap-in leg is charged when the engine actually restores
+        them). Re-pushes demand entries for still-queued holds — queries
+        discarded their heap entries while held."""
+        if self._track_gt_demand:
+            for rid, req in self.swap_hold.items():
+                if self.gt_queue.get(rid) is not None:
+                    self._push_gt_demand(req)
+        self.swap_hold.clear()
 
     # ---------------------------------------------------------------- #
     # to be provided by policies
@@ -320,6 +398,7 @@ class EconoServeScheduler(BaseScheduler):
         if cfg.ordering and cfg.incremental_queues:
             self.pt_queue = OrderedQueue(is_gt=False, index=cfg.queue_index)
             self.gt_queue = OrderedQueue(is_gt=True, index=cfg.queue_index)
+            self._track_gt_demand = True
 
     @staticmethod
     def _age_of(req: Request) -> int:
@@ -379,24 +458,45 @@ class EconoServeScheduler(BaseScheduler):
             # (queue scan, once per window)
             if kvc.free_general > 0:
                 cap_full = len(kvc.allocs) >= self.cfg.max_batch_reqs
-                for r in self.gt_queue:
-                    if cap_full and r.rid not in kvc.allocs:
-                        continue     # _schedule_gt_member's cap rejects it
-                    need = (r.prompt_len + r.generated
-                            + r.remaining_predicted) \
-                        - kvc.allocated_tokens(r.rid)
-                    if blocks_for(need, self.cfg.block_size) \
-                            <= kvc.free_general:
+                if self._track_gt_demand:
+                    # incremental min-demand counter: the cheapest queued
+                    # demand is a heap peek (amortized O(1)), so the
+                    # partially-free regime certifies without a queue scan
+                    m = self._heap_min(
+                        self._gt_need_res_heap if cap_full
+                        else self._gt_need_heap,
+                        self._gt_need_blocks, resident_only=cap_full)
+                    if m is not None and m <= kvc.free_general:
                         return 1
+                else:
+                    for r in self.gt_queue:
+                        if r.rid in self.swap_hold:
+                            continue  # guard-held: fills skip it too
+                        if cap_full and r.rid not in kvc.allocs:
+                            continue  # _schedule_gt_member's cap rejects it
+                        need = (r.prompt_len + r.generated
+                                + r.remaining_predicted) \
+                            - kvc.allocated_tokens(r.rid)
+                        if blocks_for(need, self.cfg.block_size) \
+                                <= kvc.free_general:
+                            return 1
             if self.cfg.pipelining and self.pipe.open_slots:
                 # hosted placement: open-slot capacity *shrinks* as owners
                 # age (1 token/iteration) while queued demand is frozen,
                 # so "cheapest demand exceeds the largest slot now"
-                # certifies the whole window (queue scan)
+                # certifies the whole window
                 cap = self.pipe.max_hostable(self._age_of)
-                if cap >= 1 and any(max(1, r.remaining_predicted) <= cap
-                                    for r in self.gt_queue):
-                    return 1
+                if cap >= 1:
+                    if self._track_gt_demand:
+                        m = self._heap_min(
+                            self._gt_host_heap,
+                            lambda r: max(1, r.remaining_predicted))
+                        if m is not None and m <= cap:
+                            return 1
+                    elif any(max(1, r.remaining_predicted) <= cap
+                             for r in self.gt_queue
+                             if r.rid not in self.swap_hold):
+                        return 1
         return max_k
 
     def _pipe_expiry_horizon(self, pipe, max_k: int) -> int:
@@ -450,7 +550,8 @@ class EconoServeScheduler(BaseScheduler):
     def _fill_gts(self, t: float) -> int:
         """①: select GT groups (or single GTs) until KVC fully allocated."""
         n_sel = 0
-        q = self._sorted_gt_queue(t)
+        q = [r for r in self._sorted_gt_queue(t)
+             if r.rid not in self.swap_hold]
         # remaining_predicted is constant within one _fill_gts call (it only
         # moves in finish_iteration), so the RL bucket of each candidate is
         # computed at most once per call instead of O(queue) per group
@@ -513,7 +614,8 @@ class EconoServeScheduler(BaseScheduler):
         if not self.cfg.pipelining:
             return 0
         n_sel = 0
-        q = self._sorted_gt_queue(t)
+        q = [r for r in self._sorted_gt_queue(t)
+             if r.rid not in self.swap_hold]
         while q and self.pipe.open_slots:
             cap = self.pipe.max_hostable(self._age_of)
             if cap < 1:
@@ -611,6 +713,59 @@ class EconoServeScheduler(BaseScheduler):
             freed = True
         return freed
 
+    def _shed_infeasible(self, t: float) -> int:
+        """Pressure-ladder rung 4: after a capacity squeeze, a queued
+        request whose frozen admission demand exceeds what even an
+        *empty* post-shrink cache can offer will never be admitted again
+        — demand is frozen while it waits and capacity only shrinks.
+        Called from form_batch's deadlock relief (nothing runs, nothing
+        placeable, every softer rung exhausted): cancel the doomed
+        requests and park them in ``infeasible_shed`` for the backend to
+        surface as terminal sheds. Returns how many were cancelled."""
+        cap = self.kvc.total_blocks - self.kvc.pending_shrink
+        bs = self.cfg.block_size
+        doomed = [r for r in list(self.gt_queue)
+                  if blocks_for(r.prompt_len + r.generated
+                                + r.remaining_predicted, bs) > cap]
+        doomed += [r for r in list(self.pt_queue)
+                   if blocks_for(r.prompt_len + max(r.padded_rl, 1), bs)
+                   > cap]
+        for r in doomed:
+            self.cancel(r.rid, t)
+            self.infeasible_shed.append(r)
+            self.n_infeasible_shed += 1
+        return len(doomed)
+
+    # -------------------------------------------------------------- #
+    # watermark-guard backpressure (proactive host swap, rung 2)
+    # -------------------------------------------------------------- #
+    def swap_victims(self, max_n: Optional[int] = None) -> List[Request]:
+        """Waiting GTs eligible for proactive swap-out, most-KVC-first —
+        each victim releases the most device pressure (rid tie-break
+        keeps victim choice deterministic)."""
+        cands = [r for r in self.gt_queue
+                 if r.rid not in self.swap_hold
+                 and self.kvc.allocated_tokens(r.rid) > 0]
+        cands.sort(key=lambda r: (-self.kvc.allocated_tokens(r.rid), r.rid))
+        return cands if max_n is None else cands[:max_n]
+
+    def guard_swap_out(self, req: Request, t: float) -> int:
+        """Proactively swap a waiting GT's device KVC out (the engine
+        captures the page image at its next slot sweep) and hold it out
+        of admission until the guard releases pressure. Charges only the
+        out leg — the in leg is charged at restore. Returns the token
+        extent moved to host."""
+        tokens = req.prompt_len + req.generated
+        self.kvc.free(req.rid)
+        out_t = self.cost.swap_out_time(tokens)
+        self.pending_extra_time += out_t
+        req.swap_time += out_t
+        req.occupied_kvc = tokens          # held in host memory now
+        req.prompt_done = req.prompt_len
+        self.swap_hold[req.rid] = req
+        self.n_guard_swaps += 1
+        return tokens
+
     def form_batch(self, t: float) -> IterationPlan:
         plan = IterationPlan()
         n_gt_sel = 0
@@ -625,9 +780,24 @@ class EconoServeScheduler(BaseScheduler):
             n_gt_sel += self._fill_hosted(t)
             self.group_completed = False
         if not self.running_groups and n_gt_sel == 0 and self.gt_queue:
+            # liveness trumps backpressure: before deadlock relief, give
+            # guard-held requests back to the admission path
+            if self.swap_hold:
+                self.release_swap_holds()
+                n_gt_sel += self._fill_gts(t)
+                n_gt_sel += self._fill_hosted(t)
+        if not self.running_groups and n_gt_sel == 0 and self.gt_queue:
             head = self._sorted_gt_queue(t)[0]
             need = head.prompt_len + head.generated + head.remaining_predicted
             if self._evict_waiting(t, need):
+                n_gt_sel += self._fill_gts(t)
+                n_gt_sel += self._fill_hosted(t)
+        if (not self.running_groups and n_gt_sel == 0
+                and self.kvc.n_shrinks
+                and (self.gt_queue or self.pt_queue)):
+            # every softer rung failed and capacity has shrunk: shed what
+            # can never fit again, then retry with the blocks it released
+            if self._shed_infeasible(t):
                 n_gt_sel += self._fill_gts(t)
                 n_gt_sel += self._fill_hosted(t)
         plan.prompt_items = self._fill_pts(t)
@@ -676,7 +846,7 @@ class EconoServeScheduler(BaseScheduler):
             req.padded_rl = req.generated + bucketize(
                 max(1, req.padded_rl - req.generated) + self.cfg.bucket,
                 self.cfg.bucket)
-            self.gt_queue.append(req)
+            self.enqueue_gt(req)
         if host is not None:
             self._maybe_free_zombie(host)
 

@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.core.costmodel import CostModel, ModelProfile
 from repro.core.predictor import NoisyPredictor, apply_padding
+from repro.core.pressure import WatermarkGuard
 from repro.core.request import Request, State
 from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.models import model
@@ -166,6 +167,18 @@ class EngineConfig:
     ``packed_chunk_prefill=False`` keeps the one-call-per-chunk reference
     path: by default a wave of >= 2 chunk grants in one iteration runs as
     ONE token-packed dispatch with per-segment prefix views.
+
+    ``host_swap`` enables the host-offload KV swap tier (rung 2 of the
+    pressure-degradation ladder): when a swapped/evicted GT loses its
+    engine slot its live cache pages are captured to a bounded host pool
+    and restored on next schedule instead of recomputed. It only replaces
+    recompute with a bitwise-identical page restore, so it is on by
+    default; ``host_pool_frac`` sizes the pool relative to device KVC.
+    ``swap_watermarks`` additionally arms the proactive
+    ``WatermarkGuard`` controller (EWMA'd occupancy, high/low hysteresis)
+    that swaps waiting GTs out *before* allocation failures force
+    reactive preemption, holding them out of admission until pressure
+    releases — at most ``guard_max_swaps`` victims per trip observation.
     """
     async_decode: bool = True
     packed_prefill: bool = True
@@ -174,6 +187,15 @@ class EngineConfig:
     decode_megastep: int = 8
     incremental_chunk_prefill: bool = True
     packed_chunk_prefill: bool = True
+    # --- tiered KVC degradation (host swap + watermark guard) ----------
+    host_swap: bool = True
+    host_pool_frac: float = 1.0
+    swap_watermarks: bool = False
+    guard_high: float = 0.92
+    guard_low: float = 0.70
+    guard_alpha: float = 0.5
+    guard_patience: int = 2
+    guard_max_swaps: int = 2
 
 
 @dataclass
@@ -289,7 +311,31 @@ class ServingEngine:
         self.n_kv_injects = 0
         self.n_kv_rejects = 0        # corrupted KV images refused at inject
         self.n_aborted = 0
+        self.n_shed = 0              # rung-4 terminal sheds (kvc-infeasible)
         self.n_prefill_waves = 0     # whole-prompt prefill dispatch waves
+
+        # host-offload KV swap tier (tiered KVC degradation, rung 2):
+        # rid -> {"kv", "ctx", "crc"} page images captured when a
+        # swapped/evicted GT loses its slot; restored by ``_swap_in``
+        # instead of the rung-3 recompute re-prefill. Extents are
+        # budgeted by the scheduler-side ``BlockKVC`` swap ledger.
+        self._host_swap: Dict[int, dict] = {}
+        kvc = self.scheduler.kvc
+        kvc.host_pool_tokens = int(kvc.capacity_tokens
+                                   * max(0.0, self.ecfg.host_pool_frac))
+        self.guard = WatermarkGuard(
+            high=self.ecfg.guard_high, low=self.ecfg.guard_low,
+            alpha=self.ecfg.guard_alpha,
+            patience=self.ecfg.guard_patience) \
+            if self.ecfg.swap_watermarks else None
+        self.n_swap_captures = 0     # page images offloaded to host
+        self.n_swap_restores = 0     # restored via swap-in (no recompute)
+        self.n_swap_rejects = 0      # corrupt host image -> recompute rung
+        self.n_swap_drops = 0        # budget-refused capture -> recompute
+        # chaos ``squeeze`` arriving inside an open megastep window is
+        # deferred: eating free blocks mid-window could invalidate the
+        # extension headroom the fused rows were certified against
+        self._pending_squeeze = 0.0
 
         # async bookkeeping: device slot state carried across the fused
         # steps, plus the lag-N readback ring of (tokens, [(row, rid)]).
@@ -667,6 +713,7 @@ class ServingEngine:
             self.free_slots.append(slot)
         self._chunk_progress.pop(rid, None)
         self._rec_state.pop(rid, None)
+        self._host_swap.pop(rid, None)   # ledger entry dropped by cancel()
         g.status = "aborted"
         g.fail_reason = reason
         self.n_aborted += 1
@@ -712,7 +759,7 @@ class ServingEngine:
             self._drain_tokens(force=True)
         g = self.requests.pop(rid)
         slot = self.slot_of.pop(rid, None)
-        kv = None
+        kv = crc = None
         if slot is not None:
             if self._async:
                 ctx = int(jax.device_get(self._dev["pos"][slot]))
@@ -724,19 +771,30 @@ class ServingEngine:
                 kv = {kind: {n: np.asarray(sub[n][:, slot, :ctx])
                              for n in ("k", "v")}
                       for kind, sub in self.caches.items()}
+                crc = kv_checksum(kv)
             self.free_slots.append(slot)
         else:
             ctx = req.prompt_len + req.generated - 1
             last = g.output[req.generated - 1]
+            # a host-offloaded image survives the slot loss: ship it (with
+            # its capture-time CRC — recomputing here would vouch for a
+            # corrupted pool) instead of sentencing the receiver to the
+            # recompute fallback
+            img = self._host_swap.pop(rid, None)
+            if (img is not None and self.can_migrate_kv
+                    and img["ctx"] == ctx):
+                kv, crc = img["kv"], img["crc"]
         sched.gt_queue.remove(req)
         sched.kvc.free(rid)
+        sched.kvc.swap_release(rid)
+        sched.swap_hold.pop(rid, None)
         self._chunk_progress.pop(rid, None)
         self._rec_state.pop(rid, None)
+        self._host_swap.pop(rid, None)
         req.occupied_kvc = req.prompt_len + req.generated
         self.n_kv_exports += 1
         return {"gen": g, "req": req, "kv": kv, "ctx": ctx,
-                "last_tok": last,
-                "kv_crc": kv_checksum(kv) if kv is not None else None}
+                "last_tok": last, "kv_crc": crc}
 
     def inject_kv(self, payload: dict, now: float) -> Optional[int]:
         """Receive a migrated request. With a KV image (and a free slot +
@@ -817,9 +875,154 @@ class ServingEngine:
             req.prompt_done = req.prompt_len
         req.occupied_kvc = tokens
         req.set_state(State.QUEUED_GT, now)
-        sched.gt_queue.append(req)
+        sched.enqueue_gt(req)
         self.n_kv_injects += 1
         return rid
+
+    # ------------------------------------------------------------------ #
+    # host-offload KV swap tier (pressure ladder rung 2)
+    # ------------------------------------------------------------------ #
+    def _core_req(self, rid: int):
+        """The scheduler-side Request still queued under ``rid`` (None
+        when completed/aborted). ``gt_queue`` is an O(1)-indexed
+        ``OrderedQueue`` on the default config, a plain list otherwise."""
+        q = self.scheduler.gt_queue
+        get = getattr(q, "get", None)
+        if get is not None:
+            return get(rid)
+        return next((r for r in q if r.rid == rid), None)
+
+    def _swap_out(self, rid: int, slot: int) -> None:
+        """Rung-2 capture: offload a de-slotted GT's live cache pages to
+        the bounded host pool before the slot is recycled. A refused
+        capture (image over budget, recurrent/ring stack, offload-free
+        preemption) falls through to rung 3 — the request recomputes on
+        next schedule, exactly the pre-swap behavior."""
+        if not (self.ecfg.host_swap and self.can_migrate_kv):
+            return
+        req = self._core_req(rid)
+        if (req is None or req.prompt_done != req.prompt_len
+                or req.generated < 1):
+            return                     # offload-free preempt or terminal
+        # the newest sampled token's KV was never written to cache — it is
+        # the pending decode input (same invariant as export_kv/recompute)
+        ctx = req.prompt_len + req.generated - 1
+        if ctx <= 0 or ctx > self.capacity:
+            return
+        evicted = self.scheduler.kvc.swap_register(rid, ctx)
+        if evicted is None:
+            self.n_swap_drops += 1     # budget refusal -> recompute rung
+            return
+        for old in evicted:            # ledger evictions degrade a rung
+            self._host_swap.pop(old, None)
+        # blocks until the slot's dispatched decode work has landed, so
+        # the image holds exactly ctx tokens of KV — a sync only paid on
+        # the preemption path, never in the no-swap steady state
+        kv = {kind: {n: np.asarray(sub[n][:, slot, :ctx])
+                     for n in ("k", "v")}
+              for kind, sub in self.caches.items()}
+        self._host_swap[rid] = {"kv": kv, "ctx": ctx,
+                                "crc": kv_checksum(kv)}
+        self.n_swap_captures += 1
+
+    def _swap_in(self, missing: List[Request], now: float) -> List[Request]:
+        """Rung-2 restore: re-seed scheduled GTs whose KV pages are in the
+        host pool, instead of the rung-3 recompute re-prefill. A corrupt
+        or missing image degrades one rung (the request stays in
+        ``missing`` and recomputes); a good image seeds exactly like a
+        cluster KV inject, so greedy token streams stay bitwise-equal to
+        the pressure-free run. Returns the requests left to recompute."""
+        sched = self.scheduler
+        left = []
+        for r in missing:
+            img = self._host_swap.pop(r.rid, None)
+            if img is None:
+                sched.kvc.swap_release(r.rid)   # evicted image, if any
+                left.append(r)
+                continue
+            ctx = img["ctx"]
+            ok = (self.can_migrate_kv and bool(self.free_slots)
+                  and 0 < ctx <= self.capacity and r.generated >= 1
+                  and kv_checksum(img["kv"]) == img["crc"])
+            sched.kvc.swap_release(r.rid, restored=ok)
+            if not ok:
+                self.n_swap_rejects += 1        # corrupt image -> rung 3
+                left.append(r)
+                continue
+            g = self.requests[r.rid]
+            slot = self.free_slots.pop()
+            self.slot_of[r.rid] = slot
+            Sb = seq_bucket(ctx)
+            if Sb > self.capacity:
+                Sb = max(ctx, self.capacity)
+            padded = {}
+            for kind, sub in img["kv"].items():
+                L, _, K, hd = sub["k"].shape
+                padded[kind] = {}
+                for n in ("k", "v"):
+                    buf = np.zeros((L, Sb, K, hd), sub[n].dtype)
+                    buf[:, :ctx] = sub[n]
+                    padded[kind][n] = buf
+            self.caches = self._inject_seed(self.caches, padded,
+                                            np.int32(slot), np.int32(ctx))
+            self.temps[slot] = g.params.temperature
+            self.top_ks[slot] = g.params.top_k
+            self.pos[slot] = ctx
+            last = g.output[r.generated - 1]
+            if self._async:
+                eos = -1 if g.params.eos_token is None \
+                    else g.params.eos_token
+                one = np.asarray([last], np.int32)
+                self._dev = self._seed_slots(
+                    self._dev, np.asarray([slot], np.int32),
+                    jnp.asarray(one), jnp.asarray(one),
+                    np.zeros(1, bool), np.asarray([ctx], np.int32),
+                    np.asarray([g.params.temperature], np.float32),
+                    np.asarray([g.params.top_k], np.int32),
+                    np.asarray([eos], np.int32))
+            else:
+                self.last_tok[slot] = last
+            t_in = sched.cost.swap_in_time(ctx)    # in leg charged here
+            sched.pending_extra_time += t_in
+            r.swap_time += t_in
+            self.n_swap_restores += 1
+        return left
+
+    def _guard_step(self, now: float) -> None:
+        """Watermark-guard observation at a window boundary: under
+        pressure, proactively swap the heaviest waiting GTs out (their
+        pages are captured immediately — slot and KVC free before this
+        iteration's admissions run); on release, give held requests back
+        to the admission path. Only runs when ``_mega_left == 0``, so a
+        K=8 fused run observes the same occupancy sequence as K=1."""
+        sched = self.scheduler
+        if sched.kvc.total_blocks <= 0:
+            return
+        if self.guard.observe(sched.kvc.allocated_frac):
+            for v in sched.swap_victims(self.ecfg.guard_max_swaps):
+                sched.guard_swap_out(v, now)
+                slot = self.slot_of.pop(v.rid, None)
+                if slot is not None:
+                    self.free_slots.append(slot)
+                    self._chunk_progress.pop(v.rid, None)
+                    self._rec_state.pop(v.rid, None)
+                    self._swap_out(v.rid, slot)
+        elif sched.swap_hold:
+            sched.release_swap_holds()
+
+    def squeeze_kvc(self, frac: float) -> int:
+        """Chaos ``squeeze``: permanently remove ``frac`` of the KVC
+        capacity. Free blocks go immediately; the remainder is harvested
+        as live allocations free (``BlockKVC.pending_shrink``), so no
+        holder is evicted mid-decode. Deferred while a fused megastep
+        window is open — eating free blocks mid-window could invalidate
+        the extension headroom the precomputed rows were certified
+        against. Returns blocks removed immediately (0 when deferred)."""
+        if self._mega_left > 0:
+            self._pending_squeeze += float(frac)
+            return 0
+        kvc = self.scheduler.kvc
+        return kvc.shrink(int(kvc.capacity_tokens * frac))
 
     # ------------------------------------------------------------------ #
     def _is_ring(self, kind: str, sub) -> bool:
@@ -1497,7 +1700,25 @@ class ServingEngine:
             for r, t_arr in self._arrivals:
                 self.scheduler.on_arrival(r, t_arr)
             self._arrivals.clear()
+        if self._mega_left == 0 and self._pending_squeeze:
+            kvc = self.scheduler.kvc
+            kvc.shrink(int(kvc.capacity_tokens * self._pending_squeeze))
+            self._pending_squeeze = 0.0
+        if self.guard is not None and self._mega_left == 0:
+            self._guard_step(now)
         plan = self.scheduler.form_batch(now)
+        if self.scheduler.infeasible_shed:
+            # rung 4: the scheduler cancelled requests a squeeze made
+            # permanently inadmissible — surface each as a terminal shed
+            shed, self.scheduler.infeasible_shed = \
+                self.scheduler.infeasible_shed, []
+            for r in shed:
+                self.abort(r.rid, now, "kvc-infeasible")
+                g = self.requests.get(r.rid)
+                if g is not None and g.status == "aborted":
+                    g.status = "shed"
+                    self.n_aborted -= 1
+                    self.n_shed += 1
         if plan.empty:
             if self._mega_left:
                 # every window request completed early (EOS inside the
@@ -1509,10 +1730,11 @@ class ServingEngine:
                 self._drain_tokens(force=True)
             return 0
         # GTs rescheduled after a swap-style preemption or deadlock-relief
-        # eviction arrive with their KV "in host memory" — this engine has
-        # no host KV store, so they are recomputed like an offload-free
-        # re-prefill (prompt + generated so far), riding the iteration's
-        # prefill wave so the rare preemption path costs no extra dispatch
+        # eviction arrive with their KV "in host memory". With a live
+        # host-pool image they are *restored* — pages re-seeded, zero
+        # recompute (rung 2); otherwise they are recomputed like an
+        # offload-free re-prefill (prompt + generated so far), riding the
+        # iteration's prefill wave (rung 3)
         missing = [r for r in plan.decode_reqs if r.rid not in self.slot_of]
         if self._mega_left > 0:
             assert not plan.prompt_items and not missing, \
@@ -1520,6 +1742,8 @@ class ServingEngine:
         if missing and self._pending_drain:     # ctx rebuild reads g.output
             self.sync_counts["flush"] += 1
             self._drain_tokens(force=True)
+        if missing:
+            missing = self._swap_in(missing, now)
         self._run_prefill(plan.prompt_items, now, missing=missing)
         if self._async:
             self._run_decode_async(plan, now)
@@ -1538,12 +1762,18 @@ class ServingEngine:
                 self.free_slots.append(slot)
                 freed = True
         # preempted/evicted requests (KVC freed by the scheduler) lose
-        # their slot; queued GTs keep theirs — their KV is live
+        # their slot; queued GTs keep theirs — their KV is live. Before a
+        # victim's slot is recycled its cache pages are offloaded to the
+        # host pool (rung 2), so the next schedule restores instead of
+        # recomputing; nothing reuses the slot until next step's prefill,
+        # so the post-free capture still reads the victim's pages
         for rid in list(self.slot_of):
             if rid not in self.scheduler.kvc.allocs:
-                self.free_slots.append(self.slot_of.pop(rid))
+                slot = self.slot_of.pop(rid)
+                self.free_slots.append(slot)
                 self._chunk_progress.pop(rid, None)
                 self._rec_state.pop(rid, None)
+                self._swap_out(rid, slot)
                 freed = True
         if freed and self._pending_drain:
             # completed outputs must be materialized before t_done is
@@ -1586,7 +1816,10 @@ class ServingEngine:
                 "mega_left": self._mega_left,
                 "buffered_arrivals": len(self._arrivals),
                 "pending_injects": len(self._pending_injects),
-                "pending_aborts": len(self._pending_aborts)}
+                "pending_aborts": len(self._pending_aborts),
+                "host_swap_images": len(self._host_swap),
+                "swap_hold": len(s.swap_hold),
+                "pending_shrink": s.kvc.pending_shrink}
 
     def run(self, gen_requests: Sequence[GenRequest],
             arrivals: Optional[Sequence[float]] = None,

@@ -10,8 +10,9 @@ streams of an undisturbed engine.
 import numpy as np
 import pytest
 
-from repro.cluster import (EngineFleet, FaultEvent, FaultInjector,
-                           InvariantViolation, RecoveryConfig,
+from repro.cluster import (ChaosSpecError, EngineFleet, FaultEvent,
+                           FaultInjector, InvariantViolation,
+                           RecoveryConfig, backoff_delay,
                            check_fleet_invariants, parse_chaos_spec)
 from repro.cluster.base import DEAD, HEALTHY, SUSPECT
 from repro.cluster.sim import ClusterSim
@@ -22,7 +23,7 @@ from repro.core.scheduler import SchedulerConfig, make_econoserve
 from repro.serving import (EngineConfig, FleetStalled, GenRequest,
                            InvalidRequestError, RequestShed, SamplingParams,
                            ServingEngine)
-from repro.serving.engine import serve_stream
+from repro.serving.engine import kv_checksum, serve_stream
 
 
 @pytest.fixture(scope="module")
@@ -54,12 +55,33 @@ def _sim_trace(n, rate=6.0, seed=0):
 # --------------------------------------------------------------------- #
 def test_parse_chaos_spec():
     evs = parse_chaos_spec("kill@25:1,freeze@40:2/20,slow@10:0/30x3,"
-                           "corrupt@15")
+                           "corrupt@15,squeeze@30:1/0.25")
     assert [(e.kind, e.t, e.target) for e in evs] == [
         ("kill", 25.0, 1), ("freeze", 40.0, 2), ("slow", 10.0, 0),
-        ("corrupt_kv", 15.0, -1)]
+        ("corrupt_kv", 15.0, -1), ("squeeze", 30.0, 1)]
     assert evs[1].duration == 20.0 and evs[2].factor == 3
-    with pytest.raises(AssertionError):
+    assert evs[4].frac == 0.25
+
+
+def test_parse_chaos_spec_typed_errors_name_the_clause():
+    """Every malformed clause raises ChaosSpecError carrying the exact
+    offending clause text — a typo must never half-parse into a silently
+    weakened chaos schedule."""
+    for bad, fragment in [
+        ("explode@3", "explode"),              # unknown kind
+        ("kill@abc", "kill@abc"),              # non-numeric fire time
+        ("kill25", "kill25"),                  # missing @
+        ("freeze@", "freeze@"),                # empty remainder
+        ("kill@5:x", "kill@5:x"),              # non-numeric target
+        ("freeze@5:1/abc", "freeze@5:1/abc"),  # non-numeric duration
+        ("slow@5:1/10xq", "slow@5:1/10xq"),    # non-numeric factor
+        ("squeeze@5:1/1.5", "squeeze@5:1/1.5"),  # frac out of (0, 1]
+    ]:
+        with pytest.raises(ChaosSpecError) as ei:
+            parse_chaos_spec(bad)
+        assert fragment in str(ei.value), (bad, str(ei.value))
+    # ChaosSpecError is a ValueError: generic callers still catch it
+    with pytest.raises(ValueError):
         parse_chaos_spec("explode@3")
 
 
@@ -400,6 +422,129 @@ def test_inject_kv_full_target_swaps_to_recompute(tiny_cfg):
         dst.step(t)
     assert g.t_done is not None and g.output == g_ref.output
     assert hog.t_done is not None
+
+
+# --------------------------------------------------------------------- #
+# pressure ladder under chaos: squeeze, salvage, jittered backoff
+# --------------------------------------------------------------------- #
+def test_backoff_delay_seeded_jitter():
+    """jitter=0 reproduces the legacy pure-exponential schedule bit for
+    bit; with jitter on, delays are deterministic per (seed, rid,
+    attempt), bounded by base*2^a*(1+jitter), and decorrelated across
+    rids and seeds."""
+    rc0 = RecoveryConfig(backoff_base=1.0)
+    assert [backoff_delay(rc0, 7, a) for a in range(3)] == [1.0, 2.0, 4.0]
+    rc = RecoveryConfig(backoff_base=1.0, jitter=0.5, jitter_seed=11)
+    d1 = [backoff_delay(rc, 7, a) for a in range(4)]
+    assert d1 == [backoff_delay(rc, 7, a) for a in range(4)]
+    for a, d in enumerate(d1):
+        base = 2.0 ** a
+        assert base <= d <= base * 1.5
+    rc2 = RecoveryConfig(backoff_base=1.0, jitter=0.5, jitter_seed=12)
+    assert [backoff_delay(rc2, 7, a) for a in range(4)] != d1
+    assert [backoff_delay(rc, 8, a) for a in range(4)] != d1
+
+
+def _squeeze_fleet(tiny_cfg, frac):
+    scfg = SchedulerConfig(kvc_tokens=224, block_size=16, tfs=128,
+                           max_model_len=128, max_batch_reqs=4)
+    return EngineFleet(
+        tiny_cfg, n_instances=2, router="least-kvc", seed=0,
+        max_batch=4, capacity=128, rl_accuracy=1.0, scheduler_cfg=scfg,
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=3.0, kind="squeeze", target=0, frac=frac),
+            FaultEvent(t=3.0, kind="squeeze", target=1, frac=frac)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+
+
+def test_fleet_squeeze_mid_run_degrades_not_crashes(tiny_cfg):
+    """Acceptance: a mid-run ``squeeze`` on a KVC-saturated fleet must
+    walk the pressure ladder — no AllocationError escapes ``run``, every
+    request lands completed|aborted|shed (here: all completed), greedy
+    streams stay bitwise-equal to a pressure-free run, and the post-run
+    audit finds no leaked ledger entries or host images."""
+    fleet = _squeeze_fleet(tiny_cfg, 0.5)
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=10, lo=8, hi=16)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=10, lo=8, hi=16))
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["aborted"] == 0 and cons["shed"] == 0, cons
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    assert check_fleet_invariants(fleet)["ok"]
+    for inst in fleet.instances:        # the cut landed and fully drained
+        kvc = inst.engine.scheduler.kvc
+        assert kvc.total_blocks <= 7 and kvc.pending_shrink == 0
+    assert sum(i.engine.scheduler.n_preempt_swap
+               + i.engine.scheduler.kvc.n_swap_outs
+               for i in fleet.instances) >= 1    # pressure actually bit
+
+
+def test_fleet_squeeze_sheds_permanently_infeasible(tiny_cfg):
+    """Rung 4: a harder squeeze leaves some queued requests with frozen
+    demand beyond even an empty post-shrink cache — they must end as
+    terminal ``shed`` (reason ``kvc-infeasible``), not livelock the
+    fleet, while every still-feasible request completes bitwise-equal
+    to the pressure-free run."""
+    fleet = _squeeze_fleet(tiny_cfg, 0.6)
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=10, lo=8, hi=16)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=10, lo=8, hi=16))
+    cons = fleet.conservation()
+    assert cons["ok"], cons              # exactly-once terminal states
+    assert cons["shed"] >= 1
+    assert cons["completed"] + cons["shed"] + cons["aborted"] == 10
+    assert check_fleet_invariants(fleet)["ok"]
+    for g, r in zip(reqs, ref_reqs):
+        if g.status == "shed":
+            assert g.fail_reason == "kvc-infeasible"
+        else:
+            assert g.output == r.output
+
+
+def test_fleet_kill_salvages_host_image_for_restore(tiny_cfg):
+    """A host-pool KV image on a crashed engine outlives the device:
+    recovery must attach the salvaged pages to the redelivered request
+    (``n_salvaged_restores``) so the survivor restores instead of
+    recomputing — and the stream still matches a fault-free run."""
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=128, rl_accuracy=1.0,
+                        recovery=RecoveryConfig(max_retries=3,
+                                                backoff_base=0.5))
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=0)
+    g_ref = _gen_reqs(tiny_cfg, n=1, lo=12, hi=13)[0]
+    ref.run([g_ref])
+
+    g = _gen_reqs(tiny_cfg, n=1, lo=12, hi=13)[0]
+    t = 0.0
+    fleet.submit(g, t)
+    inst = fleet.instances[fleet.route_of[id(g)]]
+    eng = inst.engine
+    while len(g.output) < 4:
+        t += 1.0
+        fleet.step(t)
+    # materialize the ring, then capture the page image with the same
+    # extent formula the swap tier uses at a preemption sweep
+    eng._drain_tokens(force=True)
+    slot = eng.slot_of[g.rid]
+    ctx = len(g.prompt) + len(g.output) - 1
+    kv = {kind: {n: np.asarray(sub[n][:, slot, :ctx]) for n in ("k", "v")}
+          for kind, sub in eng.caches.items()}
+    eng._host_swap[g.rid] = {"kv": kv, "ctx": ctx, "crc": kv_checksum(kv)}
+    inst.health = DEAD                   # crash before any restore
+    while g.t_done is None and t < 400.0:
+        t += 1.0
+        fleet.step(t)
+    assert fleet.n_salvaged_restores == 1
+    assert g.t_done is not None and g.status != "aborted"
+    assert g.output == g_ref.output
+    assert check_fleet_invariants(fleet)["ok"]
 
 
 # --------------------------------------------------------------------- #

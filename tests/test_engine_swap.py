@@ -1,0 +1,231 @@
+"""Tiered KVC degradation: host-offload KV swap + watermark guard.
+
+The pressure ladder (lend → host swap → recompute → shed) must be
+invisible in the token stream: at every rung a greedy run under KVC
+pressure produces bitwise the streams of a pressure-free run. These
+tests drive each rung explicitly — reactive preempt-swap capture and
+restore, proactive watermark-guard swaps, budget-refused captures,
+corrupt host images degrading to recompute — and check the swap ledger
+conserves (``BlockKVC.check_invariants``) with nothing left behind.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.kvc import BlockKVC
+from repro.core.pressure import EWMA, WatermarkGuard
+from repro.core.scheduler import SchedulerConfig
+from repro.serving import (EngineConfig, GenRequest, SamplingParams,
+                           ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+
+def _workload(cfg, n=10, seed=3):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(12, 28)))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(8, 20)),
+                              temperature=0.0))
+        for _ in range(n)]
+
+
+def _engine(cfg, kvc_tokens, *, ecfg=None, acc=0.5, seed=0):
+    scfg = SchedulerConfig(kvc_tokens=kvc_tokens, block_size=16, tfs=128,
+                          max_model_len=128, max_batch_reqs=4)
+    return ServingEngine(cfg, max_batch=4, capacity=128,
+                         scheduler_cfg=scfg, rl_accuracy=acc, seed=seed,
+                         engine_cfg=ecfg or EngineConfig())
+
+
+def _run(cfg, kvc_tokens, **kw):
+    eng = _engine(cfg, kvc_tokens, **kw)
+    reqs = _workload(cfg)
+    eng.run(reqs)
+    return eng, [tuple(g.output) for g in reqs]
+
+
+@pytest.fixture(scope="module")
+def free_streams(cfg):
+    """Pressure-free reference streams (KVC never binds)."""
+    return _run(cfg, 6 * 128)[1]
+
+
+# --------------------------------------------------------------------- #
+# rung 2: reactive capture + restore
+# --------------------------------------------------------------------- #
+def test_preempt_swap_restores_without_recompute(cfg, free_streams):
+    """Preempt-swapped GTs must come back via a host-pool page restore
+    (n_swap_restores, zero extra prefill recompute), with streams equal
+    to the pressure-free run and the ledger fully drained."""
+    eng, out = _run(cfg, 160)
+    s = eng.scheduler
+    assert s.n_preempt_swap >= 1          # pressure actually bit
+    assert eng.n_swap_captures >= 1
+    assert eng.n_swap_restores == eng.n_swap_captures
+    assert eng.n_swap_drops == 0 and eng.n_swap_rejects == 0
+    assert out == free_streams
+    s.kvc.check_invariants()
+    assert not s.kvc.swapped and not eng._host_swap and not s.swap_hold
+    assert s.kvc.n_swap_ins == eng.n_swap_restores
+
+
+def test_host_swap_off_recomputes_same_streams(cfg, free_streams):
+    """``host_swap=False`` keeps the pre-swap recompute behavior — same
+    tokens, no captures."""
+    eng, out = _run(cfg, 160, ecfg=EngineConfig(host_swap=False))
+    assert eng.scheduler.n_preempt_swap >= 1
+    assert eng.n_swap_captures == 0 and eng.n_swap_restores == 0
+    assert out == free_streams
+
+
+def test_swap_restore_skips_prefill_recompute(cfg):
+    """The restore path must not ride the prefill wave: with host_swap on,
+    preemptions add no whole-prompt prefill waves beyond the swap-off
+    run minus its recompute re-prefills."""
+    eng_on, out_on = _run(cfg, 160)
+    eng_off, out_off = _run(cfg, 160, ecfg=EngineConfig(host_swap=False))
+    assert out_on == out_off
+    assert eng_on.n_swap_restores > eng_off.n_swap_restores == 0
+    # restores ride the decode path: re-prefill waves can only shrink
+    assert eng_on.n_prefill_waves <= eng_off.n_prefill_waves
+
+
+# --------------------------------------------------------------------- #
+# rung degradation: budget refusal and corruption -> recompute
+# --------------------------------------------------------------------- #
+def test_tiny_host_pool_degrades_to_recompute(cfg, free_streams):
+    """A host pool too small for any image refuses every capture
+    (n_swap_drops) and the ladder falls back to rung-3 recompute —
+    streams still exact."""
+    eng, out = _run(cfg, 160, ecfg=EngineConfig(host_pool_frac=0.01))
+    assert eng.scheduler.n_preempt_swap >= 1
+    assert eng.n_swap_drops >= 1 and eng.n_swap_restores == 0
+    assert out == free_streams
+    eng.scheduler.kvc.check_invariants()
+    assert not eng.scheduler.kvc.swapped and not eng._host_swap
+
+
+def test_corrupt_host_image_degrades_to_recompute(cfg, free_streams):
+    """Flip a bit in every captured host image: the CRC check must refuse
+    it (n_swap_rejects), recompute must take over, and the output stays
+    bitwise-correct — a corrupt image never poisons a cache."""
+    eng = _engine(cfg, 160)
+    reqs = _workload(cfg)
+    orig = eng._swap_out
+
+    def corrupting(rid, slot):
+        orig(rid, slot)
+        img = eng._host_swap.get(rid)
+        if img is not None:
+            kind = sorted(img["kv"])[0]
+            name = sorted(img["kv"][kind])[0]
+            bad = np.array(img["kv"][kind][name])
+            bad.flat[0] += 1.0
+            img["kv"][kind][name] = bad
+    eng._swap_out = corrupting
+    eng.run(reqs)
+    assert eng.n_swap_captures >= 1
+    assert eng.n_swap_rejects == eng.n_swap_captures
+    assert eng.n_swap_restores == 0
+    assert [tuple(g.output) for g in reqs] == free_streams
+    eng.scheduler.kvc.check_invariants()
+    assert not eng.scheduler.kvc.swapped and not eng._host_swap
+
+
+# --------------------------------------------------------------------- #
+# proactive watermark guard
+# --------------------------------------------------------------------- #
+def test_watermark_guard_swaps_and_restores_bitwise(cfg, free_streams):
+    """Aggressive watermarks force proactive guard swaps; trips/releases
+    fire, victims are captured and restored, and the greedy streams stay
+    equal to the pressure-free run."""
+    ecfg = EngineConfig(swap_watermarks=True, guard_high=0.6,
+                        guard_low=0.3, guard_patience=1)
+    eng, out = _run(cfg, 240, ecfg=ecfg)
+    s = eng.scheduler
+    assert eng.guard.n_trips >= 1 and eng.guard.n_releases >= 1
+    assert s.n_guard_swaps >= 1
+    assert eng.n_swap_restores >= 1
+    assert out == free_streams
+    s.kvc.check_invariants()
+    assert not s.kvc.swapped and not eng._host_swap and not s.swap_hold
+
+
+def test_guard_hysteresis_state_machine():
+    g = WatermarkGuard(high=0.9, low=0.5, alpha=1.0, patience=2)
+    assert g.observe(0.95) is False       # patience: first sighting
+    assert g.observe(0.95) is True        # second consecutive -> trip
+    assert g.n_trips == 1
+    assert g.observe(0.7) is True         # between watermarks: hold
+    assert g.observe(0.4) is False        # below low -> release
+    assert g.n_releases == 1
+    g2 = WatermarkGuard(high=0.9, low=0.5, alpha=1.0, patience=2)
+    assert g2.observe(0.95) is False
+    assert g2.observe(0.7) is False       # dip resets patience
+    assert g2.observe(0.95) is False and g2.n_trips == 0
+
+
+def test_ewma_seeded_by_first_sample():
+    e = EWMA(alpha=0.5)
+    assert e.update(10.0) == 10.0         # primed, not pulled toward 0
+    assert e.update(0.0) == 5.0
+
+
+def test_megastep_windows_guard_keeps_streams_bitwise(cfg):
+    """The guard only observes at megastep window boundaries, so K=8
+    fused decode sees fewer samples and may swap less often than K=1 —
+    but both must swap at least once here and the greedy streams must
+    stay bitwise-identical."""
+    def run(k):
+        ecfg = EngineConfig(swap_watermarks=True, guard_high=0.6,
+                            guard_low=0.3, guard_patience=1,
+                            decode_megastep=k)
+        return _run(cfg, 240, ecfg=ecfg)
+    eng1, out1 = run(1)
+    eng8, out8 = run(8)
+    assert out1 == out8
+    for eng in (eng1, eng8):
+        assert eng.scheduler.n_guard_swaps >= 1
+        assert eng.n_swap_restores >= 1
+        assert not eng._host_swap and not eng.scheduler.kvc.swapped
+
+
+# --------------------------------------------------------------------- #
+# swap ledger budget mechanics (unit level)
+# --------------------------------------------------------------------- #
+def test_ledger_budget_evicts_oldest_unpinned():
+    k = BlockKVC(1024, 32, host_pool_tokens=100)
+    assert k.swap_register(1, 40) == []
+    assert k.swap_register(2, 40) == []
+    k.swap_pin(1)
+    # 3rd image: pool full, oldest unpinned (rid 2) evicted; pinned rid 1
+    # survives
+    assert k.swap_register(3, 40) == [2]
+    assert sorted(k.swapped) == [1, 3] and k.host_used == 80
+    k.check_invariants()
+    # an image that cannot fit even after evicting everything unpinned
+    assert k.swap_register(4, 80) is None
+    k.swap_unpin(1)
+    assert k.swap_register(5, 100) == [1, 3]
+    k.check_invariants()
+    assert k.swap_release(5, restored=True) == 100
+    assert k.n_swap_ins == 1 and k.host_used == 0
+    k.check_invariants()
+
+
+def test_shrink_harvests_from_frees():
+    k = BlockKVC(320, 32)                 # 10 blocks
+    assert k.allocate(1, 200)             # 7 blocks held
+    got = k.shrink(160)                   # want 5, only 3 free
+    assert got == 3 and k.pending_shrink == 2
+    k.check_invariants()
+    k.free(1)                             # harvest the 2 owed blocks
+    assert k.pending_shrink == 0 and k.total_blocks == 5
+    k.check_invariants()

@@ -1,0 +1,109 @@
+"""Property-based state machine over the ``BlockKVC`` swap ledger.
+
+Drives random interleavings of allocate/extend/free/swap/shrink and
+checks ``check_invariants`` (block conservation, host-pool budget,
+pinned accounting) after every rule. Skips cleanly when ``hypothesis``
+is not installed — the deterministic unit suites still cover the same
+surfaces example-by-example.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st      # noqa: E402
+from hypothesis.stateful import (RuleBasedStateMachine,  # noqa: E402
+                                 invariant, precondition, rule)
+
+from repro.core.kvc import BlockKVC  # noqa: E402
+
+RIDS = st.integers(min_value=0, max_value=15)
+TOKENS = st.integers(min_value=1, max_value=160)
+
+
+class KVCLedgerMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.kvc = BlockKVC(512, 32, reserve_frac=0.25,
+                            host_pool_tokens=256)
+        self.shadow_pinned = set()       # rids pinned per the test model
+
+    # -- device-side allocations -------------------------------------- #
+    @rule(rid=RIDS, tokens=TOKENS)
+    def allocate(self, rid, tokens):
+        if rid in self.kvc.allocs:
+            return
+        self.kvc.allocate(rid, tokens)
+
+    @rule(rid=RIDS, blocks=st.integers(min_value=1, max_value=4))
+    def allocate_reserve(self, rid, blocks):
+        self.kvc.allocate_reserve(rid, blocks)
+
+    @rule(rid=RIDS, blocks=st.integers(min_value=1, max_value=4))
+    def extend(self, rid, blocks):
+        if rid in self.kvc.allocs:
+            self.kvc.extend(rid, blocks)
+
+    @rule(rid=RIDS)
+    def free(self, rid):
+        self.kvc.free(rid)
+
+    # -- host swap ledger ---------------------------------------------- #
+    @rule(rid=RIDS, tokens=TOKENS)
+    def swap_register(self, rid, tokens):
+        if rid in self.kvc.swapped:
+            return
+        evicted = self.kvc.swap_register(rid, tokens)
+        if evicted is None:
+            # refused: ledger must be untouched by the failed attempt
+            assert rid not in self.kvc.swapped
+        else:
+            assert rid in self.kvc.swapped
+            for old in evicted:
+                assert old not in self.kvc.swapped
+                # budget eviction must never sacrifice a pinned image
+                assert old not in self.shadow_pinned
+
+    @rule(rid=RIDS, restored=st.booleans())
+    def swap_release(self, rid, restored):
+        before = self.kvc.swapped_tokens(rid)
+        got = self.kvc.swap_release(rid, restored=restored)
+        assert got == before              # missing rid -> 0, tolerated
+        self.shadow_pinned.discard(rid)
+
+    @rule(rid=RIDS)
+    def swap_pin(self, rid):
+        self.kvc.swap_pin(rid)
+        if rid in self.kvc.swapped:
+            self.shadow_pinned.add(rid)
+
+    @rule(rid=RIDS)
+    def swap_unpin(self, rid):
+        self.kvc.swap_unpin(rid)
+        self.shadow_pinned.discard(rid)
+
+    # -- live capacity squeeze ----------------------------------------- #
+    @precondition(lambda self: self.kvc.total_blocks
+                  - self.kvc.pending_shrink > 1)
+    @rule(tokens=st.integers(min_value=1, max_value=96))
+    def shrink(self, tokens):
+        cap = (self.kvc.total_blocks - self.kvc.pending_shrink - 1) \
+            * self.kvc.block_size
+        self.kvc.shrink(min(tokens, cap))
+
+    # -- invariants checked after every rule ---------------------------- #
+    @invariant()
+    def ledger_conserves(self):
+        self.kvc.check_invariants()
+
+    @invariant()
+    def pinned_model_agrees(self):
+        # the shadow pin-set and the ledger agree: every modeled pin is
+        # still resident and marked pinned (evictions spare pinned rids)
+        for rid in self.shadow_pinned:
+            assert rid in self.kvc.swapped
+            assert self.kvc.swapped[rid].pinned
+
+
+KVCLedgerMachine.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=40, deadline=None)
+TestKVCLedger = KVCLedgerMachine.TestCase
