@@ -722,6 +722,127 @@ def bench_chaos(n_reqs: int = 8, seed: int = 0) -> Dict:
     return out
 
 
+def bench_detector(seed: int = 0) -> Dict:
+    """Detected-failure substrate (counter-based, gated by --check):
+
+      * **identity** — a detector-on fleet (heartbeats, transport,
+        lease detection armed; zero fault windows) must produce token
+        streams bitwise-equal to a plain fleet of the same seed AND add
+        zero host syncs in total (beats are host-side bookkeeping; a
+        clean transport delivers same-tick FIFO with zero rng draws).
+        Gated on ``sum(sync_counts.values())`` like bench_swap's steady
+        gate: the ready/backpressure/blocking split of a drain depends
+        on device timing, but the *number* of drains/flushes/readbacks
+        is fixed by the call sequence, which must be identical;
+      * **chaos** — a 3-instance fleet takes a total beat-drop window on
+        instance 1 (long enough to suspect, shorter than the lease: the
+        false suspect must be *reinstated* without losing work), a KVC
+        squeeze on instance 0 whose rung-4 ``kvc-infeasible`` sheds the
+        fleet retry tier must re-route to a feasible peer (>= 1
+        rescued), and a silent kill of instance 2 the detector must
+        declare dead from missed beats alone — with every non-shed
+        stream bitwise-equal to a fault-free single-engine run and the
+        exactly-once/zero-leak audit green.
+    """
+    import numpy as np
+    from repro.cluster import (DetectorConfig, EngineFleet, FaultInjector,
+                               RecoveryConfig, check_fleet_invariants,
+                               parse_chaos_spec)
+    from repro.configs import get_config
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+    def mk_reqs(n=8, seed_=23, lo=6, hi=14):
+        rng = np.random.default_rng(seed + seed_)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(8, 24)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(lo, hi)),
+                                  temperature=0.0))
+            for _ in range(n)]
+
+    out: Dict = {}
+
+    # -- identity: detector on, zero faults ----------------------------- #
+    t0 = time.perf_counter()
+    plain = EngineFleet(cfg, n_instances=2, router="least-kvc", seed=seed,
+                        max_batch=4, capacity=256, rl_accuracy=1.0)
+    arrivals = [0.5 * i for i in range(8)]
+    p_reqs = plain.run(mk_reqs(), arrivals=arrivals)
+    p_sync = sum(sum(i.engine.sync_counts.values())
+                 for i in plain.instances)
+
+    det = EngineFleet(cfg, n_instances=2, router="least-kvc", seed=seed,
+                      max_batch=4, capacity=256, rl_accuracy=1.0,
+                      detector=DetectorConfig())
+    d_reqs = det.run(mk_reqs(), arrivals=arrivals)
+    d_sync = sum(sum(i.engine.sync_counts.values())
+                 for i in det.instances)
+    out["identity"] = {
+        "tokens_equal_plain_fleet":
+            [g.output for g in d_reqs] == [g.output for g in p_reqs],
+        "total_syncs_plain": p_sync,
+        "total_syncs_detector": d_sync,
+        "added_syncs": d_sync - p_sync,
+        "detector_transitions": len(det.detector.transitions),
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    # -- chaos: false suspect + silent kill + shed rescue ---------------- #
+    t0 = time.perf_counter()
+    scfg = SchedulerConfig(kvc_tokens=224, block_size=16, tfs=128,
+                           max_model_len=128, max_batch_reqs=4)
+    spec = "drop@2:1/1.0,squeeze@3:0/0.6,kill@6:2"
+    fleet = EngineFleet(
+        cfg, n_instances=3, router="least-kvc", seed=seed,
+        max_batch=4, capacity=128, rl_accuracy=1.0, scheduler_cfg=scfg,
+        faults=FaultInjector(schedule=parse_chaos_spec(spec), seed=seed,
+                             min_alive=1),
+        recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                shed_retry=True),
+        detector=DetectorConfig())
+    ref = ServingEngine(cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=seed,
+                        scheduler_cfg=scfg)
+    ref_reqs = mk_reqs(n=10, seed_=5, lo=8, hi=16)
+    ref.run(ref_reqs)
+    reqs = fleet.run(mk_reqs(n=10, seed_=5, lo=8, hi=16))
+    cons = fleet.conservation()
+    try:
+        inv_ok = bool(check_fleet_invariants(fleet)["ok"])
+    except AssertionError as e:
+        inv_ok = False
+        out["invariant_failure"] = str(e)
+    declared_dead = [tr for tr in fleet.detector.transitions
+                    if tr[3] == "dead"]
+    out["chaos"] = {
+        **cons, "invariants_ok": inv_ok,
+        "false_suspects_reinstated": fleet.detector.n_reinstated,
+        "declared_dead": [tr[1] for tr in declared_dead],
+        "transitions": [list(tr) for tr in fleet.detector.transitions],
+        "transport": {"dropped": fleet.transport.n_dropped,
+                      "duplicated": fleet.transport.n_duplicated,
+                      "retransmits": fleet.transport.n_retransmits},
+        "tokens_equal_no_fault_run":
+            all(g.output == r.output for g, r in zip(reqs, ref_reqs)
+                if g.status != "shed"),
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    out["detector_ok"] = bool(
+        out["identity"]["tokens_equal_plain_fleet"]
+        and out["identity"]["added_syncs"] <= 0
+        and cons["ok"] and inv_ok
+        and fleet.detector.n_reinstated >= 1
+        and 2 in out["chaos"]["declared_dead"]
+        and cons["shed_rescued"] >= 1
+        and cons["dup_completions"] == 0
+        and out["chaos"]["tokens_equal_no_fault_run"])
+    return out
+
+
 def bench_swap(seed: int = 0) -> Dict:
     """Host-offload KV swap tier (counter-based, gated by --check):
 
@@ -909,6 +1030,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "cluster": bench_cluster(n_reqs=8, sim_reqs=200 if quick else 400),
         "swap": bench_swap(),
         "chaos": bench_chaos(n_reqs=8),
+        "detector": bench_detector(),
         "kernel": bench_kernel(reps=2 if quick else 3),
     }
     # speedups scale with problem size (a 10k-queue amplifies the
@@ -980,6 +1102,7 @@ def check_regression(factor: float = 2.0,
     # churn collapses the scheduler bench's measured regime (the
     # quick_reference order must stay a prefix of this rerun's order)
     res["chaos"] = bench_chaos(n_reqs=8)
+    res["detector"] = bench_detector()
     print(json.dumps(res, indent=1))
     failures = []
     if ref is None:
@@ -1075,6 +1198,16 @@ def check_regression(factor: float = 2.0,
                         f"kill_recovery={ch['kill_recovery']}, "
                         f"corrupt_kv={ch['corrupt_kv']}, "
                         f"squeeze={ch['squeeze']}")
+    # detector battery: detector-on fault-free must be bitwise-identical
+    # to the plain fleet with zero added blocking syncs; under beat-drop
+    # + silent-kill + squeeze chaos, a false suspect must be reinstated,
+    # the kill detected from missed beats alone, >= 1 rung-4 shed
+    # rescued by fleet re-route, and exactly-once delivery must hold
+    dt = res["detector"]
+    if not dt["detector_ok"]:
+        failures.append(f"detector: detected-failure gate failed — "
+                        f"identity={dt['identity']}, "
+                        f"chaos={dt['chaos']}")
     # swap tier: >= 1 host-pool capture restored by page re-seed (no
     # recompute), streams bitwise-equal under pressure, ledger drained,
     # and ZERO blocking syncs added to the no-swap steady state
@@ -1106,8 +1239,10 @@ def check_regression(factor: float = 2.0,
           f"TTFT bounded, cluster conservation + migration equality hold, "
           f"swap tier restored {res['swap']['pressure']['restores']} "
           f"host images sync-free, chaos battery (kill recovery + "
-          f"KV-corruption rejection + squeeze absorption) green "
-          f"(quick baselines: {ref})")
+          f"KV-corruption rejection + squeeze absorption) green, "
+          f"detector battery (bitwise identity + false-suspect "
+          f"reinstatement + {res['detector']['chaos']['shed_rescued']} "
+          f"shed rescues) green (quick baselines: {ref})")
     return 0
 
 

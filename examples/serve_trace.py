@@ -22,6 +22,21 @@ queued request past even the *empty* post-cut cache; rung 4 of the
 pressure ladder sheds it terminally (``kvc-infeasible``) instead of
 livelocking, and the equality gate covers every non-shed stream.
 
+``--detect`` switches the fleet from *declared* to *detected* failure:
+every routed message rides a seeded lossy transport, instances
+heartbeat through it, and a lease-based failure detector owns observed
+health (missed beats -> suspect, lease expiry -> dead, fresh beat ->
+reinstated without losing work). It also arms the fleet shed-retry
+tier: a rung-4 ``kvc-infeasible`` shed is re-routed to a peer whose
+KVC can still fund it, and only shed terminally when no live peer can
+ever fit. Three chaos kinds act on the transport (and require
+``--detect``): ``drop@6:1/0.6`` (drop each message on instance 1's
+link with p=0.6 for the window), ``dup@14:2/0.6`` (duplicate-deliver;
+the receiver's idempotency table suppresses the copy), and
+``delay@10:0/2.5`` (add 2.5 iterations of latency — reordering falls
+out). With ``--detect`` and no chaos the run is bitwise-identical to
+the direct path: the transport draws zero rng samples.
+
   PYTHONPATH=src python examples/serve_trace.py [--impl pallas] [-n 16]
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --router least-kvc
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --disagg --tiny
@@ -29,14 +44,16 @@ livelocking, and the equality gate covers every non-shed stream.
       --chaos kill@25:1
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --tiny \\
       --kvc-tokens 256 --chaos squeeze@20:0/0.5,squeeze@20:1/0.5
+  PYTHONPATH=src python examples/serve_trace.py --cluster 3 --tiny \\
+      --detect --chaos "drop@6:1/0.6,dup@14:2/0.6,kill@25:0"
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.cluster import (EngineFleet, RecoveryConfig, ROUTERS,
-                           FaultInjector, check_fleet_invariants,
+from repro.cluster import (DetectorConfig, EngineFleet, RecoveryConfig,
+                           ROUTERS, FaultInjector, check_fleet_invariants,
                            parse_chaos_spec)
 from repro.configs import get_config
 from repro.core.scheduler import SchedulerConfig
@@ -75,7 +92,13 @@ def main():
                          "permanent, not a duration) — the run must "
                          "recover: exactly-once terminal states, no leaks, "
                          "and every non-shed token stream equal to a "
-                         "fault-free reference; requires --cluster >= 2")
+                         "fault-free reference; requires --cluster >= 2. "
+                         "Transport kinds drop@t:inst/p, dup@t:inst/p, "
+                         "delay@t:inst/latency need --detect")
+    ap.add_argument("--detect", action="store_true",
+                    help="detected (not declared) failure: heartbeat/lease "
+                         "detection over a lossy transport + the fleet "
+                         "shed-retry tier; requires --cluster >= 2")
     ap.add_argument("--kvc-tokens", type=int, default=0,
                     help="override the per-instance KVC budget in tokens "
                          "(0 = the derived max_batch*capacity default); "
@@ -93,6 +116,8 @@ def main():
         ap.error("--disagg needs --cluster >= 2")
     if args.chaos and args.cluster < 2:
         ap.error("--chaos needs --cluster >= 2 (a fleet to degrade)")
+    if args.detect and args.cluster < 2:
+        ap.error("--detect needs --cluster >= 2 (a fleet to observe)")
     cfg = get_config(args.arch).reduced().with_(dtype="float32",
                                                 param_dtype="float32")
     if args.tiny:
@@ -108,7 +133,13 @@ def main():
     fkw = {}
     if args.chaos:
         fkw = dict(faults=FaultInjector(schedule=parse_chaos_spec(args.chaos)),
-                   recovery=RecoveryConfig(max_retries=4, backoff_base=1.0))
+                   recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                           shed_retry=args.detect))
+    if args.detect:
+        fkw["detector"] = DetectorConfig()
+        fkw.setdefault("recovery",
+                       RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                      shed_retry=True))
     if n_inst:
         roles = ["prefill"] + ["decode"] * (n_inst - 1) if args.disagg \
             else None
@@ -173,6 +204,14 @@ def main():
               f"aborted={cons['aborted']} shed={cons['shed']} "
               f"kv_rejects={cons['kv_rejects']} "
               f"invariants_ok={report['ok']} tokens_equal={equal}")
+        if args.detect:
+            tr = server.transport
+            print(f"detect: transitions={server.detector.transitions} "
+                  f"reinstated={server.detector.n_reinstated} "
+                  f"dropped={tr.n_dropped} duplicated={tr.n_duplicated} "
+                  f"retransmits={tr.n_retransmits} "
+                  f"dup_suppressed={cons['dup_deliveries']} "
+                  f"shed_rescued={cons['shed_rescued']}")
         if not (cons["ok"] and report["ok"] and equal):
             raise SystemExit(1)
         terminal = done + cons["aborted"] + cons["shed"]

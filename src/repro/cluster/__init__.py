@@ -10,12 +10,16 @@ Two interchangeable backends share routers, roles and the autoscaler:
 
 ``repro.cluster.faults`` adds the chaos layer both backends share:
 scripted/probabilistic fault injection (kill / freeze / slow /
-corrupt-KV / KVC squeeze), bounded-retry crash recovery with seeded
-backoff jitter, and the post-run conservation audit
-(``check_fleet_invariants``).
+corrupt-KV / KVC squeeze / drop / dup / delay), bounded-retry crash
+recovery with seeded backoff jitter, and the post-run conservation
+audit (``check_fleet_invariants``). ``repro.cluster.transport`` is the
+lossy message layer those drop/dup/delay windows act on, and
+``repro.cluster.base`` hosts the heartbeat/lease ``FailureDetector``
+that turns declared failure into *detected* failure on both backends.
 """
 from .autoscale import AutoscaleConfig, GoodputAutoscaler
-from .base import DEAD, HEALTH_STATES, HEALTHY, SUSPECT
+from .base import (DEAD, DetectorConfig, FailureDetector, HEALTH_STATES,
+                   HEALTHY, SUSPECT)
 from .faults import (ChaosSpecError, FAULT_KINDS, FaultEvent, FaultInjector,
                      InvariantViolation, RecoveryConfig, backoff_delay,
                      check_fleet_invariants, parse_chaos_spec)
@@ -23,3 +27,4 @@ from .fleet import EngineFleet, FleetInstance
 from .router import (LeastKVCRouter, LeastOutstandingTokensRouter, ROUTERS,
                      Router, RoundRobinRouter, make_router)
 from .sim import ClusterInstance, ClusterResult, ClusterSim, ROLES
+from .transport import DETECTOR, Message, Transport, Verdict

@@ -10,9 +10,11 @@ this here — not copied per backend — means a policy fix lands in both.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .autoscale import GoodputAutoscaler
+from .transport import BEAT, DETECTOR, Transport
 
 ROLES = ("unified", "prefill", "decode")
 
@@ -23,6 +25,13 @@ ROLES = ("unified", "prefill", "decode")
 #             evacuate queued work via real KV re-migration
 #   dead    — crashed: device state lost, never stepped or routed again;
 #             in-flight requests are reclaimed and recovered elsewhere
+#
+# With a FailureDetector attached, health is *observed*, not declared:
+# the injector only crashes/freezes the instance (it stops heartbeating)
+# and the detector walks HEALTHY -> SUSPECT on missed-beat patience and
+# SUSPECT -> DEAD on lease expiry. A false suspect that beats again is
+# reinstated (SUSPECT -> HEALTHY) with all of its work intact; DEAD is
+# final — a late beat from a fenced zombie never resurrects it.
 HEALTHY = "healthy"
 SUSPECT = "suspect"
 DEAD = "dead"
@@ -58,6 +67,15 @@ class InstanceBase:
         self.slow_until = 0.0         # suspect-slow: degraded until t
         self.slow_factor = 1          # straggler slowdown multiple
         self._slow_tick = 0
+        # -- detection (heartbeat/lease failure detector) -------------- #
+        # ``crashed`` is ground truth (the device is gone: no stepping,
+        # no beats); ``health`` stays the *observed* state. Without a
+        # detector the injector writes health directly and crashed is
+        # never set. ``detected`` hands health ownership to the detector
+        # (the freeze-elapsed auto-recovery in update_health turns off).
+        self.crashed = False
+        self.detected = False
+        self._last_beat_sent = float("-inf")
 
     @property
     def scheduler(self):
@@ -69,7 +87,11 @@ class InstanceBase:
         return self.health != DEAD
 
     def update_health(self, t: float) -> None:
-        """Recover a suspect instance whose freeze/slow episode elapsed."""
+        """Recover a suspect instance whose freeze/slow episode elapsed.
+        Under a failure detector this is a no-op: reinstatement happens
+        when the detector sees the instance heartbeat again."""
+        if self.detected:
+            return
         if self.health == SUSPECT and t >= self.frozen_until \
                 and t >= self.slow_until:
             self.health = HEALTHY
@@ -77,9 +99,19 @@ class InstanceBase:
 
     def can_step(self, t: float) -> bool:
         """Whether the backend may advance this instance at time ``t``:
-        dead never, frozen not before thaw, slowed every Nth tick only."""
-        if self.health == DEAD:
+        crashed/dead never, frozen not before thaw, slowed every Nth tick
+        only. A falsely-*suspected* instance (beats lost in transit, not
+        frozen) keeps stepping — it loses no work while the detector
+        makes up its mind."""
+        if self.crashed or self.health == DEAD:
             return False
+        if self.health == HEALTHY and t < self.frozen_until:
+            return False              # detector-managed: frozen, not yet
+                                      # suspected — still must not step
+        if self.health == HEALTHY and t < self.slow_until \
+                and self.slow_factor > 1:
+            self._slow_tick += 1
+            return self._slow_tick % self.slow_factor == 0
         if self.health == SUSPECT:
             if t < self.frozen_until:
                 return False
@@ -87,6 +119,19 @@ class InstanceBase:
                 self._slow_tick += 1
                 return self._slow_tick % self.slow_factor == 0
         return True
+
+    def maybe_beat(self, transport: Transport, now: float,
+                   beat_every: float) -> None:
+        """Emit a heartbeat through the (lossy) transport when one is
+        due. A crashed instance is silent forever; a frozen one is silent
+        until the thaw — missed beats are exactly what the detector
+        observes. A slowed instance still beats (stragglers are not
+        crash-detectable from liveness alone)."""
+        if self.crashed or now < self.frozen_until:
+            return
+        if now - self._last_beat_sent >= beat_every - 1e-9:
+            self._last_beat_sent = now
+            transport.send(DETECTOR, BEAT, self.id, now, link=self.id)
 
     def squeeze_kvc(self, frac: float) -> int:
         """Chaos ``squeeze``: permanently remove ``frac`` of this
@@ -133,6 +178,104 @@ class InstanceBase:
         for r in done[self._n_done:]:
             scaler.record(r.met_slo)
         self._n_done = len(done)
+
+
+@dataclass
+class DetectorConfig:
+    """Heartbeat/lease failure-detection policy.
+
+    An instance that has not beaten for ``patience`` beat periods is
+    suspected (no new routes; work stays put); one silent past ``lease``
+    is declared dead and its work reclaimed. ``lease`` must comfortably
+    exceed ``patience * beat_every`` — the gap is the reinstatement
+    window in which a false suspect (beats dropped by the transport, or
+    a freeze shorter than the lease) recovers without losing anything."""
+    beat_every: float = 1.0       # expected heartbeat period
+    patience: float = 3.0         # missed beats before HEALTHY -> SUSPECT
+    lease: float = 10.0           # silence before SUSPECT -> DEAD
+
+    def __post_init__(self):
+        assert self.lease > self.patience * self.beat_every, \
+            "lease must exceed the suspicion threshold"
+
+
+class FailureDetector:
+    """Detects instance failure from heartbeats instead of being told.
+
+    ``observe`` drains the beat channel and walks each instance's
+    *observed* health: silence past patience suspects it, silence past
+    the lease declares it dead (final — a zombie's late beat is fenced),
+    and a fresh beat from a suspect reinstates it. The transition log is
+    append-only and auditable (the Hypothesis state machine in
+    ``tests`` checks no transition ever skips a state or resurrects the
+    dead)."""
+
+    def __init__(self, cfg: DetectorConfig, transport: Transport):
+        self.cfg = cfg
+        self.transport = transport
+        self.last_beat: Dict[int, float] = {}
+        self.last_observed = 0.0
+        self.n_suspects = 0
+        self.n_reinstated = 0
+        self.n_declared_dead = 0
+        self.transitions: List[Tuple[float, int, str, str]] = []
+
+    def _set(self, inst, to: str, now: float) -> None:
+        self.transitions.append((now, inst.id, inst.health, to))
+        inst.health = to
+
+    def observe(self, now: float, instances: Sequence) -> List[int]:
+        """One detection pass; returns ids newly declared dead."""
+        self.last_observed = now
+        for msg in self.transport.recv(DETECTOR, now):
+            iid = msg.payload
+            if msg.send_t > self.last_beat.get(iid, float("-inf")):
+                self.last_beat[iid] = msg.send_t
+        newly_dead: List[int] = []
+        for inst in instances:
+            if inst.health == DEAD:
+                continue               # final: never resurrected
+            last = self.last_beat.setdefault(inst.id, now)
+            age = now - last
+            if inst.health == SUSPECT:
+                if age <= self.cfg.patience * self.cfg.beat_every:
+                    self._set(inst, HEALTHY, now)   # false suspect: back
+                    self.n_reinstated += 1
+                elif age > self.cfg.lease:
+                    self._set(inst, DEAD, now)      # lease expired
+                    self.n_declared_dead += 1
+                    newly_dead.append(inst.id)
+            elif inst.health == HEALTHY \
+                    and age > self.cfg.patience * self.cfg.beat_every:
+                self._set(inst, SUSPECT, now)
+                self.n_suspects += 1
+        return newly_dead
+
+    def heartbeat_age(self, iid: int, now: Optional[float] = None) -> float:
+        """Time since the last beat seen from ``iid`` (diagnostics)."""
+        now = self.last_observed if now is None else now
+        return now - self.last_beat.get(iid, float("-inf"))
+
+    def next_deadline(self, instances: Sequence) -> float:
+        """Earliest future time a detection state could change — the
+        discrete-event backend folds this into its event horizon so a
+        silent instance is eventually suspected/declared even when no
+        other event would advance the clock. A hair past the threshold:
+        ``observe`` transitions on *strictly* exceeded ages, so a wake at
+        exactly ``last + patience`` would observe nothing and pin the
+        horizon forever."""
+        nxt = float("inf")
+        for inst in instances:
+            if inst.health == DEAD:
+                continue
+            last = self.last_beat.get(inst.id)
+            if last is None:
+                continue
+            if inst.health == SUSPECT:
+                nxt = min(nxt, last + self.cfg.lease)
+            else:
+                nxt = min(nxt, last + self.cfg.patience * self.cfg.beat_every)
+        return nxt + 1e-6 if nxt != float("inf") else nxt
 
 
 def execute_autoscale(scaler: GoodputAutoscaler, t: float,

@@ -27,15 +27,26 @@ import numpy as np
 
 from .base import DEAD, HEALTHY, SUSPECT
 
-FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv", "squeeze")
+FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv", "squeeze",
+               "drop", "dup", "delay")
+
+#: kinds that perturb the message transport, not an instance's health
+TRANSPORT_KINDS = ("drop", "dup", "delay")
+
+#: kinds that set (or, detected, eventually cause) a health transition —
+#: two different ones on the same instance at the same tick contradict
+HEALTH_KINDS = ("kill", "freeze", "slow")
 
 
 @dataclass(frozen=True, order=True)
 class FaultEvent:
     """One scripted fault. ``target`` is an instance id (-1 = injector
-    picks among the alive); ``duration``/``factor`` only apply to
-    freeze/slow; ``count`` only to corrupt_kv (number of payloads);
-    ``frac`` only to squeeze (fraction of KVC capacity removed)."""
+    picks among the alive; for transport kinds, every link);
+    ``duration``/``factor`` only apply to freeze/slow (for transport
+    kinds ``duration`` is the fault-window length); ``count`` only to
+    corrupt_kv (number of payloads); ``frac`` only to squeeze (fraction
+    of KVC capacity removed) and drop/dup (per-message probability);
+    ``delay`` only to the delay kind (added latency)."""
     t: float
     kind: str = "kill"
     target: int = -1
@@ -43,10 +54,11 @@ class FaultEvent:
     factor: int = 2
     count: int = 1
     frac: float = 0.5
+    delay: float = 2.0
 
     def __post_init__(self):
         assert self.kind in FAULT_KINDS, self.kind
-        if self.kind == "squeeze":
+        if self.kind in ("squeeze", "drop", "dup"):
             assert 0.0 < self.frac <= 1.0, self.frac
 
 
@@ -67,6 +79,12 @@ class RecoveryConfig:
     shed_headroom: float = 1.0    # safety multiplier on the projection
     jitter: float = 0.0           # max fractional backoff stretch
     jitter_seed: int = 0          # decorrelates fleets sharing a schedule
+    shed_retry: bool = False      # fleet-level second chance for rung-4
+                                  # kvc-infeasible sheds: re-route to a
+                                  # peer whose total KVC can fund the
+                                  # frozen demand (bounded by max_retries);
+                                  # terminal shed only when no live peer
+                                  # can ever fit the request
 
 
 def backoff_delay(rc: RecoveryConfig, rid: int, attempt: int) -> float:
@@ -95,6 +113,16 @@ class FaultInjector:
 
     Scheduled kills always fire; probabilistic kills never reduce the
     fleet below ``min_alive``.
+
+    **Declared vs detected.** By default the injector *declares* health
+    (kill writes ``DEAD``, freeze/slow write ``SUSPECT``) — the legacy
+    oracle mode. When a backend attaches a failure detector it flips
+    ``detected`` on and binds ``transport``: a kill then only sets
+    ``crashed`` (the instance falls silent) and a freeze only sets
+    ``frozen_until`` — the *observed* health is owned by the detector,
+    which must notice the missing heartbeats. Transport kinds
+    (drop/dup/delay) open fault windows on the bound transport and
+    require one.
     """
 
     def __init__(self, schedule: Sequence[FaultEvent] = (),
@@ -111,6 +139,8 @@ class FaultInjector:
         self.rng = np.random.default_rng(seed)
         self._pending_corrupt = 0     # payloads left to corrupt
         self.n_corrupted = 0
+        self.detected = False         # failure-detector mode (see class doc)
+        self.transport = None         # bound by the backend (drop/dup/delay)
         self.log: List[Tuple[float, str, int]] = []
 
     # ------------------------------------------------------------------ #
@@ -145,19 +175,32 @@ class FaultInjector:
             self._pending_corrupt += ev.count
             self.log.append((t, ev.kind, ev.target))
             return True
+        if ev.kind in TRANSPORT_KINDS:
+            assert self.transport is not None, \
+                f"{ev.kind} fault needs a transport-backed fleet " \
+                f"(detector mode) — plain fleets have no message layer"
+            self.transport.add_fault(ev)
+            self.log.append((t, ev.kind, ev.target))
+            return True
         inst = self._resolve(ev.target, instances)
         if inst is None:
             return False
         if ev.kind == "kill":
-            alive = sum(1 for i in instances if i.alive)
+            alive = sum(1 for i in instances
+                        if i.alive and not getattr(i, "crashed", False))
             if not forced and alive <= self.min_alive:
                 return False            # probabilistic kills spare the last
-            inst.health = DEAD
+            if self.detected:
+                inst.crashed = True     # falls silent; detection follows
+            else:
+                inst.health = DEAD
         elif ev.kind == "freeze":
-            inst.health = SUSPECT
+            if not self.detected:
+                inst.health = SUSPECT
             inst.frozen_until = max(inst.frozen_until, t + ev.duration)
         elif ev.kind == "slow":
-            inst.health = SUSPECT
+            if not self.detected:
+                inst.health = SUSPECT
             inst.slow_until = max(inst.slow_until, t + ev.duration)
             inst.slow_factor = max(2, int(ev.factor))
         elif ev.kind == "squeeze":
@@ -172,9 +215,11 @@ class FaultInjector:
         if target >= 0:
             for i in instances:
                 if i.id == target:
-                    return i if i.alive else None
+                    return i if i.alive and not getattr(i, "crashed", False) \
+                        else None
             return None
-        cands = [i for i in instances if i.health == HEALTHY]
+        cands = [i for i in instances if i.health == HEALTHY
+                 and not getattr(i, "crashed", False)]
         if not cands:
             return None
         return cands[int(self.rng.integers(len(cands)))]
@@ -226,13 +271,23 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
         slow@10:0/30x3     slow instance 0 by 3x for 30s at t=10
         corrupt@15         corrupt the next KV migration after t=15
         squeeze@30:1/0.5   drop half of instance 1's KVC capacity at t=30
+        drop@10:1/0.6      drop messages on instance 1's link w.p. 0.6
+        dup@12:2/0.5       duplicate messages on instance 2's link w.p. 0.5
+        delay@8:0/2.5      delay instance 0's messages by 2.5
 
-    For ``squeeze`` the ``/`` clause is the capacity *fraction* removed
-    (default 0.5), not a duration — a squeeze is permanent. Malformed
-    input raises :class:`ChaosSpecError` naming the offending clause and
-    field.
+    For ``squeeze`` and the transport kinds the ``/`` clause is *not* a
+    duration: it is the capacity fraction removed (squeeze, permanent),
+    the per-message probability (drop/dup), or the added latency
+    (delay). Transport fault windows last the ``FaultEvent.duration``
+    default (8 time units) from their fire time and need a
+    detector/transport-backed fleet. Malformed input raises
+    :class:`ChaosSpecError` naming the offending clause and field, and
+    so do two contradictory health faults (kill/freeze/slow) aimed at
+    the same instance at the same tick — injector order must not decide
+    which one silently wins.
     """
     events: List[FaultEvent] = []
+    clauses: List[str] = []
     for item in spec.split(","):
         item = item.strip()
         if not item:
@@ -246,19 +301,28 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
         if kind not in FAULT_KINDS:
             raise ChaosSpecError(
                 f"unknown fault kind {raw_kind!r} in chaos clause "
-                f"{item!r} (valid: kill, freeze, slow, corrupt, squeeze)")
+                f"{item!r} (valid: kill, freeze, slow, corrupt, squeeze, "
+                f"drop, dup, delay)")
         factor = 2
         if "x" in rest:
             rest, _, f = rest.rpartition("x")
             factor = _chaos_num(f, "slowdown factor", item, int)
-        duration, frac = 8.0, 0.5
+        duration, frac, delay = 8.0, 0.5, 2.0
         if "/" in rest:
             rest, _, d = rest.partition("/")
-            if kind == "squeeze":
-                frac = _chaos_num(d, "capacity fraction", item, float)
+            if kind == "squeeze" or kind in ("drop", "dup"):
+                what = "capacity fraction" if kind == "squeeze" \
+                    else "message probability"
+                frac = _chaos_num(d, what, item, float)
                 if not 0.0 < frac <= 1.0:
                     raise ChaosSpecError(
-                        f"squeeze fraction {frac} outside (0, 1] in "
+                        f"{what} {frac} outside (0, 1] in "
+                        f"chaos clause {item!r}")
+            elif kind == "delay":
+                delay = _chaos_num(d, "delay", item, float)
+                if delay <= 0:
+                    raise ChaosSpecError(
+                        f"delay {delay} must be positive in "
                         f"chaos clause {item!r}")
             else:
                 duration = _chaos_num(d, "duration", item, float)
@@ -269,7 +333,23 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
         t = _chaos_num(rest, "fire time", item, float)
         events.append(FaultEvent(t=t, kind=kind, target=target,
                                  duration=duration, factor=factor,
-                                 frac=frac))
+                                 frac=frac, delay=delay))
+        clauses.append(item)
+    # contradictory health faults on the same instance at the same tick:
+    # applying them in injector order would silently pick a winner
+    seen: dict = {}
+    for ev, clause in zip(events, clauses):
+        if ev.kind not in HEALTH_KINDS or ev.target < 0:
+            continue
+        key = (ev.t, ev.target)
+        prev = seen.get(key)
+        if prev is not None and prev[0].kind != ev.kind:
+            raise ChaosSpecError(
+                f"contradictory chaos clauses {prev[1]!r} and {clause!r}: "
+                f"both target instance {ev.target} at t={ev.t:g} with "
+                f"conflicting health faults "
+                f"({prev[0].kind} vs {ev.kind})")
+        seen[key] = (ev, clause)
     return events
 
 
@@ -278,9 +358,14 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
 # ---------------------------------------------------------------------- #
 def check_fleet_invariants(fleet, strict: bool = True) -> dict:
     """Audit an ``EngineFleet`` after it drained: exactly-once terminal
-    states over everything submitted, and zero resource leaks on every
-    live engine. Returns a report dict; raises ``InvariantViolation``
-    listing every failure when ``strict``."""
+    states over everything submitted, zero resource leaks on every live
+    engine, and — with at-least-once delivery in play — no ghost
+    registrations (one request live on two engines at once) and no
+    duplicate terminal transitions (a second completion writer is
+    suppressed first-writer-wins and *counted*; any non-zero count means
+    the delivery-dedup boundary leaked a duplicate through). Returns a
+    report dict; raises ``InvariantViolation`` listing every failure
+    when ``strict``."""
     problems: List[str] = []
     n_completed = n_aborted = n_shed = 0
     for g in fleet.submitted:
@@ -298,6 +383,30 @@ def check_fleet_invariants(fleet, strict: bool = True) -> dict:
         problems.append(f"double routes: {fleet.double_routes}")
     if getattr(fleet, "_redeliver", None):
         problems.append(f"undelivered recoveries: {len(fleet._redeliver)}")
+    transport = getattr(fleet, "transport", None)
+    if transport is not None and transport.pending():
+        problems.append(
+            f"undelivered transport messages: {transport.pending()}")
+    # ghost/duplicate registration: the same GenRequest live under two
+    # engines means a duplicated delivery was accepted twice
+    owners: dict = {}
+    for inst in fleet.instances:
+        if not inst.alive:
+            continue
+        for rid, g in inst.engine.requests.items():
+            owners.setdefault(id(g), []).append(f"i{inst.id}:rid{rid}")
+    n_ghosts = 0
+    for tags in owners.values():
+        if len(tags) > 1:
+            n_ghosts += 1
+            problems.append(f"ghost registration: one request live on "
+                            f"{tags}")
+    n_dup_completions = sum(getattr(i.engine, "n_dup_completions", 0)
+                            for i in fleet.instances)
+    if n_dup_completions:
+        problems.append(f"duplicate terminal transitions suppressed "
+                        f"first-writer-wins: {n_dup_completions} "
+                        f"(delivery dedup leaked a duplicate)")
     for inst in fleet.instances:
         if not inst.alive:
             continue                   # dead state is by definition lost
@@ -325,13 +434,18 @@ def check_fleet_invariants(fleet, strict: bool = True) -> dict:
             problems.append(f"{tag}: slot_of not empty {sorted(eng.slot_of)}")
         for name in ("_pending_drain", "_chunk_progress", "_rec_state",
                      "_arrivals", "_pending_injects", "_pending_aborts",
-                     "_host_swap"):
+                     "_host_swap", "shed_handback"):
             v = getattr(eng, name, None)
             if v:
                 problems.append(f"{tag}: {name} not empty ({len(v)})")
     report = {
         "completed": n_completed, "aborted": n_aborted, "shed": n_shed,
-        "submitted": len(fleet.submitted), "problems": problems,
+        "submitted": len(fleet.submitted),
+        "ghost_registrations": n_ghosts,
+        "dup_completions": n_dup_completions,
+        "dup_deliveries": sum(getattr(i.engine, "n_dup_deliveries", 0)
+                              for i in fleet.instances),
+        "problems": problems,
         "ok": not problems,
     }
     if strict and problems:

@@ -61,10 +61,11 @@ from repro.serving import GenRequest, RequestShed, ServingEngine
 from repro.serving.engine import serve_stream
 
 from .autoscale import GoodputAutoscaler
-from .base import (HEALTHY, SUSPECT, InstanceBase, ROLES,
-                   execute_autoscale, validate_roles)
+from .base import (DetectorConfig, FailureDetector, HEALTHY, SUSPECT,
+                   InstanceBase, ROLES, execute_autoscale, validate_roles)
 from .faults import FaultInjector, RecoveryConfig, backoff_delay
 from .router import Router, make_router
+from .transport import INJECT, SUBMIT, Transport
 
 __all__ = ["EngineFleet", "FleetInstance", "ROLES"]
 
@@ -94,6 +95,7 @@ class EngineFleet:
                  autoscaler: Optional[GoodputAutoscaler] = None,
                  faults: Optional[FaultInjector] = None,
                  recovery: Optional[RecoveryConfig] = None,
+                 detector: Optional[DetectorConfig] = None,
                  **engine_kwargs):
         """``engine_kwargs`` are forwarded to every ``ServingEngine``
         (max_batch, capacity, scheduler_cfg, engine_cfg, impl, ...).
@@ -102,7 +104,19 @@ class EngineFleet:
         Fleet size under autoscaling is bounded by the scaler's
         ``AutoscaleConfig.max_instances``. ``faults=None`` (the default)
         leaves every fault-tolerance path dormant: no injector polls, no
-        recovery bookkeeping touches the hot loop."""
+        recovery bookkeeping touches the hot loop.
+
+        ``detector`` switches the fleet from *declared* to *detected*
+        failure: every routed message (submit / KV inject) travels
+        through a seeded lossy :class:`Transport`, instances heartbeat
+        through it, and the :class:`FailureDetector` owns observed
+        health (missed-beat patience -> suspect, lease expiry -> dead,
+        fresh beat -> reinstated). An attached injector stops declaring
+        health and merely crashes/freezes instances; its drop/dup/delay
+        events open transport fault windows. With no fault events the
+        detector-on path is bitwise-identical to the direct path: beats
+        are pure host-side bookkeeping and the transport delivers
+        same-tick FIFO."""
         self.cfg = cfg
         self.kv_migration = kv_migration
         self.engine_kwargs = dict(engine_kwargs)
@@ -117,6 +131,25 @@ class EngineFleet:
         self.autoscaler = autoscaler
         self.faults = faults
         self.recovery = recovery or RecoveryConfig()
+        # detection-and-delivery substrate (None = legacy direct calls)
+        self.detector_cfg = detector
+        self.transport = Transport(seed=seed + 7) \
+            if detector is not None else None
+        self.detector = FailureDetector(detector, self.transport) \
+            if detector is not None else None
+        if self.detector is not None:
+            for inst in self.instances:
+                inst.detected = True
+            if self.faults is not None:
+                self.faults.detected = True
+                self.faults.transport = self.transport
+        if self.recovery.shed_retry:
+            for inst in self.instances:
+                inst.engine.fleet_shed_handback = True
+        # at-least-once delivery epochs: each intentional (re)delivery of
+        # a GenRequest gets a fresh key; transport dups share the key and
+        # are suppressed at the engine boundary
+        self._epoch: Dict[int, int] = {}
         # conservation accounting: a GenRequest is routed exactly once
         self.route_of: Dict[int, int] = {}       # id(GenRequest) -> iid
         self.submitted: List[GenRequest] = []
@@ -138,6 +171,11 @@ class EngineFleet:
         self.n_evacuations = 0
         self.n_shed = 0
         self.n_deadline_aborts = 0
+        # shed-retry tier: rung-4 kvc-infeasible hand-backs re-routed
+        # fleet-wide instead of shed terminally
+        self._shed_origin: set = set()   # id(GenRequest) in the retry tier
+        self.n_shed_reroutes = 0         # hand-backs requeued for re-route
+        self.n_shed_rescued = 0          # delivered to a feasible peer
 
     def _make_engine(self, i: int) -> ServingEngine:
         return ServingEngine(self.cfg, params=self.params,
@@ -169,10 +207,26 @@ class EngineFleet:
                 * self.recovery.shed_headroom
             if eta > req.deadline:
                 return self._shed(req, now, "projected-slo-miss")
-        inst.engine.submit(req, now)
+        if self.transport is not None:
+            # routed decision is made here; the delivery itself rides the
+            # (lossy) transport — a clean link delivers synchronously in
+            # the pump below (bit-for-bit the direct path), a faulted one
+            # leaves it in flight for a later tick's sweep
+            inst.engine.validate(req)
+            self.transport.send(inst.id, SUBMIT, (req, now), now,
+                                dkey=self._dkey(req))
+            self._pump(inst, now)
+        else:
+            inst.engine.submit(req, now)
         self.route_of[id(req)] = inst.id
         self.submitted.append(req)
         return inst.id
+
+    def _dkey(self, g: GenRequest) -> tuple:
+        """Fresh delivery key (epoch) for one intentional (re)delivery."""
+        ep = self._epoch.get(id(g), 0) + 1
+        self._epoch[id(g)] = ep
+        return (id(g), ep)
 
     def _shed(self, req: GenRequest, now: float, reason: str) -> int:
         req.t_submit = now
@@ -183,18 +237,30 @@ class EngineFleet:
         raise RequestShed(req, reason)
 
     def has_work(self) -> bool:
-        return any(i.alive and i.engine.has_work()
-                   for i in self.instances) or bool(self._redeliver)
+        return (any(i.alive and i.engine.has_work()
+                    for i in self.instances)
+                or bool(self._redeliver)
+                or any(i.engine.shed_handback for i in self.instances)
+                or (self.transport is not None
+                    and self.transport.pending() > 0))
 
     # ------------------------------------------------------------------ #
     def step(self, now: Optional[float] = None) -> int:
-        """One fleet tick: inject scheduled faults, reclaim/redeliver
-        crashed work, enforce deadlines, step every live engine with work,
-        then migrate finished prompts off prefill-role engines. Returns
+        """One fleet tick: inject scheduled faults, run heartbeat/lease
+        detection and deliver in-flight transport messages, reclaim and
+        redeliver crashed work, enforce deadlines, step every live engine
+        with work, sweep rung-4 shed hand-backs into the retry tier, then
+        migrate finished prompts off prefill-role engines. Returns
         completions."""
         now = time.monotonic() if now is None else now
         if self.faults is not None:
             self.faults.poll(now, self.instances)
+        if self.detector is not None:
+            for inst in self.instances:
+                inst.maybe_beat(self.transport, now,
+                                self.detector.cfg.beat_every)
+            self.detector.observe(now, self.instances)
+            self._deliver_transport(now)
         self._reclaim_dead(now)
         if self._redeliver:
             self._deliver_redeliveries(now)
@@ -205,8 +271,10 @@ class EngineFleet:
             inst.update_health(now)
             if inst.alive and inst.engine.has_work() and inst.can_step(now):
                 done += inst.engine.step(now)
+        if self.recovery.shed_retry:
+            self._retry_sheds(now)
         for inst in self.instances:
-            if not inst.alive:
+            if not inst.alive or inst.crashed:
                 continue
             if inst.role == "prefill" and inst.health == HEALTHY:
                 self._migrate_ready(inst, now)
@@ -217,6 +285,71 @@ class EngineFleet:
         if self.autoscaler is not None:
             self._autoscale(now)
         return done
+
+    # -- transport delivery / shed-retry tier ---------------------------- #
+    def _deliver_transport(self, now: float) -> None:
+        for inst in self.instances:
+            self._pump(inst, now)
+
+    def _pump(self, inst: FleetInstance, now: float) -> None:
+        """Drain one instance's due in-flight messages. Senders pump the
+        recipient right after ``transport.send`` — a clean link delivers
+        synchronously, reproducing the direct-call path bit-for-bit —
+        and the per-tick sweep picks up delayed/retransmitted copies. A
+        message landing on an instance already declared dead is
+        orphaned: if the fleet still thinks the request lives there it
+        re-enters recovery; stale copies of work re-routed since
+        (fencing) are dropped."""
+        for msg in self.transport.recv(inst.id, now):
+            if msg.kind == SUBMIT:
+                g, t_arr = msg.payload
+            else:
+                g, t_arr = msg.payload["gen"], now
+            if not inst.alive:
+                if (not g.finished
+                        and self.route_of.get(id(g)) == inst.id):
+                    if (msg.kind == INJECT
+                            and msg.payload.get("kv") is not None):
+                        # the image in flight is as salvageable as a
+                        # host-pool one: restore instead of recompute
+                        self._salvaged[id(g)] = {
+                            "kv": msg.payload["kv"],
+                            "ctx": msg.payload["ctx"],
+                            "crc": msg.payload.get("kv_crc")}
+                    self._requeue(g, now, "undeliverable")
+                continue
+            if msg.kind == SUBMIT:
+                inst.engine.submit(g, t_arr, dkey=msg.dkey)
+            else:
+                inst.engine.inject_kv(msg.payload, now)
+
+    def _retry_sheds(self, now: float) -> None:
+        """Sweep rung-4 ``kvc-infeasible`` hand-backs into the fleet
+        retry tier: a request whose frozen exact-alloc demand some live
+        peer's total KVC can still fund is requeued for a router-level
+        re-route (bounded retries + the existing jittered backoff); one
+        no live peer can *ever* fit is shed terminally — same contract,
+        decided fleet-globally instead of per-instance."""
+        for inst in self.instances:
+            if not inst.engine.shed_handback:
+                continue
+            handed, inst.engine.shed_handback = \
+                inst.engine.shed_handback, []
+            for g in handed:
+                self._shed_origin.add(id(g))
+                demand = len(g.prompt) + g.params.max_new_tokens
+                if any(i.alive and i.scheduler.fits_ever(demand)
+                       for i in self.instances):
+                    self.n_shed_reroutes += 1
+                    self._requeue(g, now, "kvc-infeasible")
+                else:
+                    self._shed_terminal(g)
+
+    def _shed_terminal(self, g: GenRequest) -> None:
+        g.status = "shed"
+        g.fail_reason = "kvc-infeasible"
+        self.n_shed += 1
+        self._salvaged.pop(id(g), None)
 
     # -- crash recovery ------------------------------------------------- #
     def _reclaim_dead(self, now: float) -> None:
@@ -256,6 +389,9 @@ class EngineFleet:
     def _requeue(self, g: GenRequest, now: float, reason: str) -> None:
         att = self._retries.get(id(g), 0)
         if att >= self.recovery.max_retries:
+            if id(g) in self._shed_origin:
+                self._shed_terminal(g)   # retry tier exhausted: shed, not
+                return                   # aborted — exactly-once terminal
             g.status = "aborted"
             g.fail_reason = f"retries-exhausted({reason})"
             self.n_failed_recoveries += 1
@@ -292,6 +428,21 @@ class EngineFleet:
             if not cands:
                 self._requeue(g, now, "no-live-instance")  # burns a retry
                 continue
+            if id(g) in self._shed_origin:
+                # shed-retry tier: route only to a peer whose total KVC
+                # can fund the frozen exact-alloc demand; if none exists
+                # anywhere alive, the shed becomes terminal after all
+                total = len(g.prompt) + rl
+                fits = [i for i in cands if i.scheduler.fits_ever(total)]
+                if not fits:
+                    if any(i.alive and i.scheduler.fits_ever(total)
+                           for i in self.instances):
+                        self._requeue(g, now, "kvc-infeasible")
+                    else:
+                        self._shed_terminal(g)
+                    continue
+                cands = fits
+                self.n_shed_rescued += 1
             demand = len(g.prompt) + rl - len(out)
             tgt = self.router.choose(cands, demand)
             if out:
@@ -326,10 +477,21 @@ class EngineFleet:
                     self.n_salvaged_restores += 1
                 if self.faults is not None:
                     payload = self.faults.corrupt_payload(payload)
-                tgt.engine.inject_kv(payload, now)
+                if self.transport is not None:
+                    payload["dkey"] = self._dkey(g)
+                    self.transport.send(tgt.id, INJECT, payload, now,
+                                        dkey=payload["dkey"])
+                    self._pump(tgt, now)
+                else:
+                    tgt.engine.inject_kv(payload, now)
             else:
                 self._salvaged.pop(id(g), None)
-                tgt.engine.submit(g, g.t_submit)
+                if self.transport is not None:
+                    self.transport.send(tgt.id, SUBMIT, (g, g.t_submit),
+                                        now, dkey=self._dkey(g))
+                    self._pump(tgt, now)
+                else:
+                    tgt.engine.submit(g, g.t_submit)
             self.route_of[id(g)] = tgt.id    # re-route, not a double route
             self.n_recovered += 1
 
@@ -376,7 +538,13 @@ class EngineFleet:
             payload = self.faults.corrupt_payload(payload)
         if payload["kv"] is None:
             self.n_kv_fallbacks += 1
-        tgt.engine.inject_kv(payload, now)
+        if self.transport is not None:
+            payload["dkey"] = self._dkey(payload["gen"])
+            self.transport.send(tgt.id, INJECT, payload, now,
+                                dkey=payload["dkey"])
+            self._pump(tgt, now)
+        else:
+            tgt.engine.inject_kv(payload, now)
         self.route_of[id(payload["gen"])] = tgt.id
 
     def _migrate_ready(self, inst: FleetInstance, now: float) -> None:
@@ -415,8 +583,12 @@ class EngineFleet:
     def _spawn(self, now: float) -> None:
         iid = self._next_id
         self._next_id += 1
-        self.instances.append(
-            FleetInstance(iid, self._make_engine(iid), "unified"))
+        inst = FleetInstance(iid, self._make_engine(iid), "unified")
+        if self.detector is not None:
+            inst.detected = True
+        if self.recovery.shed_retry:
+            inst.engine.fleet_shed_handback = True
+        self.instances.append(inst)
 
     def _autoscale(self, now: float) -> None:
         scaler = self.autoscaler
@@ -449,16 +621,38 @@ class EngineFleet:
                       for i in self.instances)
         term = sum(1 for g in self.submitted if g.finished)
         return (insts, term, self.n_migrations, self.n_recovered,
-                self.n_evacuations, len(self._redeliver))
+                self.n_evacuations, len(self._redeliver),
+                self.n_shed, self.n_shed_reroutes, self.n_shed_rescued,
+                0 if self.transport is None else self.transport.pending(),
+                0 if self.detector is None
+                else len(self.detector.transitions))
 
     def debug_state(self) -> Dict[str, object]:
-        state: Dict[str, object] = {
-            f"instance_{inst.id}": {"health": inst.health,
-                                    "role": inst.role,
-                                    "draining": inst.draining,
-                                    **inst.engine.debug_state()}
-            for inst in self.instances}
+        """Stall post-mortem: per-instance health *as observed* (detected
+        mode: heartbeat age + crashed ground truth), the injector's
+        fired-event log, and in-flight transport/redelivery queues."""
+        state: Dict[str, object] = {}
+        for inst in self.instances:
+            d = {"health": inst.health,
+                 "role": inst.role,
+                 "draining": inst.draining,
+                 "crashed": inst.crashed,
+                 **inst.engine.debug_state()}
+            if self.detector is not None:
+                d["heartbeat_age"] = self.detector.heartbeat_age(inst.id)
+            state[f"instance_{inst.id}"] = d
         state["redeliver"] = len(self._redeliver)
+        if self.faults is not None:
+            state["faults_fired"] = list(self.faults.log)
+        if self.transport is not None:
+            state["transport_pending"] = self.transport.pending()
+            state["transport"] = {
+                "dropped": self.transport.n_dropped,
+                "duplicated": self.transport.n_duplicated,
+                "delayed": self.transport.n_delayed,
+                "retransmits": self.transport.n_retransmits}
+        if self.detector is not None:
+            state["detector_transitions"] = list(self.detector.transitions)
         return state
 
     # ------------------------------------------------------------------ #
@@ -492,4 +686,10 @@ class EngineFleet:
                 "evacuations": self.n_evacuations,
                 "kv_rejects": sum(i.engine.n_kv_rejects
                                   for i in self.instances),
+                "shed_reroutes": self.n_shed_reroutes,
+                "shed_rescued": self.n_shed_rescued,
+                "dup_deliveries": sum(i.engine.n_dup_deliveries
+                                      for i in self.instances),
+                "dup_completions": sum(i.engine.n_dup_completions
+                                       for i in self.instances),
                 "ok": int(self.double_routes == 0 and pending == 0)}

@@ -45,10 +45,11 @@ from repro.core.scheduler import BaseScheduler
 from repro.core.simulator import SimInstance
 
 from .autoscale import GoodputAutoscaler
-from .base import (SUSPECT, InstanceBase, ROLES, execute_autoscale,
-                   validate_roles)
+from .base import (DetectorConfig, FailureDetector, InstanceBase, ROLES,
+                   execute_autoscale, validate_roles)
 from .faults import FaultInjector, RecoveryConfig, backoff_delay
 from .router import Router, make_router
+from .transport import Transport
 
 _INF = float("inf")
 _EPS = 1e-12
@@ -63,9 +64,12 @@ class ClusterInstance(InstanceBase):
         super().__init__(iid, role)
         self.sim = sim
         self.stalled = False          # has work the scheduler cannot place
-        # routed-but-undelivered requests: (deliver_t, req, as_gt), kept
-        # time-sorted because routing happens in global event-time order
-        self.pending: List[Tuple[float, Request, bool]] = []
+        # routed-but-undelivered requests: (deliver_t, req, as_gt, dkey),
+        # kept time-sorted — routing happens in global event-time order
+        # and a transport delay re-sorts on insert
+        self.pending: List[Tuple[float, Request, bool, Optional[tuple]]] = []
+        self._seen: set = set()       # delivery keys applied (idempotency)
+        self.n_dup_deliveries = 0     # duplicates suppressed at this rank
 
     @property
     def scheduler(self):
@@ -73,20 +77,20 @@ class ClusterInstance(InstanceBase):
 
     def outstanding_tokens(self) -> int:
         tot = super().outstanding_tokens()
-        for _, r, _ in self.pending:
+        for _, r, _, _ in self.pending:
             tot += (r.prompt_len - r.prompt_done) + r.remaining_predicted
         return tot
 
     # -- event-loop interface ------------------------------------------ #
     def next_time(self) -> float:
-        if not self.alive:
-            return _INF
-        t = _INF
+        if not self.alive or self.crashed:
+            return _INF               # silent carcass: only the detector
+        t = _INF                      # (or a declared kill) frees its work
         if self.sim.has_work() and not self.stalled:
             t = self.sim.t
         elif self.pending:
             t = max(self.sim.t, self.pending[0][0])
-        if t != _INF and self.health == SUSPECT:
+        if t != _INF and self.frozen_until > t:
             t = max(t, self.frozen_until)    # frozen: wakes at the thaw
         return t
 
@@ -96,7 +100,12 @@ class ClusterInstance(InstanceBase):
         if not (self.sim.has_work() and not self.stalled):
             self.sim.advance_to(self.pending[0][0])
         while self.pending and self.pending[0][0] <= self.sim.t + _EPS:
-            _, req, as_gt = self.pending.pop(0)
+            _, req, as_gt, dkey = self.pending.pop(0)
+            if dkey is not None:
+                if dkey in self._seen:
+                    self.n_dup_deliveries += 1   # at-least-once duplicate
+                    continue                     # suppressed: exactly-once
+                self._seen.add(dkey)             # effect on the instance
             if as_gt:
                 self.sim.scheduler.enqueue_gt(req)
             else:
@@ -123,6 +132,15 @@ class ClusterResult:
     aborted: List[int] = field(default_factory=list)   # terminal, not done
     n_recovered: int = 0
     fault_log: List[Tuple[float, str, int]] = field(default_factory=list)
+    # detected-failure / shed-retry accounting (zero in declared mode)
+    n_shed_reroutes: int = 0     # rung-4 sheds handed to the retry tier
+    n_shed_rescued: int = 0      # of those, delivered to a feasible peer
+    n_shed_terminal: int = 0     # of those, shed for good (no peer fits)
+    n_dup_deliveries: int = 0    # duplicates suppressed by idempotency
+    n_false_suspects: int = 0    # suspects reinstated by a fresh beat
+    detector_transitions: List[Tuple[float, int, str, str]] = \
+        field(default_factory=list)
+    transport_stats: Dict[str, int] = field(default_factory=dict)
 
     @property
     def n_instances(self) -> int:
@@ -184,6 +202,7 @@ class ClusterSim:
                  autoscaler: Optional[GoodputAutoscaler] = None,
                  faults: Optional[FaultInjector] = None,
                  recovery: Optional[RecoveryConfig] = None,
+                 detector: Optional[DetectorConfig] = None,
                  collect_samples: bool = False,
                  name: Optional[str] = None):
         self.factory = scheduler_factory
@@ -196,6 +215,22 @@ class ClusterSim:
             ClusterInstance(i, SimInstance(scheduler_factory(i), cost,
                                            collect_samples), roles[i])
             for i in range(n_instances)]
+        # detected failure: the sim keeps its own delivery structures (the
+        # pending lists + migration heap) and asks the transport only to
+        # *judge* each send, so one chaos schedule reproduces on either
+        # backend; heartbeats/leases drive observed health exactly as on
+        # the real-engine fleet
+        self.detector_cfg = detector
+        self.transport = Transport(seed=seed + 7) \
+            if detector is not None else None
+        self.detector = FailureDetector(detector, self.transport) \
+            if detector is not None else None
+        if self.detector is not None:
+            for inst in self.instances:
+                inst.detected = True
+            if self.faults is not None:
+                self.faults.detected = True
+                self.faults.transport = self.transport
         self.router: Router = make_router(router, seed) \
             if isinstance(router, str) else router
         # migrations get their own router instance (same policy) so the
@@ -216,6 +251,19 @@ class ClusterSim:
         self._dead_handled: set = set()
         self.aborted_rids: List[int] = []
         self.n_recovered = 0
+        # at-least-once delivery epochs (rid -> epoch) + shed-retry tier
+        self._epoch: Dict[int, int] = {}
+        self._migrations: List = []              # bound to run()'s heap
+        self._shed_rids: set = set()             # rids in the retry tier
+        self.n_shed_reroutes = 0
+        self.n_shed_rescued = 0
+        self.n_shed_terminal = 0
+
+    def _dkey(self, rid: int) -> tuple:
+        """Fresh delivery key for one intentional (re)delivery of rid."""
+        ep = self._epoch.get(rid, 0) + 1
+        self._epoch[rid] = ep
+        return (rid, ep)
 
     # ------------------------------------------------------------------ #
     def _route(self, req: Request, t: float, as_gt: bool,
@@ -237,13 +285,65 @@ class ClusterSim:
             self.aborted_rids.append(req.rid)
             return
         demand = req.prompt_len + max(req.padded_rl, req.predicted_rl, 1)
+        if rerouted and req.rid in self._shed_rids:
+            # shed-retry tier: only a peer whose *total* KVC can ever fund
+            # the frozen exact-alloc demand may receive a rung-4 shed
+            fits = [i for i in cands if i.scheduler.fits_ever(demand)]
+            if not fits:
+                if any(i.alive and i.scheduler.fits_ever(demand)
+                       for i in self.instances):
+                    # a feasible peer exists but is not routable right
+                    # now (draining/degraded): burn a retry and wait
+                    self._recover(req, t, self._migrations)
+                else:
+                    self.n_shed_terminal += 1
+                    req.set_state(State.ABORTED, t)
+                    self.aborted_rids.append(req.rid)
+                return
+            cands = fits
+            self.n_shed_rescued += 1
         router = self.decode_router if as_gt else self.router
         inst = router.choose(cands, demand)
         if not as_gt:
             if req.rid in self.route_of and not rerouted:
                 self.double_routes += 1
             self.route_of[req.rid] = inst.id
-        inst.pending.append((t, req, as_gt))
+        self._deliver(inst, req, t, as_gt)
+
+    def _deliver(self, inst: ClusterInstance, req: Request, t: float,
+                 as_gt: bool) -> None:
+        """Hand one routed request to its instance — through the lossy
+        transport's verdict when detection is on (drop => retransmit via
+        the shared event heap, dup => two pending copies sharing one
+        delivery key, delay => deferred and possibly overtaken)."""
+        if self.transport is None:
+            inst.pending.append((t, req, as_gt, None))
+            inst.stalled = False
+            return
+        dkey = self._dkey(req.rid)
+        v = self.transport.judge(inst.id, t)
+        deliver_t = t + v.delay
+        if v.drop:
+            # at-least-once: the sender's retry timer re-sends (a fresh
+            # routing decision and a fresh epoch — the original is gone)
+            self.transport.n_retransmits += 1
+            self._mig_seq += 1
+            heapq.heappush(self._migrations,
+                           (deliver_t + self.transport.retransmit_after,
+                            self._mig_seq, req, as_gt))
+            return
+        self._push_pending(inst, deliver_t, req, as_gt, dkey)
+        if v.dup:
+            self._push_pending(inst, deliver_t, req, as_gt, dkey)
+
+    @staticmethod
+    def _push_pending(inst: ClusterInstance, deliver_t: float,
+                      req: Request, as_gt: bool, dkey) -> None:
+        inst.pending.append((deliver_t, req, as_gt, dkey))
+        if len(inst.pending) > 1 and inst.pending[-2][0] > deliver_t:
+            # a delayed message was overtaken: restore delivery order
+            # (stable sort keeps FIFO among equal times)
+            inst.pending.sort(key=lambda p: p[0])
         inst.stalled = False
 
     def _collect_migrations(self, inst: ClusterInstance,
@@ -273,7 +373,11 @@ class ClusterSim:
             if inst.alive or inst.id in self._dead_handled:
                 continue
             self._dead_handled.add(inst.id)
-            victims = [r for _, r, _ in inst.pending]
+            victims, vseen = [], set()
+            for _, r, _, _ in inst.pending:
+                if r.rid not in vseen:      # dup'd copies: recover once
+                    vseen.add(r.rid)
+                    victims.append(r)
             inst.pending.clear()
             inst.stalled = False
             sched = inst.sim.scheduler
@@ -301,7 +405,9 @@ class ClusterSim:
         them); unstarted ones are re-routed as fresh PTs."""
         att = self._retries.get(req.rid, 0)
         if att >= self.recovery.max_retries:
-            req.set_state(State.ABORTED, t)
+            if req.rid in self._shed_rids:
+                self.n_shed_terminal += 1    # retry tier exhausted: the
+            req.set_state(State.ABORTED, t)  # shed becomes terminal
             self.aborted_rids.append(req.rid)
             return
         self._retries[req.rid] = att + 1
@@ -327,6 +433,8 @@ class ClusterSim:
             iid, SimInstance(self.factory(iid), self.cost,
                              self.collect_samples), "unified")
         inst.sim.advance_to(t)
+        if self.detector is not None:
+            inst.detected = True
         self.instances.append(inst)
 
     def _autoscale(self, t: float) -> None:
@@ -341,6 +449,7 @@ class ClusterSim:
         n = len(reqs)
         i_arr = 0
         migrations: List[Tuple[float, int, Request, bool]] = []
+        self._migrations = migrations    # _deliver/_route push retransmits
         total_iters = 0
 
         while total_iters < max_iters:
@@ -352,7 +461,17 @@ class ClusterSim:
                 ti = inst.next_time()
                 if ti < t_inst:
                     t_inst, nxt = ti, inst
-            t_now = min(t_arr, t_mig, t_inst)
+            t_evt = min(t_arr, t_mig, t_inst)
+            t_det = _INF
+            if self.detector is not None:
+                # detection deadlines join the event horizon only while
+                # work remains — a silent carcass holding requests must
+                # be declared even when nothing else advances the clock
+                work_left = (i_arr < n or bool(migrations)
+                             or any(not i.idle() for i in self.instances))
+                if work_left:
+                    t_det = self.detector.next_deadline(self.instances)
+            t_now = min(t_evt, t_det)
             if t_now == _INF:
                 break
             if self.faults is not None:
@@ -363,6 +482,17 @@ class ClusterSim:
                     # instance's work and re-evaluate the event horizon
                     self._reclaim_dead(t_now, migrations)
                     continue
+            if self.detector is not None:
+                # beat before observing: a live instance that reached
+                # this wake is, by construction, still heartbeating
+                for inst in self.instances:
+                    inst.maybe_beat(self.transport, t_now,
+                                    self.detector.cfg.beat_every)
+                if self.detector.observe(t_now, self.instances):
+                    self._reclaim_dead(t_now, migrations)
+                    continue
+                if t_det < t_evt:
+                    continue             # pure detection wake: re-horizon
             if t_arr <= t_mig and t_arr <= t_inst:
                 req = reqs[i_arr]
                 i_arr += 1
@@ -383,10 +513,25 @@ class ClusterSim:
             sched = nxt.sim.scheduler
             if sched.infeasible_shed:
                 # rung 4: a squeeze made these permanently inadmissible
-                # on this instance — record the terminal shed
+                # on *this* instance. With the shed-retry tier on, a peer
+                # whose total KVC can still fund the demand gets a
+                # router-level re-route (bounded retries + backoff);
+                # terminal shed only when no live peer can ever fit
                 for r in sched.infeasible_shed:
-                    r.set_state(State.ABORTED, nxt.sim.t)
-                    self.aborted_rids.append(r.rid)
+                    demand = r.prompt_len + max(r.padded_rl,
+                                                r.predicted_rl, 1)
+                    if (self.recovery.shed_retry
+                            and any(i.alive
+                                    and i.scheduler.fits_ever(demand)
+                                    for i in self.instances)):
+                        self._shed_rids.add(r.rid)
+                        self.n_shed_reroutes += 1
+                        self._recover(r, nxt.sim.t, migrations)
+                    else:
+                        if self.recovery.shed_retry:
+                            self.n_shed_terminal += 1
+                        r.set_state(State.ABORTED, nxt.sim.t)
+                        self.aborted_rids.append(r.rid)
                 sched.infeasible_shed.clear()
             if status == SimInstance.STEPPED:
                 total_iters += 1
@@ -419,4 +564,18 @@ class ClusterSim:
             scale_events=list(self.scale_events),
             aborted=list(self.aborted_rids),
             n_recovered=self.n_recovered,
-            fault_log=list(self.faults.log) if self.faults else [])
+            fault_log=list(self.faults.log) if self.faults else [],
+            n_shed_reroutes=self.n_shed_reroutes,
+            n_shed_rescued=self.n_shed_rescued,
+            n_shed_terminal=self.n_shed_terminal,
+            n_dup_deliveries=sum(i.n_dup_deliveries
+                                 for i in self.instances),
+            n_false_suspects=(self.detector.n_reinstated
+                              if self.detector else 0),
+            detector_transitions=(list(self.detector.transitions)
+                                  if self.detector else []),
+            transport_stats=({"dropped": self.transport.n_dropped,
+                              "duplicated": self.transport.n_duplicated,
+                              "delayed": self.transport.n_delayed,
+                              "retransmits": self.transport.n_retransmits}
+                             if self.transport else {}))

@@ -713,6 +713,16 @@ class EconoServeScheduler(BaseScheduler):
             freed = True
         return freed
 
+    def fits_ever(self, tokens: int) -> bool:
+        """Frozen-demand feasibility: would ``tokens`` of exact-alloc
+        demand fit this scheduler's *empty* post-shrink cache? The rung-4
+        shed uses the negation locally; the fleet's shed-retry tier asks
+        it of every live peer to decide between a router-level re-route
+        (someone can fund the demand) and a terminal shed (no one ever
+        will)."""
+        return blocks_for(tokens, self.cfg.block_size) \
+            <= self.kvc.total_blocks - self.kvc.pending_shrink
+
     def _shed_infeasible(self, t: float) -> int:
         """Pressure-ladder rung 4: after a capacity squeeze, a queued
         request whose frozen admission demand exceeds what even an
@@ -720,16 +730,16 @@ class EconoServeScheduler(BaseScheduler):
         — demand is frozen while it waits and capacity only shrinks.
         Called from form_batch's deadlock relief (nothing runs, nothing
         placeable, every softer rung exhausted): cancel the doomed
-        requests and park them in ``infeasible_shed`` for the backend to
-        surface as terminal sheds. Returns how many were cancelled."""
-        cap = self.kvc.total_blocks - self.kvc.pending_shrink
-        bs = self.cfg.block_size
+        requests and park them in ``infeasible_shed`` for the backend —
+        which either surfaces them as terminal sheds or hands them back
+        to the fleet's shed-retry tier for a re-route to a peer that can
+        still fit them. Returns how many were cancelled."""
         doomed = [r for r in list(self.gt_queue)
-                  if blocks_for(r.prompt_len + r.generated
-                                + r.remaining_predicted, bs) > cap]
+                  if not self.fits_ever(r.prompt_len + r.generated
+                                        + r.remaining_predicted)]
         doomed += [r for r in list(self.pt_queue)
-                   if blocks_for(r.prompt_len + max(r.padded_rl, 1), bs)
-                   > cap]
+                   if not self.fits_ever(r.prompt_len
+                                         + max(r.padded_rl, 1))]
         for r in doomed:
             self.cancel(r.rid, t)
             self.infeasible_shed.append(r)

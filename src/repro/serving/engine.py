@@ -314,6 +314,23 @@ class ServingEngine:
         self.n_shed = 0              # rung-4 terminal sheds (kvc-infeasible)
         self.n_prefill_waves = 0     # whole-prompt prefill dispatch waves
 
+        # idempotent at-least-once delivery: every fleet-routed message
+        # (submit / KV inject) carries a delivery key; a duplicated or
+        # retransmitted copy of an already-accepted key is dropped here,
+        # at the instance boundary, making delivery effectively
+        # exactly-once. ``n_dup_completions`` counts second terminal
+        # writers suppressed first-writer-wins — always zero unless the
+        # dedup boundary leaked (audited by check_fleet_invariants).
+        self._delivered: set = set()
+        self.n_dup_deliveries = 0
+        self.n_dup_completions = 0
+        # fleet-level shed-retry tier: when the owning fleet enables
+        # hand-back, rung-4 kvc-infeasible sheds are cancelled locally
+        # (slot/KVC freed) but parked here non-terminal for the fleet to
+        # re-route instead of being shed terminally
+        self.fleet_shed_handback = False
+        self.shed_handback: List[GenRequest] = []
+
         # host-offload KV swap tier (tiered KVC degradation, rung 2):
         # rid -> {"kv", "ctx", "crc"} page images captured when a
         # swapped/evicted GT loses its slot; restored by ``_swap_in``
@@ -612,14 +629,24 @@ class ServingEngine:
                 + self.sync_counts["drain_blocking"])
 
     # ------------------------------------------------------------------ #
-    def submit(self, req: GenRequest, now: float) -> int:
+    def submit(self, req: GenRequest, now: float,
+               dkey: Optional[tuple] = None) -> int:
         """Register a request. While a fused megastep window is open the
         scheduler must not see the arrival (its admission would change
         batch membership the device already computed past): the arrival is
         buffered — with its true arrival time, so ordering/SLO math is
         unaffected — and delivered when the window drains, at most
         ``decode_megastep - 1`` iterations later. This is the standard
-        multi-step-scheduling trade (scheduling decisions every K steps)."""
+        multi-step-scheduling trade (scheduling decisions every K steps).
+
+        ``dkey`` is the fleet transport's delivery key: a duplicated
+        copy of an already-accepted delivery is dropped here (returns
+        -1) before it can touch any engine state."""
+        if dkey is not None:
+            if dkey in self._delivered:
+                self.n_dup_deliveries += 1
+                return -1
+            self._delivered.add(dkey)
         self.validate(req)
         req.rid = self._rid
         self._rid += 1
@@ -803,7 +830,16 @@ class ServingEngine:
         memory" and the engine's existing swap-recompute path re-prefills
         prompt + generated on first schedule. Deferred while a fused
         megastep window is open (same contract as ``submit``); returns the
-        assigned rid, or None when deferred."""
+        assigned rid, or None when deferred — or when the payload is a
+        duplicated delivery (its ``dkey`` was already accepted — dedup
+        happens here, before deferral, so a dup'd inject cannot even be
+        double-buffered behind a window)."""
+        dkey = payload.get("dkey")
+        if dkey is not None:
+            if dkey in self._delivered:
+                self.n_dup_deliveries += 1
+                return None
+            self._delivered.add(dkey)
         if self._mega_left > 0:
             self._pending_injects.append((payload, now))
             return None
@@ -1709,16 +1745,26 @@ class ServingEngine:
         plan = self.scheduler.form_batch(now)
         if self.scheduler.infeasible_shed:
             # rung 4: the scheduler cancelled requests a squeeze made
-            # permanently inadmissible — surface each as a terminal shed
+            # permanently inadmissible *here* — surface each as a
+            # terminal shed, or (fleet hand-back enabled) cancel locally
+            # and park the request non-terminal for the fleet's
+            # shed-retry tier to re-route to a peer that can still fit it
             shed, self.scheduler.infeasible_shed = \
                 self.scheduler.infeasible_shed, []
             for r in shed:
                 self.abort(r.rid, now, "kvc-infeasible")
                 g = self.requests.get(r.rid)
                 if g is not None and g.status == "aborted":
-                    g.status = "shed"
-                    self.n_aborted -= 1
-                    self.n_shed += 1
+                    if self.fleet_shed_handback:
+                        g.status = None
+                        g.fail_reason = None
+                        self.n_aborted -= 1
+                        self.requests.pop(r.rid, None)
+                        self.shed_handback.append(g)
+                    else:
+                        g.status = "shed"
+                        self.n_aborted -= 1
+                        self.n_shed += 1
         if plan.empty:
             if self._mega_left:
                 # every window request completed early (EOS inside the
@@ -1755,8 +1801,15 @@ class ServingEngine:
         freed = False
         for r in done:
             g = self.requests[r.rid]
-            g.t_done = r.t_complete
-            g.status = "completed"
+            if g.finished:
+                # first-writer-wins: another engine (or the fleet's
+                # redelivery fast path) already wrote this request's
+                # terminal state — suppress the second writer and count
+                # it; the invariant audit flags any non-zero count
+                self.n_dup_completions += 1
+            else:
+                g.t_done = r.t_complete
+                g.status = "completed"
             slot = self.slot_of.pop(r.rid, None)
             if slot is not None:
                 self.free_slots.append(slot)

@@ -1,0 +1,452 @@
+"""Detected-failure battery: the lossy transport, the heartbeat/lease
+failure detector, idempotent at-least-once delivery, and the fleet-level
+shed-retry tier — on both backends.
+
+The contract under test is *detected, not declared*: the injector only
+crashes/freezes instances (they fall silent) and the detector must
+notice from missing heartbeats. With no fault windows the whole
+substrate must be free — zero rng draws on the transport and token
+streams bitwise-identical to the direct-call path.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (ChaosSpecError, DetectorConfig, EngineFleet,
+                           FaultEvent, FaultInjector, RecoveryConfig,
+                           Transport, check_fleet_invariants,
+                           parse_chaos_spec)
+from repro.cluster.base import (DEAD, FailureDetector, HEALTHY,
+                                InstanceBase, SUSPECT)
+from repro.cluster.sim import ClusterSim
+from repro.cluster.transport import BEAT, DETECTOR, SUBMIT
+from repro.configs import get_config
+from repro.core import predictor, traces
+from repro.core.costmodel import CostModel
+from repro.core.scheduler import SchedulerConfig, make_econoserve
+from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+
+def _gen_reqs(cfg, n=6, seed=5, lo=4, hi=10):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(8, 24)))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(lo, hi)),
+                              temperature=0.0))
+        for _ in range(n)]
+
+
+def _sim_trace(n, rate=6.0, seed=0):
+    reqs = traces.generate(traces.SHAREGPT, n, seed=seed, rate=rate)
+    predictor.annotate(reqs, predictor.NoisyPredictor(accuracy=0.75,
+                                                      seed=seed), 0.15)
+    return reqs
+
+
+# --------------------------------------------------------------------- #
+# transport: clean pass-through, drop/dup/delay windows, retransmit
+# --------------------------------------------------------------------- #
+def test_transport_clean_link_zero_rng_and_fifo():
+    """No active window: no rng draw at all, same-tick FIFO delivery —
+    the precondition for a fault-free detector-on run to be bitwise-
+    identical to the direct path."""
+    tr = Transport(seed=0)
+    state0 = tr.rng.bit_generator.state
+    for i in range(3):
+        tr.send(0, SUBMIT, f"m{i}", 1.0, dkey=(i, 1))
+    got = tr.recv(0, 1.0)
+    assert [m.payload for m in got] == ["m0", "m1", "m2"]
+    assert tr.rng.bit_generator.state == state0
+    assert tr.pending() == 0 and tr.next_time() == float("inf")
+    assert (tr.n_dropped, tr.n_duplicated, tr.n_delayed) == (0, 0, 0)
+
+    # windows exist but none is active at send time: still zero draws
+    tr.add_fault(FaultEvent(t=50.0, kind="drop", target=0, duration=5.0,
+                            frac=1.0))
+    tr.send(0, SUBMIT, "m3", 2.0)
+    assert [m.payload for m in tr.recv(0, 2.0)] == ["m3"]
+    assert tr.rng.bit_generator.state == state0
+
+
+def test_transport_drop_retransmits_data_but_loses_beats():
+    tr = Transport(seed=0)
+    tr.add_fault(FaultEvent(t=0.0, kind="drop", target=0, duration=100.0,
+                            frac=1.0))
+    tr.send(0, SUBMIT, "work", 1.0, dkey=(7, 1))
+    assert tr.n_dropped == 1 and tr.n_retransmits == 1
+    assert tr.recv(0, 1.0) == []         # lost on the wire...
+    assert tr.next_time() == 1.0 + tr.retransmit_after
+    (msg,) = tr.recv(0, 1.0 + tr.retransmit_after)
+    assert msg.payload == "work" and msg.dkey == (7, 1)   # ...then retried
+
+    # heartbeats are fire-and-forget: a dropped beat is simply missing
+    tr.send(DETECTOR, BEAT, 0, 2.0, link=0)
+    assert tr.n_dropped == 2
+    assert tr.recv(DETECTOR, 1e9) == []
+    assert tr.pending() == 0             # beats never count as data-plane
+
+
+def test_transport_dup_copies_share_delivery_key():
+    tr = Transport(seed=0)
+    tr.add_fault(FaultEvent(t=0.0, kind="dup", target=1, duration=10.0,
+                            frac=1.0))
+    tr.send(1, SUBMIT, "x", 0.5, dkey=(9, 1))
+    got = tr.recv(1, 0.5)
+    assert len(got) == 2 and tr.n_duplicated == 1
+    assert got[0].dkey == got[1].dkey == (9, 1)
+    # an untargeted link is untouched
+    tr.send(0, SUBMIT, "y", 0.5, dkey=(10, 1))
+    assert len(tr.recv(0, 0.5)) == 1
+
+
+def test_transport_delay_defers_and_reorders():
+    tr = Transport(seed=0)
+    tr.add_fault(FaultEvent(t=0.0, kind="delay", target=0, duration=2.0,
+                            delay=5.0))
+    tr.send(0, SUBMIT, "slow", 1.0)      # in the window: lands at t=6
+    tr.send(0, SUBMIT, "fast", 3.0)      # window closed: lands at t=3
+    assert tr.n_delayed == 1
+    assert [m.payload for m in tr.recv(0, 3.0)] == ["fast"]
+    assert tr.pending() == 1 and tr.next_time() == 6.0
+    assert [m.payload for m in tr.recv(0, 6.0)] == ["slow"]
+
+
+# --------------------------------------------------------------------- #
+# failure detector: suspect / reinstate / dead lifecycle
+# --------------------------------------------------------------------- #
+def test_detector_lifecycle_suspect_reinstate_dead():
+    cfg = DetectorConfig(beat_every=1.0, patience=3.0, lease=10.0)
+    tr = Transport(seed=0)
+    det = FailureDetector(cfg, tr)
+    a, b = InstanceBase(0), InstanceBase(1)
+    insts = [a, b]
+    for i in (0, 1):
+        tr.send(DETECTOR, BEAT, i, 0.0, link=i)
+    assert det.observe(0.0, insts) == []
+    assert a.health == HEALTHY and b.health == HEALTHY
+
+    # silence past patience: both suspected (no routes, work stays put)
+    assert det.observe(3.5, insts) == []
+    assert a.health == SUSPECT and b.health == SUSPECT
+    assert det.n_suspects == 2
+
+    # a fresh beat inside the lease window reinstates the false suspect
+    tr.send(DETECTOR, BEAT, 0, 4.0, link=0)
+    assert det.observe(4.0, insts) == []
+    assert a.health == HEALTHY and det.n_reinstated == 1
+
+    # b stays silent past the lease: declared dead exactly once
+    tr.send(DETECTOR, BEAT, 0, 10.0, link=0)
+    assert det.observe(10.5, insts) == [1]
+    assert b.health == DEAD and det.n_declared_dead == 1
+    assert det.heartbeat_age(1, 10.5) == 10.5
+
+    # DEAD is final: a fenced zombie's late beat never resurrects it
+    tr.send(DETECTOR, BEAT, 1, 11.0, link=1)
+    assert det.observe(11.0, insts) == []
+    assert b.health == DEAD
+    assert det.transitions == [
+        (3.5, 0, HEALTHY, SUSPECT), (3.5, 1, HEALTHY, SUSPECT),
+        (4.0, 0, SUSPECT, HEALTHY), (10.5, 1, SUSPECT, DEAD)]
+
+
+def test_detector_next_deadline_strictly_past_threshold():
+    """``observe`` transitions on strictly exceeded ages, so the
+    advertised deadline must sit a hair past the threshold — a wake at
+    exactly ``last + patience`` observes nothing and would pin the sim
+    event horizon forever."""
+    cfg = DetectorConfig(beat_every=1.0, patience=3.0, lease=10.0)
+    det = FailureDetector(cfg, Transport(seed=0))
+    inst = InstanceBase(0)
+    det.last_beat[0] = 5.0
+    dl = det.next_deadline([inst])
+    assert dl > 8.0
+    det.observe(8.0, [inst])             # exact threshold: nothing yet
+    assert inst.health == HEALTHY
+    det.observe(dl, [inst])              # the deadline itself does fire
+    assert inst.health == SUSPECT
+    assert det.next_deadline([inst]) > 15.0      # now tracking the lease
+    inst.health = DEAD
+    assert det.next_deadline([inst]) == float("inf")
+
+
+def test_maybe_beat_periodic_silent_when_crashed_or_frozen():
+    tr = Transport(seed=0)
+    inst = InstanceBase(0)
+    inst.maybe_beat(tr, 0.0, 1.0)
+    inst.maybe_beat(tr, 0.5, 1.0)        # not due yet
+    assert len(tr.recv(DETECTOR, 0.5)) == 1
+    inst.maybe_beat(tr, 1.0, 1.0)
+    assert len(tr.recv(DETECTOR, 1.0)) == 1
+    inst.crashed = True
+    inst.maybe_beat(tr, 2.0, 1.0)        # a crashed instance is silent
+    inst.crashed = False
+    inst.frozen_until = 9.0
+    inst.maybe_beat(tr, 3.0, 1.0)        # and so is a frozen one
+    assert tr.recv(DETECTOR, 1e9) == []
+
+
+def test_detector_config_rejects_lease_inside_patience():
+    with pytest.raises(AssertionError):
+        DetectorConfig(beat_every=1.0, patience=5.0, lease=4.0)
+
+
+# --------------------------------------------------------------------- #
+# chaos spec: transport kinds + contradictory-clause rejection
+# --------------------------------------------------------------------- #
+def test_parse_chaos_spec_transport_kinds():
+    evs = parse_chaos_spec("drop@10:1/0.6,dup@12:2/0.5,delay@8:0/2.5")
+    assert [(e.kind, e.t, e.target) for e in evs] == [
+        ("drop", 10.0, 1), ("dup", 12.0, 2), ("delay", 8.0, 0)]
+    assert evs[0].frac == 0.6 and evs[1].frac == 0.5
+    assert evs[2].delay == 2.5
+    for bad, fragment in [
+        ("drop@5:1/1.5", "drop@5:1/1.5"),    # probability out of (0, 1]
+        ("dup@5:1/0", "dup@5:1/0"),
+        ("delay@5:0/-1", "delay@5:0/-1"),    # non-positive latency
+        ("drop@5:1/abc", "drop@5:1/abc"),
+    ]:
+        with pytest.raises(ChaosSpecError) as ei:
+            parse_chaos_spec(bad)
+        assert fragment in str(ei.value), (bad, str(ei.value))
+
+
+def test_parse_chaos_spec_contradiction_names_both_clauses():
+    """Two different health faults aimed at the same instance at the same
+    tick contradict — injector order must not silently pick a winner, so
+    the parser rejects the pair naming both clauses."""
+    with pytest.raises(ChaosSpecError) as ei:
+        parse_chaos_spec("kill@5:1,freeze@5:1")
+    msg = str(ei.value)
+    assert "kill@5:1" in msg and "freeze@5:1" in msg
+    with pytest.raises(ChaosSpecError):
+        parse_chaos_spec("freeze@5:1/20,slow@5:1/10x3")
+    # non-contradictions parse: same kind twice, different tick/target,
+    # untargeted events, and transport kinds riding health faults
+    assert len(parse_chaos_spec("freeze@5:1/10,freeze@5:1/20")) == 2
+    assert len(parse_chaos_spec("kill@5:1,freeze@6:1")) == 2
+    assert len(parse_chaos_spec("kill@5:1,freeze@5:2")) == 2
+    assert len(parse_chaos_spec("kill@5,freeze@5")) == 2
+    assert len(parse_chaos_spec("kill@5:1,drop@5:1/0.5")) == 2
+
+
+# --------------------------------------------------------------------- #
+# ClusterSim: detected failure + idempotent delivery + shed retry
+# --------------------------------------------------------------------- #
+def _mk_sim(n_instances=3, scfg=None, **kw):
+    cost = CostModel()
+    scfg = scfg or SchedulerConfig()
+    return ClusterSim(lambda i: make_econoserve(scfg, cost), cost,
+                      n_instances=n_instances, router="least-kvc",
+                      seed=0, **kw)
+
+
+def test_sim_detector_fault_free_is_bitwise_identical():
+    """Detector on, no fault windows: every completion time and token
+    count matches the plain run — heartbeats and the transport judge
+    must be pure bookkeeping on the clean path."""
+    plain = _mk_sim().run(_sim_trace(120))
+    det = _mk_sim(detector=DetectorConfig()).run(_sim_trace(120))
+    assert [(r.rid, r.t_complete, r.generated) for r in plain.requests] \
+        == [(r.rid, r.t_complete, r.generated) for r in det.requests]
+    assert det.wall_time == plain.wall_time
+    assert det.detector_transitions == []
+    assert det.transport_stats == {"dropped": 0, "duplicated": 0,
+                                   "delayed": 0, "retransmits": 0}
+
+
+def test_sim_dup_delivery_suppressed_exactly_once():
+    """Satellite: an aggressive dup window over the whole arrival span —
+    every duplicated submit/migration must be suppressed by the
+    per-request delivery epoch at the instance boundary: no request
+    completes twice, none leaks KVC."""
+    cs = _mk_sim(
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=0.0, kind="dup", target=-1, duration=50.0,
+                       frac=1.0)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=0.5))
+    res = cs.run(_sim_trace(80, rate=8.0))
+    cons = res.conservation()
+    assert cons["ok"], cons
+    assert cons["duplicate_completions"] == 0
+    assert res.n_dup_deliveries >= 1          # the window actually bit
+    # judge also dups heartbeats (harmless: last-beat keeps the max), so
+    # the verdict count bounds the suppressed-delivery count from above
+    assert res.transport_stats["duplicated"] >= res.n_dup_deliveries
+    assert cons["completed"] + cons["aborted"] == 80
+
+
+def test_sim_dropped_beats_false_suspect_reinstated_without_loss():
+    """A drop window long enough to breach patience but shorter than the
+    lease: the instance is falsely suspected, keeps stepping, and is
+    reinstated by its first post-window beat — nothing aborted."""
+    cs = _mk_sim(
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=2.0, kind="drop", target=0, duration=6.0,
+                       frac=1.0)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=0.5))
+    res = cs.run(_sim_trace(120))
+    cons = res.conservation()
+    assert cons["ok"] and cons["aborted"] == 0, cons
+    assert res.n_false_suspects >= 1
+    pairs = [(frm, to) for _, iid, frm, to in res.detector_transitions
+             if iid == 0]
+    assert (HEALTHY, SUSPECT) in pairs and (SUSPECT, HEALTHY) in pairs
+    assert (SUSPECT, DEAD) not in pairs       # never escalated to dead
+
+
+def test_sim_kill_detected_not_declared_and_recovered():
+    """A kill only silences the instance (``crashed``); the detector must
+    walk it HEALTHY -> SUSPECT -> DEAD on missed beats / lease expiry and
+    the fleet must recover its stranded work."""
+    cs = _mk_sim(
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=4.0, kind="kill", target=1)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=0.5))
+    res = cs.run(_sim_trace(150))
+    cons = res.conservation()
+    assert cons["ok"], cons
+    assert res.n_recovered >= 1
+    pairs = [(frm, to) for _, iid, frm, to in res.detector_transitions
+             if iid == 1]
+    assert pairs == [(HEALTHY, SUSPECT), (SUSPECT, DEAD)]
+    # no oracle: the lease (measured from the victim's last beat, which
+    # lands within one beat period of the kill) must expire first
+    suspect_t, dead_t = [t for t, iid, _, to in res.detector_transitions
+                         if iid == 1]
+    assert 4.0 < suspect_t < dead_t
+    assert dead_t >= 4.0 + 10.0 - 1.0         # lease - one beat period
+
+
+def test_sim_shed_retry_rescues_on_feasible_peer():
+    """Rung-4 sheds born of an asymmetric squeeze must be re-routed to
+    the peer whose KVC can still fund the frozen demand — terminal shed
+    only if nobody can."""
+    scfg = SchedulerConfig(kvc_tokens=2048)
+    cs = _mk_sim(
+        n_instances=2, scfg=scfg,
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=2.0, kind="squeeze", target=0, frac=0.8)]),
+        recovery=RecoveryConfig(max_retries=4, backoff_base=0.5,
+                                shed_retry=True))
+    res = cs.run(_sim_trace(80, rate=8.0))
+    cons = res.conservation()
+    assert cons["ok"] and cons["aborted"] == 0, cons
+    assert res.n_shed_reroutes >= 1           # the squeeze actually shed
+    assert res.n_shed_rescued >= 1            # and a peer funded it
+    assert res.n_shed_terminal == 0           # nothing lost for good
+
+
+# --------------------------------------------------------------------- #
+# EngineFleet: identity, false suspect, detected kill, shed rescue
+# --------------------------------------------------------------------- #
+def test_fleet_detector_fault_free_identity(tiny_cfg):
+    """Acceptance: detector on, no faults — token streams bitwise-equal
+    to the plain fleet, zero transport perturbations, clean audit."""
+    plain = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0)
+    ref_reqs = plain.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=14))
+
+    fleet = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256, rl_accuracy=1.0,
+                        detector=DetectorConfig())
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=14))
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    assert fleet.detector.transitions == []
+    tr = fleet.transport
+    assert (tr.n_dropped, tr.n_duplicated, tr.n_delayed) == (0, 0, 0)
+    assert check_fleet_invariants(fleet)["ok"]
+    assert fleet.conservation()["dup_deliveries"] == 0
+
+
+def test_fleet_dropped_beats_false_suspect_keeps_working(tiny_cfg):
+    """Beats lost on the wire suspect a perfectly healthy instance: it
+    must keep stepping its batch, take no new routes while suspected,
+    and be reinstated with all work intact — streams equal fault-free."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=2, router="least-kvc", seed=0,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=2.0, kind="drop", target=1, duration=6.0,
+                       frac=1.0)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=8, lo=6, hi=14)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=14))
+    assert fleet.detector.n_reinstated >= 1
+    assert all(i.alive for i in fleet.instances)
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["aborted"] == 0, cons
+    assert check_fleet_invariants(fleet)["ok"]
+
+
+def test_fleet_kill_detected_recovers_token_equal(tiny_cfg):
+    """The kill is silent (``crashed`` only); detection must declare the
+    instance dead after the lease, reclaim its work, and reproduce the
+    fault-free streams bit-for-bit with an exactly-once audit."""
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=3, router="least-kvc", seed=0,
+        max_batch=4, capacity=256, rl_accuracy=1.0,
+        detector=DetectorConfig(),
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=6.0, kind="kill", target=1)]),
+        recovery=RecoveryConfig(max_retries=3, backoff_base=1.0))
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=256, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=8, lo=6, hi=14)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=14))
+    inst = fleet.instances[1]
+    assert inst.crashed and inst.health == DEAD
+    pairs = [(frm, to) for _, iid, frm, to in fleet.detector.transitions
+             if iid == 1]
+    assert pairs == [(HEALTHY, SUSPECT), (SUSPECT, DEAD)]
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["aborted"] == 0 and cons["shed"] == 0, cons
+    rep = check_fleet_invariants(fleet)
+    assert rep["ok"] and rep["dup_completions"] == 0
+
+
+def test_fleet_shed_retry_rescues_rung4(tiny_cfg):
+    """An asymmetric squeeze sheds rung-4 ``kvc-infeasible`` requests on
+    the starved instance; the fleet tier must re-route each to the peer
+    whose KVC can fund it — everything completes, bitwise-equal to a
+    pressure-free run."""
+    scfg = SchedulerConfig(kvc_tokens=224, block_size=16, tfs=128,
+                           max_model_len=128, max_batch_reqs=4)
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=2, router="least-kvc", seed=0,
+        max_batch=4, capacity=128, rl_accuracy=1.0, scheduler_cfg=scfg,
+        faults=FaultInjector(schedule=[
+            FaultEvent(t=3.0, kind="squeeze", target=0, frac=0.6)]),
+        recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                shed_retry=True))
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=0)
+    ref_reqs = _gen_reqs(tiny_cfg, n=10, lo=8, hi=16)
+    ref.run(ref_reqs)
+
+    reqs = fleet.run(_gen_reqs(tiny_cfg, n=10, lo=8, hi=16))
+    cons = fleet.conservation()
+    assert cons["ok"] and cons["shed"] == 0 and cons["aborted"] == 0, cons
+    assert fleet.n_shed_reroutes >= 1 and fleet.n_shed_rescued >= 1
+    assert [g.output for g in reqs] == [g.output for g in ref_reqs]
+    assert check_fleet_invariants(fleet)["ok"]

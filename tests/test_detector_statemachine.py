@@ -1,0 +1,108 @@
+"""Property-based state machine over the failure-detector health
+lifecycle.
+
+Drives random interleavings of clock advances, heartbeats, silent
+crashes, and detection passes, and checks after every rule that the
+observed-health automaton never misbehaves: transitions never skip a
+state (HEALTHY -> DEAD requires passing through SUSPECT), DEAD is final
+(a fenced zombie's late beat never resurrects it), and the router can
+never be handed a SUSPECT or DEAD instance. Skips cleanly when
+``hypothesis`` is not installed — the deterministic lifecycle tests in
+``test_cluster_detector.py`` cover the same surface example-by-example.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st      # noqa: E402
+from hypothesis.stateful import (RuleBasedStateMachine,  # noqa: E402
+                                 invariant, rule)
+
+from repro.cluster.base import (DEAD, DetectorConfig,  # noqa: E402
+                                FailureDetector, HEALTHY, InstanceBase,
+                                SUSPECT)
+from repro.cluster.transport import BEAT, DETECTOR, Transport  # noqa: E402
+
+N_INST = 3
+IDS = st.integers(min_value=0, max_value=N_INST - 1)
+
+# legal edges of the observed-health automaton; everything else —
+# notably HEALTHY -> DEAD (skipping suspicion) and DEAD -> anything
+# (resurrection) — is a bug
+LEGAL = {(HEALTHY, SUSPECT), (SUSPECT, HEALTHY), (SUSPECT, DEAD)}
+
+
+class DetectorLifecycleMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.cfg = DetectorConfig(beat_every=1.0, patience=3.0,
+                                  lease=10.0)
+        self.transport = Transport(seed=0)
+        self.det = FailureDetector(self.cfg, self.transport)
+        self.instances = [InstanceBase(i) for i in range(N_INST)]
+        self.now = 0.0
+        self.ever_dead = set()           # ids once declared dead
+        self.n_seen = 0                  # transitions already audited
+        for inst in self.instances:      # all beat once at t=0
+            self.transport.send(DETECTOR, BEAT, inst.id, 0.0,
+                                link=inst.id)
+        self.det.observe(0.0, self.instances)
+
+    # -- rules ---------------------------------------------------------- #
+    @rule(dt=st.floats(min_value=0.1, max_value=6.0,
+                       allow_nan=False, allow_infinity=False))
+    def advance(self, dt):
+        self.now += dt
+
+    @rule(iid=IDS)
+    def beat(self, iid):
+        inst = self.instances[iid]
+        inst.maybe_beat(self.transport, self.now, self.cfg.beat_every)
+
+    @rule(iid=IDS)
+    def crash(self, iid):
+        # ground truth only: the instance falls silent, health is still
+        # whatever the detector last observed
+        self.instances[iid].crashed = True
+
+    @rule(iid=IDS)
+    def zombie_beat(self, iid):
+        # a fenced zombie (or a partition healing after the lease) may
+        # still emit late beats; they must never resurrect a DEAD peer
+        self.transport.send(DETECTOR, BEAT, iid, self.now, link=iid)
+
+    @rule()
+    def observe(self):
+        newly = self.det.observe(self.now, self.instances)
+        for iid in newly:
+            self.ever_dead.add(iid)
+
+    # -- invariants audited after every rule ----------------------------- #
+    @invariant()
+    def transitions_never_skip_states(self):
+        fresh = self.det.transitions[self.n_seen:]
+        self.n_seen = len(self.det.transitions)
+        for _, _, frm, to in fresh:
+            assert (frm, to) in LEGAL, (frm, to)
+
+    @invariant()
+    def dead_is_final(self):
+        for iid in self.ever_dead:
+            assert self.instances[iid].health == DEAD
+
+    @invariant()
+    def never_route_to_degraded(self):
+        for inst in self.instances:
+            if inst.health != HEALTHY:
+                assert not inst.accepts_prompts()
+                assert not inst.accepts_decodes()
+
+    @invariant()
+    def transition_log_times_monotone(self):
+        ts = [t for t, _, _, _ in self.det.transitions]
+        assert ts == sorted(ts)
+
+
+DetectorLifecycleMachine.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None)
+TestDetectorLifecycle = DetectorLifecycleMachine.TestCase
