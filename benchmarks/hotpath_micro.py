@@ -925,6 +925,114 @@ def bench_swap(seed: int = 0) -> Dict:
     }
 
 
+def bench_metrics(decode_iters: int = 120, seed: int = 0) -> Dict:
+    """Metrics plane is free (counter-based, gated by --check): the same
+    online stream runs twice — metrics-off and with a per-iteration
+    ``MetricsSampler`` attached — and three things must hold:
+
+      * **bitwise identity** — the greedy token streams are equal: the
+        sampler reads engine state, never influences control flow;
+      * **zero added syncs** — total ``sync_counts`` are identical.
+        Drain classification is enqueue-time deterministic (dispatch
+        sequence numbers, PR 9), so totals compare exactly, not just in
+        aggregate bands: a sampler that snuck in a fresh ``device_get``
+        would show up as +1 here;
+      * **bounded overhead** — the sampler's self-measured wall clock
+        (``sample_time``, accumulated inside ``on_step``) stays under 5%
+        of the steady decode-loop section it ran in. Self-measurement is
+        robust on noisy shared runners where a paired A/B wall-clock
+        comparison of two ~identical runs is not.
+
+    The metrics-on registry must also export: Prometheus text that
+    parses back and contains the headline families, and a frozen
+    snapshot whose counters match the engine's own totals.
+    """
+    import numpy as np
+    from repro.configs import get_config
+    from repro.obs import (MetricsRegistry, MetricsSampler,
+                           parse_prometheus_text, to_prometheus_text)
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+    mb, warmup = 8, 10
+
+    out: Dict = {}
+    streams = {}
+    reg = None
+    eng_on = sampler_on = None
+    for label in ("metrics_off", "metrics_on"):
+        eng = ServingEngine(cfg, max_batch=mb, capacity=512,
+                            rl_accuracy=1.0, seed=seed)
+        sampler = None
+        if label == "metrics_on":
+            reg = MetricsRegistry()
+            sampler = MetricsSampler(reg, instance="0").attach(eng)
+            eng_on, sampler_on = eng, sampler
+        rng = np.random.default_rng(seed)
+        reqs = [GenRequest(prompt=list(rng.integers(0, cfg.vocab_size, 16)),
+                           params=SamplingParams(
+                               max_new_tokens=decode_iters + warmup + 48))
+                for _ in range(mb)]
+        t = 0.0
+        for g in reqs:
+            eng.submit(g, t)
+        for _ in range(warmup):                 # prefill + compile
+            t += 1.0
+            eng.step(t)
+        base_sample_s = sampler.sample_time if sampler else 0.0
+        t0 = time.perf_counter()
+        for _ in range(decode_iters):           # steady decode section
+            t += 1.0
+            eng.step(t)
+        wall = time.perf_counter() - t0
+        while eng.has_work() and t < 5000:      # drain for token equality
+            t += 1.0
+            eng.step(t)
+        eng.flush()
+        streams[label] = [g.output for g in reqs]
+        out[label] = {
+            "decode_wall_s": round(wall, 4),
+            "total_syncs": sum(eng.sync_counts.values()),
+            "sync_counts": dict(eng.sync_counts),
+        }
+        if sampler is not None:
+            sample_s = sampler.sample_time - base_sample_s
+            out[label]["sampler_ticks"] = sampler.n_samples
+            out[label]["sampler_seconds_in_section"] = round(sample_s, 5)
+            out[label]["sampler_overhead_frac"] = round(sample_s / wall, 5)
+
+    out["tokens_equal"] = streams["metrics_off"] == streams["metrics_on"]
+    out["added_syncs"] = (out["metrics_on"]["total_syncs"]
+                          - out["metrics_off"]["total_syncs"])
+
+    sampler_on.on_step(eng_on, 0.0)    # final scrape: cover flush()
+    snap = reg.snapshot()
+    text = to_prometheus_text(snap)
+    try:
+        parsed = parse_prometheus_text(text)
+        prom_ok = all(any(k.startswith(fam) for k in parsed) for fam in (
+            "engine_kvc_occupied_blocks", "scheduler_queue_depth",
+            "megastep_dispatch_amortization", "engine_host_syncs_total",
+            "engine_blocking_syncs_total"))
+    except ValueError as e:
+        prom_ok = False
+        out["prometheus_error"] = str(e)
+    # registry counters must agree with the engine's own totals
+    snap_syncs = sum(
+        snap.get("engine_host_syncs_total", instance="0", kind=k) or 0
+        for k in eng_on.sync_counts)
+    out["prometheus_parses"] = prom_ok
+    out["snapshot_syncs_match_engine"] = \
+        snap_syncs == sum(eng_on.sync_counts.values())
+    out["metrics_ok"] = bool(
+        out["tokens_equal"] and out["added_syncs"] == 0
+        and out["metrics_on"]["sampler_overhead_frac"] < 0.05
+        and prom_ok and out["snapshot_syncs_match_engine"])
+    return out
+
+
 # --------------------------------------------------------------------- #
 # 7. kernel: single- vs multi-page step time + DMA early-exit accounting
 # --------------------------------------------------------------------- #
@@ -1029,6 +1137,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "prefill": bench_prefill_retraces(n=8 if quick else 24),
         "cluster": bench_cluster(n_reqs=8, sim_reqs=200 if quick else 400),
         "swap": bench_swap(),
+        "metrics": bench_metrics(decode_iters=60 if quick else 120),
         "chaos": bench_chaos(n_reqs=8),
         "detector": bench_detector(),
         "kernel": bench_kernel(reps=2 if quick else 3),
@@ -1098,6 +1207,7 @@ def check_regression(factor: float = 2.0,
     res["cluster"] = bench_cluster(n_reqs=8, sim_reqs=200)
     res["form_batch"] = bench_form_batch(n_reqs=2_000, iters=15)
     res["swap"] = bench_swap()
+    res["metrics"] = bench_metrics(decode_iters=60)
     # chaos runs LAST: it spins up several fleets of engines, and that
     # churn collapses the scheduler bench's measured regime (the
     # quick_reference order must stay a prefix of this rerun's order)
@@ -1216,6 +1326,21 @@ def check_regression(factor: float = 2.0,
         failures.append(f"swap: host-offload KV swap gate failed — "
                         f"pressure={sw['pressure']}, "
                         f"steady={sw['steady']}")
+    # metrics plane: metrics-on must be bitwise-identical to metrics-off
+    # (token streams AND total sync counts — zero added blocking syncs),
+    # sampler overhead < 5% of the decode-loop section, and the registry
+    # must export parseable Prometheus text whose counters match the
+    # engine's own totals. Hard gates, counter-based.
+    mt = res["metrics"]
+    if not mt["metrics_ok"]:
+        failures.append(
+            f"metrics: zero-overhead sampler gate failed — "
+            f"tokens_equal={mt['tokens_equal']}, "
+            f"added_syncs={mt['added_syncs']}, "
+            f"overhead={mt['metrics_on']['sampler_overhead_frac']}, "
+            f"prometheus_parses={mt['prometheus_parses']}, "
+            f"snapshot_syncs_match_engine="
+            f"{mt['snapshot_syncs_match_engine']}")
     blocking = res["decode_loop"]["async_device"]["blocking_syncs_per_iter"]
     if blocking > 0.05:
         # warn-only: blocking drains also happen when a slow/loaded runner
@@ -1238,7 +1363,10 @@ def check_regression(factor: float = 2.0,
           f"{res['packed_chunk']['dispatches_saved']} dispatches, chunked "
           f"TTFT bounded, cluster conservation + migration equality hold, "
           f"swap tier restored {res['swap']['pressure']['restores']} "
-          f"host images sync-free, chaos battery (kill recovery + "
+          f"host images sync-free, metrics sampler bitwise-free "
+          f"({res['metrics']['metrics_on']['sampler_overhead_frac']:.1%} "
+          f"of the decode loop, 0 added syncs), chaos battery (kill "
+          f"recovery + "
           f"KV-corruption rejection + squeeze absorption) green, "
           f"detector battery (bitwise identity + false-suspect "
           f"reinstatement + {res['detector']['chaos']['shed_rescued']} "

@@ -1,0 +1,246 @@
+"""Diurnal trace replayer: the metrics plane's judgement harness.
+
+Replays a large synthetic request log (default 100k requests) through
+``ClusterSim`` with a *diurnal* arrival process — a sinusoidal day/night
+rate ramp with Poisson flash-crowd bursts on top (``traces.DiurnalSpec``)
+and the usual heavy-tailed lognormal prompt/response lengths — while
+recording fleet state into the ``repro.obs`` registry:
+
+  * per-sample gauges → ``TimeSeriesLog``: instantaneous goodput,
+    windowed TTFT/TPOT means, arrival rate, queue depths, running
+    requests, KVC allocated fraction per instance;
+  * per-completion observations → registry histograms
+    (``replay_ttft_seconds``, ``replay_tpot_seconds``,
+    ``replay_jct_seconds``);
+  * end-of-run → the full ``ClusterSim.publish_metrics`` family set,
+    exported as Prometheus text + JSON snapshot.
+
+Exit is non-zero unless the conservation audit is green (every routed
+request reaches exactly one terminal state, zero double routes) and the
+requested request count was actually replayed — this is the CI judge for
+the observability PR, wired into the hotpath job as ``--tiny``.
+
+Usage:
+    python -m benchmarks.trace_replay                # full 100k replay
+    python -m benchmarks.trace_replay --tiny         # CI smoke (~2k)
+    python -m benchmarks.trace_replay --out DIR      # write exports
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core import predictor, traces
+from repro.core.registry import make_scheduler, needs_oracle_rl
+from repro.core.scheduler import SchedulerConfig
+from repro.cluster.sim import ClusterSim
+from repro.obs import (MetricsRegistry, TimeSeriesLog, to_prometheus_text,
+                       parse_prometheus_text, write_json_snapshot,
+                       write_prometheus)
+
+from .common import ACCURACY, PAD_RATIOS, cost_model, sched_config
+
+DEFAULT_BUCKETS_S = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+                     100.0)
+
+
+class ReplayRecorder:
+    """The ``on_sample`` hook: harvests completions since the last tick
+    into registry histograms and appends one point per gauge series to
+    the ``TimeSeriesLog``."""
+
+    def __init__(self, registry: MetricsRegistry, log: TimeSeriesLog):
+        self.registry = registry
+        self.log = log
+        self.ttft = registry.histogram(
+            "replay_ttft_seconds", "time to first token",
+            buckets=DEFAULT_BUCKETS_S)
+        self.tpot = registry.histogram(
+            "replay_tpot_seconds", "mean time per output token",
+            buckets=tuple(b / 50 for b in DEFAULT_BUCKETS_S))
+        self.jct = registry.histogram(
+            "replay_jct_seconds", "job completion time",
+            buckets=DEFAULT_BUCKETS_S)
+        self.goodput_g = registry.gauge(
+            "replay_goodput_rps", "SLO-met completions per second over "
+            "the last sample window")
+        self.arrival_g = registry.gauge(
+            "replay_arrival_rate_rps", "arrivals routed per second over "
+            "the last sample window")
+        self._n_done: Dict[int, int] = {}
+        self._last_t = 0.0
+        self._last_routed = 0
+        self.n_samples = 0
+
+    def __call__(self, t: float, cs: ClusterSim) -> None:
+        self.n_samples += 1
+        window = max(1e-9, t - self._last_t)
+        met = done = 0
+        sum_ttft = n_ttft = 0.0
+        for inst in cs.instances:
+            comp = inst.sim.scheduler.completed
+            start = self._n_done.get(inst.id, 0)
+            for r in comp[start:]:
+                done += 1
+                met += r.met_slo
+                self.jct.unlabeled.observe(r.jct)
+                if r.t_first_token is not None:
+                    ttft = r.t_first_token - r.arrival
+                    self.ttft.unlabeled.observe(ttft)
+                    sum_ttft += ttft
+                    n_ttft += 1
+                    if r.generated > 1 and r.t_complete is not None:
+                        self.tpot.unlabeled.observe(
+                            (r.t_complete - r.t_first_token)
+                            / (r.generated - 1))
+            self._n_done[inst.id] = len(comp)
+        self.goodput_g.unlabeled.set(met / window)
+        self.arrival_g.unlabeled.set(
+            (len(cs.route_of) - self._last_routed) / window)
+        self._last_routed = len(cs.route_of)
+        self._last_t = t
+
+        point = {"replay_goodput_rps": met / window,
+                 "replay_completions_window": done,
+                 "replay_ttft_mean_s":
+                     (sum_ttft / n_ttft) if n_ttft else 0.0,
+                 "replay_arrival_rate_rps": self.arrival_g.unlabeled.value}
+        for inst in cs.instances:
+            sched = inst.sim.scheduler
+            i = inst.id
+            point[f'scheduler_queue_depth{{instance="{i}",queue="pt"}}'] \
+                = len(sched.pt_queue)
+            point[f'scheduler_queue_depth{{instance="{i}",queue="gt"}}'] \
+                = len(sched.gt_queue)
+            point[f'scheduler_running_requests{{instance="{i}"}}'] = sum(
+                len(g.members) for g in sched.running_groups)
+            point[f'kvc_allocated_frac{{instance="{i}"}}'] = \
+                sched.kvc.allocated_frac
+        self.log.record(t, point)
+
+
+def replay(n: int = 100_000, sched: str = "econoserve",
+           trace: str = "alpaca", n_instances: int = 2,
+           router: str = "least-kvc", rate: Optional[float] = None,
+           seed: int = 0, n_samples: int = 400,
+           max_iters: int = 20_000_000,
+           diurnal: Optional[traces.DiurnalSpec] = None):
+    """Generate, annotate and replay; returns (result, registry, log,
+    recorder, wall_seconds)."""
+    spec = traces.TRACES[trace]
+    rate = rate if rate is not None else spec.rate
+    dspec = diurnal or traces.DiurnalSpec()
+    reqs = traces.generate_diurnal(spec, n, seed=seed, rate=rate,
+                                   diurnal=dspec)
+    span = reqs[-1].arrival if reqs else 1.0
+
+    cfg = sched_config(trace)
+    cost = cost_model()
+    reqs = copy.deepcopy(reqs)
+    if needs_oracle_rl(sched):
+        pred = predictor.OraclePredictor(cfg.bucket)
+        predictor.annotate(reqs, pred, 0.0, cfg.bucket)
+    else:
+        pred = predictor.NoisyPredictor(accuracy=ACCURACY[trace],
+                                        bucket=cfg.bucket, seed=seed)
+        predictor.annotate(reqs, pred, PAD_RATIOS[trace], cfg.bucket)
+
+    registry = MetricsRegistry()
+    log = TimeSeriesLog()
+    rec = ReplayRecorder(registry, log)
+    cs = ClusterSim(lambda i: make_scheduler(sched, cfg, cost), cost,
+                    n_instances=n_instances, router=router, seed=seed,
+                    name=f"replay-{sched}-x{n_instances}")
+    t0 = time.perf_counter()
+    res = cs.run(reqs, max_iters=max_iters,
+                 sample_every=span / max(1, n_samples), on_sample=rec)
+    wall = time.perf_counter() - t0
+    cs.publish_metrics(registry)
+    registry.counter("replay_requests_total", "requests in the replayed "
+                     "log").unlabeled.inc_to(len(reqs))
+    registry.gauge("replay_trace_span_seconds",
+                   "arrival span of the log").unlabeled.set(span)
+    return res, registry, log, rec, wall
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--n", type=int, default=100_000,
+                    help="requests to replay (default 100000)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 2000 requests, 60 samples")
+    ap.add_argument("--sched", default="econoserve")
+    ap.add_argument("--trace", default="alpaca",
+                    choices=sorted(traces.TRACES))
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--router", default="least-kvc")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="base arrival rate (default: the trace's)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=400,
+                    help="time-series sample points over the replay")
+    ap.add_argument("--out", default=None,
+                    help="directory for metrics.prom / metrics.json / "
+                         "timeseries.json")
+    args = ap.parse_args(argv)
+    n = 2_000 if args.tiny else args.n
+    n_samples = 60 if args.tiny else args.samples
+
+    print(f"replaying {n} {args.trace} requests (diurnal + bursts) "
+          f"through {args.sched} x{args.instances} ...")
+    res, registry, log, rec, wall = replay(
+        n=n, sched=args.sched, trace=args.trace,
+        n_instances=args.instances, router=args.router, rate=args.rate,
+        seed=args.seed, n_samples=n_samples)
+
+    cons = res.conservation()
+    snap = registry.snapshot()
+    ttft = snap.get("replay_ttft_seconds")
+    print(f"  wall {wall:.1f}s  trace-span {res.wall_time:.0f}s  "
+          f"goodput {res.goodput:.2f}/s  ssr {res.ssr:.3f}")
+    print(f"  completed {len(res.completed)}  aborted "
+          f"{len(res.aborted)}  migrations {res.n_migrations}  "
+          f"samples {rec.n_samples}")
+    if ttft is not None and ttft.count:
+        print(f"  ttft mean {ttft.sum / ttft.count:.3f}s over "
+              f"{ttft.count} first tokens")
+    print(f"  conservation: {cons}")
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        prom = os.path.join(args.out, "metrics.prom")
+        write_prometheus(snap, prom)
+        parse_prometheus_text(open(prom).read())   # self-check
+        write_json_snapshot(snap, os.path.join(args.out, "metrics.json"),
+                            extra={"conservation": cons,
+                                   "wall_seconds": wall})
+        log.write(os.path.join(args.out, "timeseries.json"))
+        print(f"  wrote {args.out}/metrics.prom, metrics.json, "
+              f"timeseries.json")
+
+    ok = True
+    if not cons["ok"]:
+        print("FAIL: conservation audit violated")
+        ok = False
+    if cons["routed"] < n:
+        print(f"FAIL: only routed {cons['routed']}/{n} requests")
+        ok = False
+    if rec.n_samples < min(10, n_samples):
+        print(f"FAIL: only {rec.n_samples} time-series samples recorded")
+        ok = False
+    series = log.to_json()["series"]
+    if "replay_goodput_rps" not in series:
+        print("FAIL: goodput series missing")
+        ok = False
+    print("trace_replay OK" if ok else "trace_replay FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,8 +44,22 @@ the direct path: the transport draws zero rng samples.
       --chaos kill@25:1
   PYTHONPATH=src python examples/serve_trace.py --cluster 2 --tiny \\
       --kvc-tokens 256 --chaos squeeze@20:0/0.5,squeeze@20:1/0.5
+``--metrics PATH`` attaches a per-iteration ``MetricsSampler`` to every
+engine (zero added blocking host syncs: device values come only from the
+existing lag-N drain ring, host values at the step boundary the engine
+already takes — ``hotpath_micro --check`` gates that metrics-on token
+streams are bitwise-identical to metrics-off) and writes ``PATH.json``
+(JSON snapshot) plus ``PATH.prom`` (Prometheus text, parsed back as a
+self-check) at exit. Composes with ``--chaos``/``--detect``: the
+fault-free reference runs metrics-off, so the token-equality gate also
+proves the samplers changed nothing. The per-request report (TTFT,
+KVC accounting) is itself read back from a registry snapshot — the
+same families the dumps contain.
+
   PYTHONPATH=src python examples/serve_trace.py --cluster 3 --tiny \\
       --detect --chaos "drop@6:1/0.6,dup@14:2/0.6,kill@25:0"
+  PYTHONPATH=src python examples/serve_trace.py --cluster 2 --tiny \\
+      --chaos kill@25:1 --metrics /tmp/serve_metrics
 """
 import argparse
 import time
@@ -57,7 +71,20 @@ from repro.cluster import (DetectorConfig, EngineFleet, RecoveryConfig,
                            parse_chaos_spec)
 from repro.configs import get_config
 from repro.core.scheduler import SchedulerConfig
+from repro.obs import (MetricsRegistry, MetricsSampler,
+                       parse_prometheus_text, write_json_snapshot,
+                       write_prometheus)
 from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+def hist_quantile(h, q):
+    """Bucket-resolution quantile from a HistogramValue snapshot (the
+    first edge whose cumulative count covers the target rank)."""
+    target = q * h.count
+    for le, cum in h.buckets:
+        if cum >= target:
+            return le
+    return float("inf")
 
 
 def make_requests(cfg, n, rate, seed):
@@ -105,6 +132,10 @@ def main():
                          "small values saturate the cache so pressure-"
                          "ladder smokes (e.g. --chaos squeeze@...) "
                          "actually bite")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="attach per-iteration metrics samplers (zero "
+                         "added blocking syncs) and write PATH.json + "
+                         "PATH.prom registry dumps at exit")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="mean arrivals per engine iteration")
     ap.add_argument("--tiny", action="store_true",
@@ -148,6 +179,13 @@ def main():
     else:
         server = ServingEngine(cfg, seed=args.seed, **kw)
 
+    reg = MetricsRegistry()
+    if args.metrics:
+        if isinstance(server, EngineFleet):
+            server.attach_metrics(reg)
+        else:
+            MetricsSampler(reg, instance="0").attach(server)
+
     ref_out = None
     if args.chaos:
         # fault-free reference on the same parameters: the chaotic run's
@@ -174,24 +212,54 @@ def main():
         extra = (f"cluster={n_inst} router={args.router} "
                  f"migrations={cons['migrations']} "
                  f"conservation_ok={cons['ok']}")
-        kvcs = [i.engine.scheduler.kvc for i in server.instances]
+        iids = [str(i.id) for i in server.instances]
     else:
         completed = server.scheduler.completed
         cons = None
         extra = "single-engine"
-        kvcs = [server.scheduler.kvc]
-    ttfts = sorted(r.t_first_token - r.arrival for r in completed
-                   if r.t_first_token is not None)
+        iids = ["0"]
+
+    # the per-request report is read back from a registry snapshot — the
+    # same publication path debug_state and the --metrics dumps use, so
+    # what's printed can never drift from what's exported
+    server.publish_metrics(reg)
+    ttft_h = reg.histogram(
+        "report_ttft_iterations", "per-request time to first token on "
+        "the iteration clock", buckets=(1, 2, 5, 10, 25, 50, 100, 250))
+    for r in completed:
+        if r.t_first_token is not None:
+            ttft_h.unlabeled.observe(r.t_first_token - r.arrival)
+    reg.gauge("report_served_requests",
+              "requests that reached DONE").unlabeled.set(done)
+    reg.gauge("report_generated_tokens",
+              "tokens generated across all requests").unlabeled.set(toks)
+    reg.gauge("report_wall_seconds", "serve wall time").unlabeled.set(dt)
+    snap = reg.snapshot()
+
+    ttft = snap.get("report_ttft_iterations")
     print(f"arch={cfg.name} impl={args.impl} variant={args.variant} {extra}")
     print(f"served {done}/{args.n} requests / {toks} tokens in {dt:.1f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s on CPU)")
-    if ttfts:
-        p95 = ttfts[min(len(ttfts) - 1, int(0.95 * len(ttfts)))]
-        print(f"TTFT (iterations): mean={np.mean(ttfts):.1f} "
-              f"p50={ttfts[len(ttfts) // 2]:.1f} p95={p95:.1f}")
-    fails = sum(k.n_failures for k in kvcs)
-    print(f"KVC accounting: failures={fails}, "
-          f"alloc_frac={[round(k.allocated_frac, 2) for k in kvcs]}")
+    if ttft.count:
+        print(f"TTFT (iterations): mean={ttft.sum / ttft.count:.1f} "
+              f"p50<={hist_quantile(ttft, 0.5):.0f} "
+              f"p95<={hist_quantile(ttft, 0.95):.0f}")
+    fails = sum(snap.get("kvc_alloc_failures_total", instance=i) or 0
+                for i in iids)
+    fracs = [round(snap.get("kvc_allocated_frac", instance=i) or 0.0, 2)
+             for i in iids]
+    print(f"KVC accounting: failures={fails:.0f}, alloc_frac={fracs}")
+
+    if args.metrics:
+        write_json_snapshot(snap, args.metrics + ".json",
+                            extra={"argv": vars(args)})
+        write_prometheus(snap, args.metrics + ".prom")
+        with open(args.metrics + ".prom") as fh:
+            parse_prometheus_text(fh.read())     # export self-check
+        n_sampled = sum(snap.get("sampler_samples_total", instance=i) or 0
+                        for i in iids)
+        print(f"metrics: wrote {args.metrics}.json / .prom "
+              f"({n_sampled:.0f} sampler ticks)")
 
     if args.chaos:
         report = check_fleet_invariants(server)

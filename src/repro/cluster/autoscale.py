@@ -106,6 +106,23 @@ class GoodputAutoscaler:
         self._up_streak = self._down_streak = 0
         return 0
 
+    def publish_metrics(self, registry) -> None:
+        """Publish attainment + action counters into a ``repro.obs``
+        registry."""
+        att = self.attainment
+        registry.gauge("autoscaler_attainment_ratio",
+                       "rolling SLO attainment (None -> -1: window too "
+                       "small to act on)") \
+            .unlabeled.set(-1.0 if att is None else att)
+        registry.gauge("autoscaler_window_completions",
+                       "completions in the attainment window") \
+            .unlabeled.set(len(self._met))
+        up = sum(1 for _, d in self.events if d > 0)
+        fam = registry.counter("autoscaler_actions_total",
+                               "scale actions executed", ("direction",))
+        fam.labels(direction="up").inc_to(up)
+        fam.labels(direction="down").inc_to(len(self.events) - up)
+
     def invalidate(self) -> None:
         """Discard the attainment window and breach streaks — called on an
         instance crash: the window's completions reflect the pre-crash

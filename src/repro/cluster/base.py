@@ -256,6 +256,36 @@ class FailureDetector:
         now = self.last_observed if now is None else now
         return now - self.last_beat.get(iid, float("-inf"))
 
+    def publish_metrics(self, registry, instances: Sequence = ()) -> None:
+        """Publish detection counters (and, per instance, the observed
+        health state + heartbeat age) into a ``repro.obs`` registry.
+        ``detector_health_state`` encodes healthy=0 / suspect=1 / dead=2
+        so a dashboard can alert on any non-zero value."""
+        registry.counter("detector_suspects_total",
+                         "HEALTHY -> SUSPECT transitions") \
+            .unlabeled.inc_to(self.n_suspects)
+        registry.counter("detector_reinstated_total",
+                         "false suspects reinstated by a fresh beat") \
+            .unlabeled.inc_to(self.n_reinstated)
+        registry.counter("detector_declared_dead_total",
+                         "leases expired (final)") \
+            .unlabeled.inc_to(self.n_declared_dead)
+        registry.counter("detector_transitions_total",
+                         "observed health transitions (append-only log)") \
+            .unlabeled.inc_to(len(self.transitions))
+        state_g = registry.gauge("detector_health_state",
+                                 "observed health: healthy=0 suspect=1 "
+                                 "dead=2", ("instance",))
+        age_g = registry.gauge("detector_heartbeat_age_seconds",
+                               "time since the last beat seen",
+                               ("instance",))
+        for inst in instances:
+            state_g.labels(instance=inst.id).set(
+                HEALTH_STATES.index(inst.health))
+            age = self.heartbeat_age(inst.id)
+            if age != float("inf"):
+                age_g.labels(instance=inst.id).set(age)
+
     def next_deadline(self, instances: Sequence) -> float:
         """Earliest future time a detection state could change — the
         discrete-event backend folds this into its event horizon so a

@@ -61,8 +61,9 @@ from repro.serving import GenRequest, RequestShed, ServingEngine
 from repro.serving.engine import serve_stream
 
 from .autoscale import GoodputAutoscaler
-from .base import (DetectorConfig, FailureDetector, HEALTHY, SUSPECT,
-                   InstanceBase, ROLES, execute_autoscale, validate_roles)
+from .base import (DetectorConfig, FailureDetector, HEALTH_STATES,
+                   HEALTHY, SUSPECT, InstanceBase, ROLES,
+                   execute_autoscale, validate_roles)
 from .faults import FaultInjector, RecoveryConfig, backoff_delay
 from .router import Router, make_router
 from .transport import INJECT, SUBMIT, Transport
@@ -156,6 +157,7 @@ class EngineFleet:
         self.double_routes = 0
         self.n_migrations = 0
         self.n_kv_fallbacks = 0
+        self._metrics_registry = None
         self.scale_events: List[Tuple[float, int]] = []
         self._next_id = n_instances
         # crash recovery state
@@ -584,6 +586,10 @@ class EngineFleet:
         iid = self._next_id
         self._next_id += 1
         inst = FleetInstance(iid, self._make_engine(iid), "unified")
+        if self._metrics_registry is not None:
+            from repro.obs import MetricsSampler
+            MetricsSampler(self._metrics_registry,
+                           instance=str(iid)).attach(inst.engine)
         if self.detector is not None:
             inst.detected = True
         if self.recovery.shed_retry:
@@ -627,30 +633,99 @@ class EngineFleet:
                 0 if self.detector is None
                 else len(self.detector.transitions))
 
+    def attach_metrics(self, registry) -> None:
+        """Attach a per-iteration ``MetricsSampler`` to every engine
+        (instances spawned later by the autoscaler are attached in
+        ``_spawn``). Sampling follows the zero-sync contract: device
+        values come only from the lag-N drain ring, host values at the
+        step boundary the engine already takes."""
+        from repro.obs import MetricsSampler
+        self._metrics_registry = registry
+        for inst in self.instances:
+            MetricsSampler(registry,
+                           instance=str(inst.id)).attach(inst.engine)
+
+    def publish_metrics(self, registry) -> None:
+        """Publish the whole fleet — every engine (instance-labelled),
+        instance lifecycle state, routers, fault-tolerance counters,
+        transport and detector — into one ``repro.obs`` registry. This
+        is the single publication path behind ``debug_state`` and the
+        ``--metrics`` exit dumps."""
+        health_g = registry.gauge(
+            "fleet_instance_health", "observed health: healthy=0 "
+            "suspect=1 dead=2", ("instance",))
+        role_g = registry.gauge(
+            "fleet_instance_state", "per-instance lifecycle flags",
+            ("instance", "flag"))
+        for inst in self.instances:
+            inst.engine.publish_metrics(registry, instance=str(inst.id))
+            health_g.labels(instance=inst.id).set(
+                HEALTH_STATES.index(inst.health))
+            role_g.labels(instance=inst.id,
+                          flag="draining").set(int(inst.draining))
+            role_g.labels(instance=inst.id,
+                          flag="crashed").set(int(inst.crashed))
+
+        def c(name, help, value):
+            registry.counter(name, help).unlabeled.inc_to(value)
+
+        c("fleet_migrations_total", "KV migrations (live image or "
+          "recompute fallback)", self.n_migrations)
+        c("fleet_kv_fallbacks_total", "migrations that fell back to "
+          "swap-recompute", self.n_kv_fallbacks)
+        c("fleet_recovered_total", "requests requeued off a dead "
+          "instance", self.n_recovered)
+        c("fleet_salvaged_restores_total", "redeliveries re-seeded from "
+          "a salvaged host-pool image", self.n_salvaged_restores)
+        c("fleet_evacuations_total", "queued work evacuated off a "
+          "suspect", self.n_evacuations)
+        c("fleet_shed_total", "terminal sheds", self.n_shed)
+        c("fleet_deadline_aborts_total", "deadline-infeasible aborts",
+          self.n_deadline_aborts)
+        c("fleet_shed_reroutes_total", "rung-4 hand-backs requeued for "
+          "re-route", self.n_shed_reroutes)
+        c("fleet_shed_rescued_total", "hand-backs delivered to a "
+          "feasible peer", self.n_shed_rescued)
+        c("fleet_double_routes_total", "conservation violations (must "
+          "stay 0)", self.double_routes)
+        registry.gauge("fleet_redeliver_queue_depth",
+                       "recoveries awaiting backoff expiry") \
+            .unlabeled.set(len(self._redeliver))
+        self.router.publish_metrics(registry, side="arrival")
+        self.decode_router.publish_metrics(registry, side="decode")
+        if self.autoscaler is not None:
+            self.autoscaler.publish_metrics(registry)
+        if self.transport is not None:
+            tfam = registry.counter("transport_messages_total",
+                                    "lossy-transport events by kind",
+                                    ("kind",))
+            tfam.labels(kind="dropped").inc_to(self.transport.n_dropped)
+            tfam.labels(kind="duplicated").inc_to(
+                self.transport.n_duplicated)
+            tfam.labels(kind="delayed").inc_to(self.transport.n_delayed)
+            tfam.labels(kind="retransmits").inc_to(
+                self.transport.n_retransmits)
+            registry.gauge("transport_pending_messages",
+                           "messages in flight") \
+                .unlabeled.set(self.transport.pending())
+        if self.detector is not None:
+            self.detector.publish_metrics(registry, self.instances)
+
     def debug_state(self) -> Dict[str, object]:
         """Stall post-mortem: per-instance health *as observed* (detected
-        mode: heartbeat age + crashed ground truth), the injector's
-        fired-event log, and in-flight transport/redelivery queues."""
-        state: Dict[str, object] = {}
-        for inst in self.instances:
-            d = {"health": inst.health,
-                 "role": inst.role,
-                 "draining": inst.draining,
-                 "crashed": inst.crashed,
-                 **inst.engine.debug_state()}
-            if self.detector is not None:
-                d["heartbeat_age"] = self.detector.heartbeat_age(inst.id)
-            state[f"instance_{inst.id}"] = d
-        state["redeliver"] = len(self._redeliver)
+        mode: heartbeat age + crashed ground truth), fault-tolerance
+        counters and in-flight transport/redelivery queues — derived
+        from one registry snapshot (the same publication path live
+        metrics use), so stall diagnostics and metrics can never
+        disagree. The two append-only event logs (fired faults, detector
+        transitions) ride along verbatim: they are post-mortem context,
+        not scalar samples."""
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        self.publish_metrics(reg)
+        state: Dict[str, object] = dict(reg.snapshot().flat())
         if self.faults is not None:
             state["faults_fired"] = list(self.faults.log)
-        if self.transport is not None:
-            state["transport_pending"] = self.transport.pending()
-            state["transport"] = {
-                "dropped": self.transport.n_dropped,
-                "duplicated": self.transport.n_duplicated,
-                "delayed": self.transport.n_delayed,
-                "retransmits": self.transport.n_retransmits}
         if self.detector is not None:
             state["detector_transitions"] = list(self.detector.transitions)
         return state

@@ -49,12 +49,31 @@ class Router:
     def __init__(self, seed: int = 0):
         self.seed = seed
         self._rng = np.random.default_rng(seed)
+        self.n_decisions = 0
+        self.n_tiebreaks = 0
 
     def choose(self, instances: Sequence[InstanceStats],
                demand_tokens: int) -> InstanceStats:
         """Pick one of ``instances`` (non-empty) for a request that is
-        predicted to need ``demand_tokens`` of KVC."""
+        predicted to need ``demand_tokens`` of KVC. Counts the decision,
+        then delegates to the policy's ``_choose``."""
+        self.n_decisions += 1
+        return self._choose(instances, demand_tokens)
+
+    def _choose(self, instances: Sequence[InstanceStats],
+                demand_tokens: int) -> InstanceStats:
         raise NotImplementedError
+
+    def publish_metrics(self, registry, **labels) -> None:
+        """Publish routing counters into a ``repro.obs`` registry."""
+        ln = ("policy",) + tuple(sorted(labels))
+        registry.counter(
+            "router_decisions_total", "routing decisions made",
+            ln).labels(policy=self.name, **labels).inc_to(self.n_decisions)
+        registry.counter(
+            "router_tiebreaks_total", "decisions settled by the seeded "
+            "rng", ln).labels(policy=self.name,
+                              **labels).inc_to(self.n_tiebreaks)
 
     def _pick_min(self, instances: Sequence[InstanceStats],
                   scores: Sequence[float]) -> InstanceStats:
@@ -62,6 +81,7 @@ class Router:
         tied = [i for i, s in enumerate(scores) if s == best]
         if len(tied) == 1:
             return instances[tied[0]]
+        self.n_tiebreaks += 1
         return instances[tied[int(self._rng.integers(len(tied)))]]
 
 
@@ -72,7 +92,7 @@ class RoundRobinRouter(Router):
         super().__init__(seed)
         self._last: Optional[int] = None
 
-    def choose(self, instances, demand_tokens):
+    def _choose(self, instances, demand_tokens):
         ids = sorted(inst.id for inst in instances)
         if self._last is None:
             nxt = ids[0]
@@ -86,7 +106,7 @@ class RoundRobinRouter(Router):
 class LeastOutstandingTokensRouter(Router):
     name = "least-tokens"
 
-    def choose(self, instances, demand_tokens):
+    def _choose(self, instances, demand_tokens):
         return self._pick_min(
             instances, [float(inst.outstanding_tokens())
                         for inst in instances])
@@ -95,7 +115,7 @@ class LeastOutstandingTokensRouter(Router):
 class LeastKVCRouter(Router):
     name = "least-kvc"
 
-    def choose(self, instances, demand_tokens):
+    def _choose(self, instances, demand_tokens):
         scores = []
         for inst in instances:
             cap = max(1, inst.kvc_capacity_tokens())

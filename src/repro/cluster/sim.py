@@ -442,15 +442,78 @@ class ClusterSim:
             execute_autoscale(self.autoscaler, t, self.instances,
                               self._spawn, self.scale_events)
 
+    def publish_metrics(self, registry) -> None:
+        """Publish the cluster — every instance's scheduler+KVC
+        (instance-labelled), routers, autoscaler, detector, transport,
+        and the conservation counters — into a ``repro.obs`` registry.
+        Same families the real ``EngineFleet`` publishes, so dashboards
+        and the trace replayer read one schema for both backends."""
+        health_g = registry.gauge(
+            "fleet_instance_health", "observed health: healthy=0 "
+            "suspect=1 dead=2", ("instance",))
+        from .base import HEALTH_STATES
+        for inst in self.instances:
+            inst.sim.scheduler.publish_metrics(
+                registry, instance=str(inst.id))
+            health_g.labels(instance=inst.id).set(
+                HEALTH_STATES.index(inst.health))
+            registry.gauge(
+                "cluster_pending_deliveries",
+                "routed-but-undelivered requests", ("instance",)) \
+                .labels(instance=inst.id).set(len(inst.pending))
+        self.router.publish_metrics(registry, side="arrival")
+        self.decode_router.publish_metrics(registry, side="decode")
+        if self.autoscaler is not None:
+            self.autoscaler.publish_metrics(registry)
+
+        def c(name, help, value):
+            registry.counter(name, help).unlabeled.inc_to(value)
+
+        c("cluster_routed_total", "requests routed", len(self.route_of))
+        c("cluster_migrations_total", "prefill->decode KV migrations",
+          self.n_migrations)
+        c("cluster_double_routes_total", "conservation violations "
+          "(must stay 0)", self.double_routes)
+        c("cluster_recovered_total", "requests requeued off dead "
+          "instances", self.n_recovered)
+        c("cluster_aborted_total", "terminal aborts",
+          len(self.aborted_rids))
+        c("cluster_shed_reroutes_total", "rung-4 sheds handed to the "
+          "retry tier", self.n_shed_reroutes)
+        c("cluster_shed_rescued_total", "retried sheds delivered to a "
+          "feasible peer", self.n_shed_rescued)
+        c("cluster_shed_terminal_total", "sheds with no feasible peer",
+          self.n_shed_terminal)
+        c("cluster_dup_deliveries_total", "duplicates suppressed by "
+          "idempotency", sum(i.n_dup_deliveries for i in self.instances))
+        if self.transport is not None:
+            tfam = registry.counter("transport_messages_total",
+                                    "lossy-transport events by kind",
+                                    ("kind",))
+            tfam.labels(kind="dropped").inc_to(self.transport.n_dropped)
+            tfam.labels(kind="duplicated").inc_to(
+                self.transport.n_duplicated)
+            tfam.labels(kind="delayed").inc_to(self.transport.n_delayed)
+            tfam.labels(kind="retransmits").inc_to(
+                self.transport.n_retransmits)
+        if self.detector is not None:
+            self.detector.publish_metrics(registry, self.instances)
+
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence[Request],
-            max_iters: int = 2_000_000) -> ClusterResult:
+            max_iters: int = 2_000_000,
+            sample_every: Optional[float] = None,
+            on_sample: Optional[Callable[[float, "ClusterSim"], None]]
+            = None) -> ClusterResult:
         reqs = sorted(requests, key=lambda r: r.arrival)
         n = len(reqs)
         i_arr = 0
         migrations: List[Tuple[float, int, Request, bool]] = []
         self._migrations = migrations    # _deliver/_route push retransmits
         total_iters = 0
+        # time-series hook: fire on_sample every sample_every units of
+        # event time (state as of the last event before each boundary)
+        next_sample = sample_every if sample_every else _INF
 
         while total_iters < max_iters:
             t_arr = reqs[i_arr].arrival if i_arr < n else _INF
@@ -474,6 +537,10 @@ class ClusterSim:
             t_now = min(t_evt, t_det)
             if t_now == _INF:
                 break
+            if on_sample is not None:
+                while t_now >= next_sample - _EPS:
+                    on_sample(next_sample, self)
+                    next_sample += sample_every
             if self.faults is not None:
                 for inst in self.instances:
                     inst.update_health(t_now)

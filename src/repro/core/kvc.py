@@ -281,6 +281,50 @@ class BlockKVC:
         return now
 
     # ------------------------------------------------------------------ #
+    def publish_metrics(self, registry, **labels) -> None:
+        """Publish the cache's block/token accounting into a
+        ``repro.obs`` registry (names: ``kvc_<noun>_<unit>``)."""
+        ln = tuple(sorted(labels))
+
+        def c(name, help, value):
+            registry.counter(name, help, ln).labels(**labels).inc_to(value)
+
+        def g(name, help, value):
+            registry.gauge(name, help, ln).labels(**labels).set(value)
+
+        g("kvc_total_blocks", "current capacity in blocks",
+          self.total_blocks)
+        g("kvc_free_blocks", "blocks free", self.free_blocks)
+        g("kvc_occupied_blocks", "blocks held by live allocations",
+          self.allocated_blocks)
+        g("kvc_used_tokens", "tokens actually written", self.used_tokens)
+        g("kvc_allocated_frac", "allocated / total blocks",
+          self.allocated_frac)
+        g("kvc_utilization_frac", "used tokens / capacity (the paper's "
+          "headline metric)", self.utilization)
+        g("kvc_reserve_in_use_blocks", "PT-reserve blocks charged",
+          self.reserve_in_use)
+        g("kvc_reserve_target_blocks", "PT-reserve watermark",
+          self.reserve_target)
+        c("kvc_allocs_total", "allocation operations", self.n_allocs)
+        c("kvc_alloc_failures_total", "runtime allocation failures "
+          "(Table 1)", self.n_failures)
+        c("kvc_swap_outs_total", "KV images registered to the host pool",
+          self.n_swap_outs)
+        c("kvc_swap_ins_total", "KV images restored from the host pool",
+          self.n_swap_ins)
+        c("kvc_host_evictions_total", "host-pool images evicted to fit "
+          "newer captures", self.n_host_evictions)
+        g("kvc_host_pool_used_tokens", "host-pool tokens in use",
+          self.host_used)
+        g("kvc_host_pool_budget_tokens", "host-pool budget",
+          self.host_pool_tokens)
+        g("kvc_pending_shrink_blocks", "squeeze debt harvested as "
+          "allocations free", self.pending_shrink)
+        c("kvc_shrinks_total", "live capacity squeezes applied",
+          self.n_shrinks)
+
+    # ------------------------------------------------------------------ #
     def check_invariants(self) -> None:
         held = sum(a.blocks + a.reserve_blocks for a in self.allocs.values())
         assert self.free_blocks + held == self.total_blocks, \

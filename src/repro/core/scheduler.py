@@ -118,6 +118,55 @@ class BaseScheduler:
         self._gt_host_heap: List[Tuple[int, int]] = []      # remaining RL
 
     # ---------------------------------------------------------------- #
+    def publish_metrics(self, registry, **labels) -> None:
+        """Publish queue/preemption/pressure counters into a
+        ``repro.obs`` registry (names: ``scheduler_<noun>_<unit>``),
+        then delegate the cache accounting to ``self.kvc``. One typed
+        publication path shared by the engine sampler, the cluster
+        backends and stall diagnostics."""
+        ln = tuple(sorted(labels))
+
+        def c(name, help, value, **extra):
+            registry.counter(name, help, ln + tuple(sorted(extra))) \
+                .labels(**labels, **extra).inc_to(value)
+
+        def g(name, help, value, **extra):
+            registry.gauge(name, help, ln + tuple(sorted(extra))) \
+                .labels(**labels, **extra).set(value)
+
+        g("scheduler_queue_depth", "requests waiting per queue",
+          len(self.pt_queue), queue="pt")
+        g("scheduler_queue_depth", "requests waiting per queue",
+          len(self.gt_queue), queue="gt")
+        g("scheduler_running_requests",
+          "decode-phase requests in the current groups",
+          sum(len(grp.members) for grp in self.running_groups))
+        g("scheduler_running_groups", "time-synced RL groups",
+          len(self.running_groups))
+        g("scheduler_swap_hold_requests",
+          "queued GTs held out of admission by the watermark guard",
+          len(self.swap_hold))
+        c("scheduler_completed_total", "requests completed",
+          len(self.completed))
+        c("scheduler_preemptions_total", "preemptions by style",
+          self.n_preempt_swap, kind="swap")
+        c("scheduler_preemptions_total", "preemptions by style",
+          self.n_preempt_free, kind="free")
+        c("scheduler_underprovision_total",
+          "iterations that under-provisioned a group", self.n_underprov)
+        c("scheduler_reserve_rescues_total",
+          "PT admissions funded from the reserve set-aside",
+          self.n_reserve_rescues)
+        c("scheduler_hosted_total",
+          "requests run inside lent KVC (KVCPipe)", self.n_hosted)
+        c("scheduler_guard_swaps_total",
+          "watermark-guard host swaps", self.n_guard_swaps)
+        c("scheduler_infeasible_shed_total",
+          "rung-4 permanently-inadmissible cancellations",
+          self.n_infeasible_shed)
+        self.kvc.publish_metrics(registry, **labels)
+
+    # ---------------------------------------------------------------- #
     def on_arrival(self, req: Request, t: float) -> None:
         req.set_state(State.QUEUED_PT, t)
         self.pt_queue.append(req)

@@ -375,24 +375,44 @@ class ServingEngine:
         # matrix shared by K entries, with ``row`` selecting the iteration.
         self._pending_drain: Deque[Tuple[jax.Array, Optional[int],
                                          List[Tuple[int, int]]]] = deque()
-        # host-sync instrumentation (what the hot-path microbench reports):
+        # host-sync instrumentation (what the hot-path microbench reports).
+        # Drain categories are classified deterministically at ENQUEUE
+        # time from the dispatch sequence alone (PR 8 classified at drain
+        # time via ``is_ready()``, which races with device timing and made
+        # the per-category split machine-dependent; the total was stable):
         # eos_flags          — EOS-flag readbacks: one (B,) vector per
         #                      iteration, or one (K, B) matrix per megastep
         #                      window (only when an active request has an
         #                      eos_token)
-        # drain_blocking     — token drains that had to wait on the device
-        #                      with nothing newer queued behind them (the
-        #                      host serialized the pipeline)
-        # drain_backpressure — token drains that waited while newer
-        #                      dispatches were still queued on the device
-        #                      (the host ran ahead; the device stays fed)
-        # drain_ready        — token drains already materialized
+        # drain_blocking     — pipeline-serializing materializations: the
+        #                      legacy sync path's per-iteration sample
+        #                      readback (the async ring never serializes —
+        #                      this stays 0 on the async path)
+        # drain_backpressure — ring entries enqueued while an *older
+        #                      distinct dispatch* was still inside the lag
+        #                      window: any wait their drain takes happens
+        #                      with the device already fed
+        # drain_ready        — ring entries whose whole lag window is
+        #                      their own dispatch (or empty): lag-aged
+        #                      copies by construction
         # flush              — forced full drains (completion/preemption/
         #                      idle)
         self.sync_counts = {"eos_flags": 0, "drain_blocking": 0,
                             "drain_backpressure": 0,
                             "drain_ready": 0, "flush": 0}
+        # enqueue-time drain classification state: a monotone dispatch
+        # sequence plus the last ``readback_lag`` enqueued sequence ids
+        # (never buffer identities — Python id() reuse is allocator-timing
+        # dependent)
+        self._drain_seq = 0
+        self._recent_drain_seqs: Deque[int] = deque(
+            maxlen=max(1, self.ecfg.readback_lag))
+        self.n_tokens_drained = 0    # tokens materialized through the ring
         self.decode_iters = 0
+        # metrics plane (repro.obs): an attached MetricsSampler is invoked
+        # at the end of every step — host-side reads only, no device ops,
+        # so metrics-on stays bitwise-identical with zero added syncs
+        self.metrics = None
 
         def _decode_fn(p, tok, pos, caches, active):
             """Legacy sync decode step with inactive slots masked out of the
@@ -1284,7 +1304,7 @@ class ServingEngine:
                 jnp.asarray(lens), jnp.asarray(temps),
                 jnp.asarray(top_ks), jnp.asarray(eos))
             if mapping:
-                self._pending_drain.append((first, None, mapping))
+                self._enqueue_drain(first, None, mapping)
         else:
             first_np = np.asarray(first)
             for i, (r, _) in enumerate(group):
@@ -1402,7 +1422,7 @@ class ServingEngine:
                 jnp.asarray(lens), jnp.asarray(temps),
                 jnp.asarray(top_ks), jnp.asarray(eos))
             if mapping:
-                self._pending_drain.append((first, None, mapping))
+                self._enqueue_drain(first, None, mapping)
         else:
             first_np = np.asarray(first)
             for i, (r, slot, _, end) in enumerate(finals):
@@ -1644,8 +1664,8 @@ class ServingEngine:
             need_sample, need_topk)
         self.n_decode_dispatches += 1
         self.decode_iters += 1
-        self._pending_drain.append(
-            (toks, None, [(self.slot_of[r.rid], r.rid) for r in reqs]))
+        self._enqueue_drain(
+            toks, None, [(self.slot_of[r.rid], r.rid) for r in reqs])
         if eos_possible:
             self.sync_counts["eos_flags"] += 1
             flags = np.asarray(eos_hit)
@@ -1662,14 +1682,37 @@ class ServingEngine:
         self._mega_left -= 1
         i = self._mega_row
         self.decode_iters += 1
-        self._pending_drain.append(
-            (self._mega_toks, i,
-             [(self.slot_of[r.rid], r.rid) for r in reqs]))
+        self._enqueue_drain(
+            self._mega_toks, i,
+            [(self.slot_of[r.rid], r.rid) for r in reqs],
+            new_dispatch=(i == 0))
         if self._mega_eos is not None:
             flags = self._mega_eos[i]
             for r in reqs:
                 if flags[self.slot_of[r.rid]]:
                     self.scheduler.notify_eos(r, r.generated + 1)
+
+    def _enqueue_drain(self, toks, row, mapping,
+                       new_dispatch: bool = True) -> None:
+        """Push one sampled-token entry into the readback ring and
+        classify it NOW, from the dispatch sequence alone. An entry whose
+        lag window (the last ``readback_lag`` enqueues) already holds an
+        older distinct dispatch can only ever wait as backpressure — by
+        the time it is lag-expired the device has newer work queued. An
+        entry whose whole lag window is its own dispatch (megastep replay
+        rows) — or nothing — drains as a lag-aged copy. Neither depends
+        on ``is_ready()`` timing, so the per-category counts are
+        reproducible across machines (the drain-time classification this
+        replaces was not; only the total was)."""
+        if new_dispatch:
+            self._drain_seq += 1
+        seq = self._drain_seq
+        if any(s != seq for s in self._recent_drain_seqs):
+            self.sync_counts["drain_backpressure"] += 1
+        else:
+            self.sync_counts["drain_ready"] += 1
+        self._recent_drain_seqs.append(seq)
+        self._pending_drain.append((toks, row, mapping))
 
     def _drain_tokens(self, force: bool = False) -> None:
         """Materialize pending sampled-token batches older than the lag.
@@ -1679,10 +1722,9 @@ class ServingEngine:
         engine only accepts a potentially-waiting drain when the number of
         undrained *dispatches* (distinct buffers — a K-row megastep window
         counts once) exceeds ``max_pending``, or a flush is forced
-        (completion, preemption, idle, end of run). A wait taken while
-        newer dispatches were already queued behind the entry is
-        backpressure (the host ran ahead; the device stays fed), counted
-        apart from pipeline-serializing ``drain_blocking`` waits.
+        (completion, preemption, idle, end of run). ``is_ready()`` only
+        steers this pop policy (performance); sync *accounting* happened
+        at enqueue time (``_enqueue_drain``), so counts are deterministic.
 
         All expired entries materialize through ONE batched
         ``jax.device_get`` (deduplicated by buffer), not one copy per
@@ -1692,17 +1734,10 @@ class ServingEngine:
         batch = []
         while len(dq) > lag:
             toks, row, mapping = dq[0]
-            ready = toks.is_ready()
-            if not ready and not force and len(
+            if not toks.is_ready() and not force and len(
                     {id(t) for t, _, _ in dq}) <= self.ecfg.max_pending:
                 break
             dq.popleft()
-            if ready:
-                self.sync_counts["drain_ready"] += 1
-            elif any(t is not toks for t, _, _ in dq):
-                self.sync_counts["drain_backpressure"] += 1
-            else:
-                self.sync_counts["drain_blocking"] += 1
             batch.append((toks, row, mapping))
         if not batch:
             return
@@ -1717,6 +1752,7 @@ class ServingEngine:
                 arr = arr[row]
             for r_, rid in mapping:
                 self.requests[rid].output.append(int(arr[r_]))
+            self.n_tokens_drained += len(mapping)
 
     # ------------------------------------------------------------------ #
     def step(self, now: Optional[float] = None) -> int:
@@ -1774,6 +1810,8 @@ class ServingEngine:
             if self._pending_drain:
                 self.sync_counts["flush"] += 1
                 self._drain_tokens(force=True)
+            if self.metrics is not None:
+                self.metrics.on_step(self, now)
             return 0
         # GTs rescheduled after a swap-style preemption or deadlock-relief
         # eviction arrive with their KV "in host memory". With a live
@@ -1834,6 +1872,8 @@ class ServingEngine:
             # context from g.output at the next prefill
             self.sync_counts["flush"] += 1
             self._drain_tokens(force=True)
+        if self.metrics is not None:
+            self.metrics.on_step(self, now)
         return len(done)
 
     def flush(self) -> None:
@@ -1857,22 +1897,21 @@ class ServingEngine:
                 self.n_prefill_chunks, len(self.scheduler.completed),
                 self.n_aborted, self.n_kv_injects, self._rid)
 
+    def publish_metrics(self, registry, instance: str = "0") -> None:
+        """Publish every engine/scheduler/KVC counter and gauge into a
+        ``repro.obs`` registry (the typed publication API — one code path
+        for live sampling, stall diagnostics and exit dumps)."""
+        from repro.obs import publish_engine
+        publish_engine(self, registry, instance)
+
     def debug_state(self) -> Dict[str, object]:
-        """Queue/KVC snapshot for stall diagnostics."""
-        s = self.scheduler
-        return {"pt_queue": len(s.pt_queue), "gt_queue": len(s.gt_queue),
-                "running": len(s.running_gts),
-                "kvc_alloc_frac": round(s.kvc.allocated_frac, 3),
-                "kvc_free_blocks": s.kvc.free_blocks,
-                "free_slots": len(self.free_slots),
-                "pending_drain": len(self._pending_drain),
-                "mega_left": self._mega_left,
-                "buffered_arrivals": len(self._arrivals),
-                "pending_injects": len(self._pending_injects),
-                "pending_aborts": len(self._pending_aborts),
-                "host_swap_images": len(self._host_swap),
-                "swap_hold": len(s.swap_hold),
-                "pending_shrink": s.kvc.pending_shrink}
+        """Queue/KVC snapshot for stall diagnostics — derived from a
+        registry snapshot (the same publication path live metrics use),
+        not a hand-assembled dict, so the two can never disagree."""
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        self.publish_metrics(reg)
+        return reg.snapshot().flat()
 
     def run(self, gen_requests: Sequence[GenRequest],
             arrivals: Optional[Sequence[float]] = None,
