@@ -843,6 +843,179 @@ def bench_detector(seed: int = 0) -> Dict:
     return out
 
 
+def bench_hedge(seed: int = 0) -> Dict:
+    """Hedged-execution tier under straggler + partition chaos
+    (counter-based, gated by --check):
+
+      * **identity** — hedging *off* must be bitwise-free: a fleet with
+        ``HedgeConfig(enabled=False)`` produces token streams equal to
+        one built with ``hedge=None``, adds zero host syncs, and fires
+        zero hedges (the coordinator exists but never issues a verdict);
+      * **fleet chaos** — a 3-instance fleet takes a 6x slowdown on
+        instance 1 plus an asymmetric partition of instance 2
+        (``part@6:2|0/12``: beats lost, data held to heal, the zombie
+        keeps stepping). The watchdog must race >= 1 stalled request on
+        a live peer and >= 1 hedge must *win*; >= 1 zombie completion
+        must be fenced (counted, never delivered); every winning stream
+        must be bitwise-equal to a fault-free single-engine run with
+        zero duplicate completions and the exactly-once audit green;
+      * **sim latency** — a 3-instance ClusterSim over a 120-request
+        sharegpt trace takes a 25x slowdown on instance 1 and then a
+        partition of that same (still-slowed) instance. Hedging on must
+        cut p99 JCT to <= ``P99_GATE`` of the hedging-off run — the
+        tail-latency claim itself, gated on the deterministic backend
+        where it is noise-free.
+    """
+    import numpy as np
+    from repro.cluster import (DetectorConfig, EngineFleet, FaultInjector,
+                               HedgeConfig, RecoveryConfig,
+                               check_fleet_invariants, parse_chaos_spec)
+    from repro.cluster.sim import ClusterSim
+    from repro.configs import get_config
+    from repro.core import predictor, traces
+    from repro.core.costmodel import CostModel
+    from repro.core.scheduler import SchedulerConfig, make_econoserve
+    from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+    P99_GATE = 0.92     # hedging must cut sim p99 JCT by >= 8%
+
+    cfg = get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+    def mk_reqs(n=8, seed_=23, lo=6, hi=14):
+        rng = np.random.default_rng(seed + seed_)
+        return [GenRequest(
+            prompt=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(8, 24)))),
+            params=SamplingParams(max_new_tokens=int(rng.integers(lo, hi)),
+                                  temperature=0.0))
+            for _ in range(n)]
+
+    out: Dict = {}
+
+    # -- identity: hedging off is bitwise-free -------------------------- #
+    t0 = time.perf_counter()
+    plain = EngineFleet(cfg, n_instances=2, router="least-kvc", seed=seed,
+                        max_batch=4, capacity=256, rl_accuracy=1.0,
+                        detector=DetectorConfig())
+    arrivals = [0.5 * i for i in range(8)]
+    p_reqs = plain.run(mk_reqs(), arrivals=arrivals)
+    p_sync = sum(sum(i.engine.sync_counts.values())
+                 for i in plain.instances)
+
+    off = EngineFleet(cfg, n_instances=2, router="least-kvc", seed=seed,
+                      max_batch=4, capacity=256, rl_accuracy=1.0,
+                      detector=DetectorConfig(),
+                      hedge=HedgeConfig(enabled=False))
+    o_reqs = off.run(mk_reqs(), arrivals=arrivals)
+    o_sync = sum(sum(i.engine.sync_counts.values())
+                 for i in off.instances)
+    out["identity"] = {
+        "tokens_equal_no_hedge_fleet":
+            [g.output for g in o_reqs] == [g.output for g in p_reqs],
+        "added_syncs": o_sync - p_sync,
+        "hedge_counters": off.hedge.counters(),
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    # -- fleet chaos: straggler + partition, first-winner fencing ------- #
+    t0 = time.perf_counter()
+    scfg = SchedulerConfig(kvc_tokens=224, block_size=16, tfs=128,
+                           max_model_len=128, max_batch_reqs=4)
+    spec = "slow@2:1/40x6,part@6:2|0/12"
+    fleet = EngineFleet(
+        cfg, n_instances=3, router="least-kvc", seed=seed,
+        max_batch=4, capacity=128, rl_accuracy=1.0, scheduler_cfg=scfg,
+        faults=FaultInjector(schedule=parse_chaos_spec(spec, 3), seed=seed,
+                             min_alive=1),
+        recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                shed_retry=True),
+        detector=DetectorConfig(), hedge=HedgeConfig())
+    ref = ServingEngine(cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=seed,
+                        scheduler_cfg=scfg)
+    ref_reqs = mk_reqs(n=10, seed_=5, lo=8, hi=16)
+    ref.run(ref_reqs)
+    reqs = fleet.run(mk_reqs(n=10, seed_=5, lo=8, hi=16))
+    cons = fleet.conservation()
+    try:
+        inv_ok = bool(check_fleet_invariants(fleet)["ok"])
+    except AssertionError as e:
+        inv_ok = False
+        out["invariant_failure"] = str(e)
+    hcnt = fleet.hedge.counters()
+    out["chaos"] = {
+        **cons, "invariants_ok": inv_ok, **hcnt,
+        "fleet_fenced_completions": fleet.n_fenced_completions,
+        "transport": {"partition_lost": fleet.transport.n_partition_lost,
+                      "partition_held": fleet.transport.n_partition_held},
+        "tokens_equal_no_fault_run":
+            all(g.output == r.output for g, r in zip(reqs, ref_reqs)
+                if g.status != "shed"),
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    # -- sim latency: hedging must buy back the chaos tail -------------- #
+    t0 = time.perf_counter()
+
+    def sim_trace():
+        rs = traces.generate(traces.SHAREGPT, 120, seed=seed, rate=6.0)
+        predictor.annotate(rs, predictor.NoisyPredictor(
+            accuracy=0.75, seed=seed), 0.15)
+        return rs
+
+    def mk_sim(hedge):
+        cost = CostModel()
+        sc = SchedulerConfig()
+        # instance 1 crawls at 25x, then gets partitioned while still
+        # slowed: its fenced work is exactly what hedging must rescue
+        sspec = "slow@5:1/30x25,part@15:1|0/15"
+        return ClusterSim(
+            lambda i: make_econoserve(sc, cost), cost, n_instances=3,
+            router="least-kvc", seed=seed,
+            faults=FaultInjector(schedule=parse_chaos_spec(sspec, 3),
+                                 seed=seed, min_alive=1),
+            recovery=RecoveryConfig(max_retries=4, backoff_base=1.0),
+            detector=DetectorConfig(), hedge=hedge)
+
+    def p99_jct(res):
+        jct = sorted(r.t_complete - r.arrival for r in res.requests
+                     if r.t_complete is not None)
+        return jct[int(0.99 * (len(jct) - 1))] if jct else float("inf")
+
+    s_off = mk_sim(None).run(sim_trace())
+    # the fleet clock ticks in iterations; the sim clock in cost-model
+    # time units — the stall floor must be rescaled to stay meaningful
+    s_on = mk_sim(HedgeConfig(floor=0.5)).run(sim_trace())
+    ratio = p99_jct(s_on) / p99_jct(s_off)
+    out["sim"] = {
+        "p99_jct_hedge_off": round(p99_jct(s_off), 2),
+        "p99_jct_hedge_on": round(p99_jct(s_on), 2),
+        "p99_ratio": round(ratio, 3),
+        "p99_gate": P99_GATE,
+        "conservation_off": s_off.conservation(),
+        "conservation_on": s_on.conservation(),
+        "hedges_fired": s_on.n_hedges_fired,
+        "hedges_won": s_on.n_hedges_won,
+        "fenced_completions": s_on.n_fenced_completions,
+        "seconds": round(time.perf_counter() - t0, 2)}
+
+    out["hedge_ok"] = bool(
+        out["identity"]["tokens_equal_no_hedge_fleet"]
+        and out["identity"]["added_syncs"] <= 0
+        and sum(out["identity"]["hedge_counters"].values()) == 0
+        and cons["ok"] and inv_ok
+        and cons["dup_completions"] == 0
+        and hcnt["hedges_fired"] >= 1 and hcnt["hedges_won"] >= 1
+        and fleet.n_fenced_completions >= 1
+        and out["chaos"]["tokens_equal_no_fault_run"]
+        and s_off.conservation()["ok"] and s_on.conservation()["ok"]
+        and s_on.conservation()["duplicate_completions"] == 0
+        and s_on.n_hedges_won >= 1
+        and s_on.n_fenced_completions >= 1
+        and ratio <= P99_GATE)
+    return out
+
+
 def bench_swap(seed: int = 0) -> Dict:
     """Host-offload KV swap tier (counter-based, gated by --check):
 
@@ -1140,6 +1313,7 @@ def main(quick: bool = False, write: bool = True) -> Dict:
         "metrics": bench_metrics(decode_iters=60 if quick else 120),
         "chaos": bench_chaos(n_reqs=8),
         "detector": bench_detector(),
+        "hedge": bench_hedge(),
         "kernel": bench_kernel(reps=2 if quick else 3),
     }
     # speedups scale with problem size (a 10k-queue amplifies the
@@ -1213,6 +1387,7 @@ def check_regression(factor: float = 2.0,
     # quick_reference order must stay a prefix of this rerun's order)
     res["chaos"] = bench_chaos(n_reqs=8)
     res["detector"] = bench_detector()
+    res["hedge"] = bench_hedge()
     print(json.dumps(res, indent=1))
     failures = []
     if ref is None:
@@ -1318,6 +1493,17 @@ def check_regression(factor: float = 2.0,
         failures.append(f"detector: detected-failure gate failed — "
                         f"identity={dt['identity']}, "
                         f"chaos={dt['chaos']}")
+    # hedge battery: hedging off must be bitwise-free; under straggler +
+    # partition chaos >= 1 hedge must fire AND win with >= 1 zombie
+    # completion fenced, winning streams bitwise-equal to fault-free,
+    # zero duplicate deliveries, and the sim p99-JCT tail must shrink by
+    # the hard-gated margin when hedging turns on
+    hd = res["hedge"]
+    if not hd["hedge_ok"]:
+        failures.append(f"hedge: hedged-execution gate failed — "
+                        f"identity={hd['identity']}, "
+                        f"chaos={hd['chaos']}, "
+                        f"sim={hd['sim']}")
     # swap tier: >= 1 host-pool capture restored by page re-seed (no
     # recompute), streams bitwise-equal under pressure, ledger drained,
     # and ZERO blocking syncs added to the no-swap steady state
@@ -1370,7 +1556,11 @@ def check_regression(factor: float = 2.0,
           f"KV-corruption rejection + squeeze absorption) green, "
           f"detector battery (bitwise identity + false-suspect "
           f"reinstatement + {res['detector']['chaos']['shed_rescued']} "
-          f"shed rescues) green (quick baselines: {ref})")
+          f"shed rescues) green, hedge battery "
+          f"({res['hedge']['chaos']['hedges_won']} fleet hedge wins, "
+          f"{res['hedge']['sim']['fenced_completions']} sim fenced, sim "
+          f"p99 JCT ratio {res['hedge']['sim']['p99_ratio']}) green "
+          f"(quick baselines: {ref})")
     return 0
 
 

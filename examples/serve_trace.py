@@ -66,9 +66,9 @@ import time
 
 import numpy as np
 
-from repro.cluster import (DetectorConfig, EngineFleet, RecoveryConfig,
-                           ROUTERS, FaultInjector, check_fleet_invariants,
-                           parse_chaos_spec)
+from repro.cluster import (DetectorConfig, EngineFleet, HedgeConfig,
+                           RecoveryConfig, ROUTERS, FaultInjector,
+                           check_fleet_invariants, parse_chaos_spec)
 from repro.configs import get_config
 from repro.core.scheduler import SchedulerConfig
 from repro.obs import (MetricsRegistry, MetricsSampler,
@@ -121,11 +121,28 @@ def main():
                          "and every non-shed token stream equal to a "
                          "fault-free reference; requires --cluster >= 2. "
                          "Transport kinds drop@t:inst/p, dup@t:inst/p, "
-                         "delay@t:inst/latency need --detect")
+                         "delay@t:inst/latency, and part@t:a|b/dur "
+                         "(asymmetric network partition: instance a is "
+                         "cut off from the side holding b and from the "
+                         "control plane for dur iterations — a keeps "
+                         "running as a zombie; its late completions are "
+                         "fenced, never double-delivered) need --detect")
     ap.add_argument("--detect", action="store_true",
                     help="detected (not declared) failure: heartbeat/lease "
                          "detection over a lossy transport + the fleet "
                          "shed-retry tier; requires --cluster >= 2")
+    ap.add_argument("--hedge", action="store_true",
+                    help="straggler-aware hedged execution: a per-request "
+                         "progress watchdog races a stalled (or suspect-"
+                         "hosted) request on the best live peer; first "
+                         "terminal transition wins, the loser is fenced + "
+                         "cancelled; requires --detect")
+    ap.add_argument("--hedge-factor", type=float, default=3.0,
+                    help="stall threshold as a multiple of the rolling "
+                         "p90 of observed TTFT / inter-token gaps")
+    ap.add_argument("--hedge-floor", type=float, default=4.0,
+                    help="minimum stall threshold in iterations (guards "
+                         "against a cold/noisy estimator hair-triggering)")
     ap.add_argument("--kvc-tokens", type=int, default=0,
                     help="override the per-instance KVC budget in tokens "
                          "(0 = the derived max_batch*capacity default); "
@@ -149,6 +166,9 @@ def main():
         ap.error("--chaos needs --cluster >= 2 (a fleet to degrade)")
     if args.detect and args.cluster < 2:
         ap.error("--detect needs --cluster >= 2 (a fleet to observe)")
+    if args.hedge and not args.detect:
+        ap.error("--hedge needs --detect (the watchdog and the suspect "
+                 "signal live on the detected-failure substrate)")
     cfg = get_config(args.arch).reduced().with_(dtype="float32",
                                                 param_dtype="float32")
     if args.tiny:
@@ -163,7 +183,8 @@ def main():
     n_inst = max(0, args.cluster)
     fkw = {}
     if args.chaos:
-        fkw = dict(faults=FaultInjector(schedule=parse_chaos_spec(args.chaos)),
+        fkw = dict(faults=FaultInjector(
+                       schedule=parse_chaos_spec(args.chaos, n_inst)),
                    recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
                                            shed_retry=args.detect))
     if args.detect:
@@ -171,6 +192,10 @@ def main():
         fkw.setdefault("recovery",
                        RecoveryConfig(max_retries=4, backoff_base=1.0,
                                       shed_retry=True))
+    if args.hedge:
+        fkw["hedge"] = HedgeConfig(ttft_factor=args.hedge_factor,
+                                   rate_factor=args.hedge_factor,
+                                   floor=args.hedge_floor)
     if n_inst:
         roles = ["prefill"] + ["decode"] * (n_inst - 1) if args.disagg \
             else None
@@ -261,6 +286,13 @@ def main():
         print(f"metrics: wrote {args.metrics}.json / .prom "
               f"({n_sampled:.0f} sampler ticks)")
 
+    if args.hedge:
+        hc = server.hedge.counters()
+        print(f"hedge: fired={hc['hedges_fired']} won={hc['hedges_won']} "
+              f"cancelled={hc['hedges_cancelled']} "
+              f"fenced={server.n_fenced_completions} "
+              f"stale_drops={server.n_stale_drops}")
+
     if args.chaos:
         report = check_fleet_invariants(server)
         # a squeeze may shed permanently-infeasible requests (rung 4);
@@ -281,6 +313,10 @@ def main():
                   f"dup_suppressed={cons['dup_deliveries']} "
                   f"shed_rescued={cons['shed_rescued']}")
         if not (cons["ok"] and report["ok"] and equal):
+            raise SystemExit(1)
+        if args.hedge and server.hedge.counters()["hedges_won"] < 1:
+            # the schedule was chosen to make hedging matter: a run where
+            # no clone ever beat its primary means the tier never engaged
             raise SystemExit(1)
         terminal = done + cons["aborted"] + cons["shed"]
         if terminal != args.n:

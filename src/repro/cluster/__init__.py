@@ -16,6 +16,12 @@ audit (``check_fleet_invariants``). ``repro.cluster.transport`` is the
 lossy message layer those drop/dup/delay windows act on, and
 ``repro.cluster.base`` hosts the heartbeat/lease ``FailureDetector``
 that turns declared failure into *detected* failure on both backends.
+``repro.cluster.hedge`` adds straggler-aware hedged execution on top:
+a progress watchdog races stalled (or suspect-hosted) requests on a
+second instance under first-winner fencing — including across the
+asymmetric network partitions (``part@t:a|b/dur``) the transport can
+inject, where a partitioned instance keeps running as a zombie and its
+late completions are counted, never double-delivered.
 """
 from .autoscale import AutoscaleConfig, GoodputAutoscaler
 from .base import (DEAD, DetectorConfig, FailureDetector, HEALTH_STATES,
@@ -24,6 +30,7 @@ from .faults import (ChaosSpecError, FAULT_KINDS, FaultEvent, FaultInjector,
                      InvariantViolation, RecoveryConfig, backoff_delay,
                      check_fleet_invariants, parse_chaos_spec)
 from .fleet import EngineFleet, FleetInstance
+from .hedge import (HedgeConfig, HedgeCoordinator, HedgeViolation)
 from .router import (LeastKVCRouter, LeastOutstandingTokensRouter, ROUTERS,
                      Router, RoundRobinRouter, make_router)
 from .sim import ClusterInstance, ClusterResult, ClusterSim, ROLES

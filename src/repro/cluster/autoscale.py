@@ -50,15 +50,77 @@ class GoodputAutoscaler:
         self._down_streak = 0
         self._last_action_t = -float("inf")
         self.events: List[Tuple[float, int]] = []   # (t, +1/-1) log
+        # registry-sourced mode (bind_registry): completions publish into
+        # obs counters and attainment is reconstructed from that series
+        self._c_met = None
+        self._c_miss = None
+        self._series: List[Tuple[float, float]] = []  # (total, met) reads
+        self._baseline: Tuple[float, float] = (0.0, 0.0)
 
     # ------------------------------------------------------------------ #
+    def bind_registry(self, registry) -> None:
+        """Make a ``repro.obs`` registry the autoscaler's input signal:
+        every ``record`` publishes into
+        ``autoscaler_completions_total{met=...}`` and the attainment
+        window is reconstructed from that registry time series —
+        cumulative-counter deltas over the last ``window`` completions,
+        floored at the invalidation baseline — instead of a private
+        rolling list. Decisions are identical to the unbound mode; the
+        metrics plane simply becomes the source of truth, so the same
+        series dashboards plot is the one the controller acts on."""
+        fam = registry.counter("autoscaler_completions_total",
+                               "completions observed by the autoscaler",
+                               ("met",))
+        self._c_met = fam.labels(met="true")
+        self._c_miss = fam.labels(met="false")
+        self._series = []
+        self._baseline = (self._c_met.value + self._c_miss.value,
+                          self._c_met.value)
+        self._met.clear()
+
     def record(self, met_slo: bool) -> None:
+        if self._c_met is not None:
+            (self._c_met if met_slo else self._c_miss).inc()
+            tot = self._c_met.value + self._c_miss.value
+            self._series.append((tot, self._c_met.value))
+            if len(self._series) > self.cfg.window + 1:
+                del self._series[:len(self._series) - self.cfg.window - 1]
+            return
         self._met.append(met_slo)
         if len(self._met) > self.cfg.window:
             del self._met[:len(self._met) - self.cfg.window]
 
+    def _window_bounds(self) -> Optional[Tuple[float, float, float, float]]:
+        """Registry mode: (then_total, then_met, now_total, now_met) for
+        the active window — the last ``window`` readings past the
+        baseline."""
+        now = self._series[-1] if self._series else self._baseline
+        if now[0] <= self._baseline[0]:
+            return None
+        then = self._series[-1 - self.cfg.window] \
+            if len(self._series) > self.cfg.window else self._baseline
+        if then[0] < self._baseline[0]:
+            then = self._baseline
+        return then[0], then[1], now[0], now[1]
+
+    @property
+    def window_len(self) -> int:
+        if self._c_met is not None:
+            b = self._window_bounds()
+            return 0 if b is None else int(b[2] - b[0])
+        return len(self._met)
+
     @property
     def attainment(self) -> Optional[float]:
+        if self._c_met is not None:
+            b = self._window_bounds()
+            if b is None:
+                return None
+            then_t, then_m, now_t, now_m = b
+            n = now_t - then_t
+            if n < self.cfg.min_window:
+                return None
+            return (now_m - then_m) / n
         if len(self._met) < self.cfg.min_window:
             return None
         return sum(self._met) / len(self._met)
@@ -116,7 +178,7 @@ class GoodputAutoscaler:
             .unlabeled.set(-1.0 if att is None else att)
         registry.gauge("autoscaler_window_completions",
                        "completions in the attainment window") \
-            .unlabeled.set(len(self._met))
+            .unlabeled.set(self.window_len)
         up = sum(1 for _, d in self.events if d > 0)
         fam = registry.counter("autoscaler_actions_total",
                                "scale actions executed", ("direction",))
@@ -127,13 +189,22 @@ class GoodputAutoscaler:
         """Discard the attainment window and breach streaks — called on an
         instance crash: the window's completions reflect the pre-crash
         capacity, and acting on them would double-count the failure."""
-        self._met.clear()
+        self._reset_window()
         self._up_streak = self._down_streak = 0
+
+    def _reset_window(self) -> None:
+        """Start the next attainment estimate fresh. In registry mode the
+        counters keep their full history (a monotonic series for the
+        dashboards); only the controller's baseline moves."""
+        self._met.clear()
+        if self._c_met is not None:
+            self._baseline = (self._c_met.value + self._c_miss.value,
+                              self._c_met.value)
 
     def _act(self, t: float, delta: int) -> None:
         self._last_action_t = t
         self._up_streak = self._down_streak = 0
         # an action invalidates the window: completions in it reflect the
         # old capacity, so start the next estimate fresh
-        self._met.clear()
+        self._reset_window()
         self.events.append((t, delta))

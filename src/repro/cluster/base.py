@@ -99,12 +99,24 @@ class InstanceBase:
 
     def can_step(self, t: float) -> bool:
         """Whether the backend may advance this instance at time ``t``:
-        crashed/dead never, frozen not before thaw, slowed every Nth tick
-        only. A falsely-*suspected* instance (beats lost in transit, not
-        frozen) keeps stepping — it loses no work while the detector
-        makes up its mind."""
-        if self.crashed or self.health == DEAD:
+        crashed never, declared-dead (oracle mode) never, frozen not
+        before thaw, slowed every Nth tick only. A falsely-*suspected*
+        instance (beats lost in transit, not frozen) keeps stepping — it
+        loses no work while the detector makes up its mind. A *detected*
+        DEAD instance that never crashed is a zombie (e.g. partitioned
+        away from the control plane): it cannot know it was declared
+        dead, so it keeps stepping too — its output is fenced at the
+        delivery boundary, not by freezing the device."""
+        if self.crashed or (self.health == DEAD and not self.detected):
             return False
+        if self.health == DEAD:
+            # zombie: local freeze/slow windows still apply
+            if t < self.frozen_until:
+                return False
+            if t < self.slow_until and self.slow_factor > 1:
+                self._slow_tick += 1
+                return self._slow_tick % self.slow_factor == 0
+            return True
         if self.health == HEALTHY and t < self.frozen_until:
             return False              # detector-managed: frozen, not yet
                                       # suspected — still must not step

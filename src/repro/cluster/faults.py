@@ -21,17 +21,17 @@ blocks, batch slots, or ring/drain state.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .base import DEAD, HEALTHY, SUSPECT
 
 FAULT_KINDS = ("kill", "freeze", "slow", "corrupt_kv", "squeeze",
-               "drop", "dup", "delay")
+               "drop", "dup", "delay", "part")
 
 #: kinds that perturb the message transport, not an instance's health
-TRANSPORT_KINDS = ("drop", "dup", "delay")
+TRANSPORT_KINDS = ("drop", "dup", "delay", "part")
 
 #: kinds that set (or, detected, eventually cause) a health transition —
 #: two different ones on the same instance at the same tick contradict
@@ -46,7 +46,9 @@ class FaultEvent:
     kinds ``duration`` is the fault-window length); ``count`` only to
     corrupt_kv (number of payloads); ``frac`` only to squeeze (fraction
     of KVC capacity removed) and drop/dup (per-message probability);
-    ``delay`` only to the delay kind (added latency)."""
+    ``delay`` only to the delay kind (added latency); ``peer`` only to
+    ``part`` (the instance standing in for the majority side of the
+    cut — ``target`` is the partitioned-away minority)."""
     t: float
     kind: str = "kill"
     target: int = -1
@@ -55,11 +57,17 @@ class FaultEvent:
     count: int = 1
     frac: float = 0.5
     delay: float = 2.0
+    peer: int = -1
 
     def __post_init__(self):
         assert self.kind in FAULT_KINDS, self.kind
         if self.kind in ("squeeze", "drop", "dup"):
             assert 0.0 < self.frac <= 1.0, self.frac
+        if self.kind == "part":
+            assert self.target >= 0 and self.peer >= 0, \
+                "part needs explicit a|b instance ids"
+            assert self.target != self.peer, "self-partition"
+            assert self.duration > 0, self.duration
 
 
 @dataclass
@@ -260,7 +268,8 @@ def _chaos_num(text: str, what: str, clause: str, conv):
             f"bad {what} {text!r} in chaos clause {clause!r}") from None
 
 
-def parse_chaos_spec(spec: str) -> List[FaultEvent]:
+def parse_chaos_spec(spec: str,
+                     n_instances: Optional[int] = None) -> List[FaultEvent]:
     """Parse ``kind@t[:target][/duration][xfactor]`` items, comma-separated.
 
     Examples::
@@ -274,17 +283,22 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
         drop@10:1/0.6      drop messages on instance 1's link w.p. 0.6
         dup@12:2/0.5       duplicate messages on instance 2's link w.p. 0.5
         delay@8:0/2.5      delay instance 0's messages by 2.5
+        part@6:2|0/12      partition instance 2 from instance 0's side
+                           (and the control plane) for 12 time units
 
-    For ``squeeze`` and the transport kinds the ``/`` clause is *not* a
-    duration: it is the capacity fraction removed (squeeze, permanent),
-    the per-message probability (drop/dup), or the added latency
-    (delay). Transport fault windows last the ``FaultEvent.duration``
-    default (8 time units) from their fire time and need a
-    detector/transport-backed fleet. Malformed input raises
-    :class:`ChaosSpecError` naming the offending clause and field, and
-    so do two contradictory health faults (kill/freeze/slow) aimed at
-    the same instance at the same tick — injector order must not decide
-    which one silently wins.
+    For ``squeeze`` and the transport kinds drop/dup/delay the ``/``
+    clause is *not* a duration: it is the capacity fraction removed
+    (squeeze, permanent), the per-message probability (drop/dup), or
+    the added latency (delay). For ``part`` it *is* the partition
+    duration (required positive). Transport fault windows last the
+    ``FaultEvent.duration`` default (8 time units) from their fire time
+    and need a detector/transport-backed fleet. Malformed input raises
+    :class:`ChaosSpecError` naming the offending clause and field:
+    unknown kinds, a ``part`` self-partition (``a|a``), a non-positive
+    partition duration, a target outside ``range(n_instances)`` (when
+    the caller passes the fleet size), and two contradictory health
+    faults (kill/freeze/slow) aimed at the same instance at the same
+    tick — injector order must not decide which one silently wins.
     """
     events: List[FaultEvent] = []
     clauses: List[str] = []
@@ -302,9 +316,9 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
             raise ChaosSpecError(
                 f"unknown fault kind {raw_kind!r} in chaos clause "
                 f"{item!r} (valid: kill, freeze, slow, corrupt, squeeze, "
-                f"drop, dup, delay)")
+                f"drop, dup, delay, part)")
         factor = 2
-        if "x" in rest:
+        if "x" in rest and kind != "part":
             rest, _, f = rest.rpartition("x")
             factor = _chaos_num(f, "slowdown factor", item, int)
         duration, frac, delay = 8.0, 0.5, 2.0
@@ -326,14 +340,45 @@ def parse_chaos_spec(spec: str) -> List[FaultEvent]:
                         f"chaos clause {item!r}")
             else:
                 duration = _chaos_num(d, "duration", item, float)
-        target = -1
+                if kind == "part" and duration <= 0:
+                    raise ChaosSpecError(
+                        f"partition duration {duration:g} must be "
+                        f"positive in chaos clause {item!r}")
+        target, peer = -1, -1
         if ":" in rest:
             rest, _, tg = rest.partition(":")
-            target = _chaos_num(tg, "target instance", item, int)
+            if kind == "part":
+                a_txt, bar, b_txt = tg.partition("|")
+                if not bar:
+                    raise ChaosSpecError(
+                        f"part clause {item!r} needs an 'a|b' target "
+                        f"(partitioned instance | majority-side peer)")
+                target = _chaos_num(a_txt, "partitioned instance", item,
+                                    int)
+                peer = _chaos_num(b_txt, "partition peer", item, int)
+                if target == peer:
+                    raise ChaosSpecError(
+                        f"self-partition {target}|{peer} in chaos "
+                        f"clause {item!r}: an instance cannot be cut "
+                        f"off from itself")
+            else:
+                target = _chaos_num(tg, "target instance", item, int)
+        elif kind == "part":
+            raise ChaosSpecError(
+                f"part clause {item!r} needs an ':a|b' target "
+                f"(partitioned instance | majority-side peer)")
+        if kind == "part" and n_instances is not None:
+            for label, iid in (("partitioned instance", target),
+                               ("partition peer", peer)):
+                if not 0 <= iid < n_instances:
+                    raise ChaosSpecError(
+                        f"unknown instance {iid} as {label} in chaos "
+                        f"clause {item!r} (fleet has instances "
+                        f"0..{n_instances - 1})")
         t = _chaos_num(rest, "fire time", item, float)
         events.append(FaultEvent(t=t, kind=kind, target=target,
                                  duration=duration, factor=factor,
-                                 frac=frac, delay=delay))
+                                 frac=frac, delay=delay, peer=peer))
         clauses.append(item)
     # contradictory health faults on the same instance at the same tick:
     # applying them in injector order would silently pick a winner
@@ -391,8 +436,8 @@ def check_fleet_invariants(fleet, strict: bool = True) -> dict:
     # engines means a duplicated delivery was accepted twice
     owners: dict = {}
     for inst in fleet.instances:
-        if not inst.alive:
-            continue
+        if inst.crashed or (not inst.alive and not inst.detected):
+            continue    # device state lost; zombies stay auditable
         for rid, g in inst.engine.requests.items():
             owners.setdefault(id(g), []).append(f"i{inst.id}:rid{rid}")
     n_ghosts = 0
@@ -408,8 +453,12 @@ def check_fleet_invariants(fleet, strict: bool = True) -> dict:
                         f"first-writer-wins: {n_dup_completions} "
                         f"(delivery dedup leaked a duplicate)")
     for inst in fleet.instances:
-        if not inst.alive:
-            continue                   # dead state is by definition lost
+        if inst.crashed or (not inst.alive and not inst.detected):
+            continue    # crashed (or oracle-declared dead): state is by
+                        # definition lost. A *detected* DEAD instance
+                        # that never crashed is a zombie — it kept
+                        # stepping through its partition and must hold
+                        # zero leaked resources after the heal.
         eng = inst.engine
         tag = f"instance {inst.id}"
         if eng.has_work():

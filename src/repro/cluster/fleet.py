@@ -65,8 +65,9 @@ from .base import (DetectorConfig, FailureDetector, HEALTH_STATES,
                    HEALTHY, SUSPECT, InstanceBase, ROLES,
                    execute_autoscale, validate_roles)
 from .faults import FaultInjector, RecoveryConfig, backoff_delay
+from .hedge import HedgeConfig, HedgeCoordinator
 from .router import Router, make_router
-from .transport import INJECT, SUBMIT, Transport
+from .transport import CANCEL, INJECT, SUBMIT, Transport
 
 __all__ = ["EngineFleet", "FleetInstance", "ROLES"]
 
@@ -97,6 +98,7 @@ class EngineFleet:
                  faults: Optional[FaultInjector] = None,
                  recovery: Optional[RecoveryConfig] = None,
                  detector: Optional[DetectorConfig] = None,
+                 hedge: Optional[HedgeConfig] = None,
                  **engine_kwargs):
         """``engine_kwargs`` are forwarded to every ``ServingEngine``
         (max_batch, capacity, scheduler_cfg, engine_cfg, impl, ...).
@@ -117,7 +119,16 @@ class EngineFleet:
         events open transport fault windows. With no fault events the
         detector-on path is bitwise-identical to the direct path: beats
         are pure host-side bookkeeping and the transport delivers
-        same-tick FIFO."""
+        same-tick FIFO.
+
+        ``hedge`` enables straggler-aware hedged execution (needs
+        detector mode): a per-request progress watchdog launches a clone
+        of a stalled (or suspect-hosted) request on the best live peer;
+        the first terminal transition wins and the loser is cancelled
+        through the megastep-safe abort path, its host fenced so a late
+        completion is counted, never double-delivered. With
+        ``hedge=None`` (or ``HedgeConfig(enabled=False)``) every hedging
+        path is dormant and the fleet is bitwise-unchanged."""
         self.cfg = cfg
         self.kv_migration = kv_migration
         self.engine_kwargs = dict(engine_kwargs)
@@ -178,6 +189,21 @@ class EngineFleet:
         self._shed_origin: set = set()   # id(GenRequest) in the retry tier
         self.n_shed_reroutes = 0         # hand-backs requeued for re-route
         self.n_shed_rescued = 0          # delivered to a feasible peer
+        # hedged execution (straggler racing with first-winner fencing)
+        self.hedge = HedgeCoordinator(hedge) if hedge is not None else None
+        if self.hedge is not None:
+            assert detector is not None, \
+                "hedging needs detector mode (transport + observed health)"
+        self._hedge_live: Dict[int, GenRequest] = {}   # gid -> primary g
+        # gid -> (clone GenRequest, clone iid, primary iid at launch)
+        self._hedge_clone: Dict[int, Tuple[GenRequest, int, int]] = {}
+        self._hedge_seq = 0              # coordinator epoch source
+        # registration-detach fences: the loser engine's registration is
+        # swapped to a private clone, so its late drains/completions land
+        # on a record the client never sees (counted, never delivered)
+        self._fences: List[Tuple[int, int, GenRequest]] = []
+        self.n_fenced_completions = 0
+        self.n_stale_drops = 0           # stale-epoch deliveries fenced
 
     def _make_engine(self, i: int) -> ServingEngine:
         return ServingEngine(self.cfg, params=self.params,
@@ -222,6 +248,9 @@ class EngineFleet:
             inst.engine.submit(req, now)
         self.route_of[id(req)] = inst.id
         self.submitted.append(req)
+        if self.hedge is not None and self.hedge.cfg.enabled:
+            self.hedge.track(id(req), now)
+            self._hedge_live[id(req)] = req
         return inst.id
 
     def _dkey(self, g: GenRequest) -> tuple:
@@ -238,8 +267,15 @@ class EngineFleet:
         self.n_shed += 1
         raise RequestShed(req, reason)
 
+    def _steppable(self, inst: FleetInstance) -> bool:
+        """Instances the fleet still advances: every live one, plus
+        *detected* DEAD instances that never crashed — zombies (e.g.
+        partitioned away from the control plane) keep stepping their
+        fenced work until the heal reconciles them."""
+        return inst.alive or (inst.detected and not inst.crashed)
+
     def has_work(self) -> bool:
-        return (any(i.alive and i.engine.has_work()
+        return (any(self._steppable(i) and i.engine.has_work()
                     for i in self.instances)
                 or bool(self._redeliver)
                 or any(i.engine.shed_handback for i in self.instances)
@@ -271,8 +307,13 @@ class EngineFleet:
         done = 0
         for inst in self.instances:
             inst.update_health(now)
-            if inst.alive and inst.engine.has_work() and inst.can_step(now):
+            if self._steppable(inst) and inst.engine.has_work() \
+                    and inst.can_step(now):
                 done += inst.engine.step(now)
+        if self.hedge is not None and self.hedge.cfg.enabled:
+            self._hedge_tick(now)
+        if self._fences:
+            self._sweep_fences(now)
         if self.recovery.shed_retry:
             self._retry_sheds(now)
         for inst in self.instances:
@@ -303,13 +344,40 @@ class EngineFleet:
         re-enters recovery; stale copies of work re-routed since
         (fencing) are dropped."""
         for msg in self.transport.recv(inst.id, now):
+            if msg.kind == CANCEL:
+                # fencing reclaim: abort the (possibly clone-swapped)
+                # registration so KVC/slot/ring state is provably freed.
+                # Handled before the alive check — a zombie's engine is
+                # exactly who a partition-held cancel reconciles at heal.
+                # Idempotent (abort of a terminal rid is a no-op) and
+                # pointless on a crashed device.
+                if not inst.crashed:
+                    rid, reason = msg.payload
+                    inst.engine.abort(rid, now, reason)
+                continue
             if msg.kind == SUBMIT:
                 g, t_arr = msg.payload
             else:
                 g, t_arr = msg.payload["gen"], now
+            if g.finished:
+                # terminal while this copy was in flight (redelivery
+                # fast path, deadline abort, hedge winner): fenced here,
+                # never registered
+                continue
+            if msg.dkey is not None \
+                    and msg.dkey[1] < self._epoch.get(id(g), 0):
+                # stale epoch: the fleet intentionally re-delivered this
+                # request since the copy was sent (re-route past a
+                # partition, hedge fencing) — the old copy must never
+                # race the new registration
+                self.n_stale_drops += 1
+                continue
             if not inst.alive:
                 if (not g.finished
-                        and self.route_of.get(id(g)) == inst.id):
+                        and self.route_of.get(id(g)) == inst.id
+                        and not any(q is g for _, q in self._redeliver)
+                        and (self.hedge is None
+                             or not self.hedge.active(id(g)))):
                     if (msg.kind == INJECT
                             and msg.payload.get("kv") is not None):
                         # the image in flight is as salvageable as a
@@ -363,6 +431,12 @@ class EngineFleet:
             if inst.alive or inst.id in self._dead_handled:
                 continue
             self._dead_handled.add(inst.id)
+            if inst.detected and not inst.crashed:
+                # declared dead but still stepping: a zombie (partition,
+                # or a false death from lost beats). Its device state is
+                # intact and must NOT be touched — fence instead.
+                self._reclaim_zombie(inst, now)
+                continue
             eng = inst.engine
             eng._pending_drain.clear()       # ring state died with the device
             victims = [g for g in eng.requests.values() if not g.finished]
@@ -387,6 +461,212 @@ class EngineFleet:
                 self._requeue(g, now, "crash")
             if self.autoscaler is not None:
                 self.autoscaler.invalidate()
+
+    def _reclaim_zombie(self, inst: FleetInstance, now: float) -> None:
+        """Reconcile an instance the detector declared dead while its
+        device kept running (asymmetric partition: outbound beats lost,
+        the engine none the wiser). Every fleet-routed request on it is
+        *fenced* — the engine's registration is swapped to a private
+        clone, so the zombie's late drains/completions land on a record
+        the client never sees — and a CANCEL rides the transport to
+        reclaim the clone's KVC/slot/ring: a partitioned link holds it
+        until the heal, which is exactly when the zombie becomes
+        reachable again. Fenced requests re-enter recovery unless a
+        hedge clone is already racing for them (the clone *is* the
+        recovery)."""
+        eng = inst.engine
+        victims = [g for g in eng.requests.values()
+                   if not g.finished
+                   and self.route_of.get(id(g)) == inst.id]
+        for payload, _ in eng._pending_injects:
+            pg = payload.get("gen")
+            if (pg is not None and not pg.finished
+                    and self.route_of.get(id(pg)) == inst.id
+                    and all(pg is not v for v in victims)):
+                victims.append(pg)
+        for g in victims:
+            registered = eng.requests.get(g.rid) is g
+            self._fence_registration(inst, g)
+            if registered:
+                self.transport.send(inst.id, CANCEL,
+                                    (g.rid, "fenced-zombie"), now)
+                self._pump(inst, now)
+            if self.hedge is not None and self.hedge.active(id(g)):
+                continue          # racing clone is the recovery path
+            self._requeue(g, now, "partition")
+        if victims and self.autoscaler is not None:
+            self.autoscaler.invalidate()
+
+    def _fence_registration(self, inst: FleetInstance,
+                            g: GenRequest) -> None:
+        """Detach ``g`` from ``inst``'s engine by swapping the
+        registration (and any unapplied inject payload) to a private
+        clone seeded with the drained-so-far output. The engine keeps
+        running undisturbed — its device state still maps rid to a live
+        request — but every subsequent drain/terminal write lands on the
+        clone, which ``_sweep_fences`` counts and discards. This is the
+        first-winner fence: the client-visible record can no longer be
+        written by the losing side."""
+        eng = inst.engine
+        if eng.requests.get(g.rid) is g:
+            clone = GenRequest(prompt=g.prompt, params=g.params,
+                               rid=g.rid, output=list(g.output),
+                               t_submit=g.t_submit, deadline=g.deadline)
+            eng.requests[g.rid] = clone
+            self._fences.append((inst.id, g.rid, clone))
+        for payload, _ in eng._pending_injects:
+            if payload.get("gen") is g:
+                clone = GenRequest(prompt=g.prompt, params=g.params,
+                                   output=list(g.output),
+                                   t_submit=g.t_submit,
+                                   deadline=g.deadline)
+                payload["gen"] = clone
+                self._fences.append((inst.id, -1, clone))
+
+    def _sweep_fences(self, now: float) -> None:
+        """Count completions that landed on fence clones — the loser's
+        late terminal transitions, observed but never delivered (the
+        invariant the partition chaos exists to stress: counted, not
+        double-delivered). Aborted clones (the CANCEL landed first)
+        simply retire."""
+        still: List[Tuple[int, int, GenRequest]] = []
+        for iid, rid, clone in self._fences:
+            if not clone.finished:
+                still.append((iid, rid, clone))
+            elif clone.status == "completed" or clone.t_done is not None:
+                self.n_fenced_completions += 1
+                if self.hedge is not None:
+                    self.hedge.n_fenced += 1
+        self._fences = still
+
+    # -- hedged execution ------------------------------------------------ #
+    def _inst(self, iid: int) -> Optional[FleetInstance]:
+        for i in self.instances:
+            if i.id == iid:
+                return i
+        return None
+
+    def _hedge_tick(self, now: float) -> None:
+        """Per-tick hedge pass: feed host-visible progress to the
+        watchdog, launch clones for stalled / suspect-hosted requests,
+        and resolve races on the first terminal transition."""
+        hedge = self.hedge
+        for gid, g in list(self._hedge_live.items()):
+            racing = self._hedge_clone.get(gid)
+            if racing is None:
+                hedge.observe_progress(gid, len(g.output), now)
+                if g.finished:
+                    hedge.mark_terminal(gid)
+                    del self._hedge_live[gid]
+                    continue
+                primary = self._inst(self.route_of.get(gid, -1))
+                suspect = primary is not None \
+                    and primary.health != HEALTHY
+                reason = hedge.want_hedge(gid, now, host_suspect=suspect)
+                if reason is not None \
+                        and not any(q is g for _, q in self._redeliver):
+                    self._launch_hedge(g, primary, reason, now)
+                continue
+            clone, ciid, piid = racing
+            ci = self._inst(ciid)
+            if g.finished:
+                # primary side won (completion, deadline abort, or the
+                # redelivery fast path): cancel the clone, megastep-safe
+                hedge.resolve(gid, "primary", piid)
+                if ci is not None and not ci.crashed and clone.rid >= 0:
+                    ci.engine.abort(clone.rid, now, "hedge-lost")
+                del self._hedge_clone[gid]
+                del self._hedge_live[gid]
+                hedge.mark_terminal(gid)
+                continue
+            clone_dead = clone.rid < 0 and (ci is None or not ci.alive)
+            if clone.finished and (clone.status == "completed"
+                                   or clone.t_done is not None):
+                # clone won: fence the primary registration FIRST (its
+                # engine may be mid-window and must not write g again),
+                # then publish the winning stream and cancel the loser
+                pi = self._inst(piid)
+                primary_rid = g.rid
+                was_registered = (pi is not None
+                                  and pi.engine.requests.get(g.rid) is g)
+                if pi is not None:
+                    self._fence_registration(pi, g)
+                hedge.resolve(gid, "clone", piid)
+                g.output[:] = clone.output
+                g.status = "completed"
+                g.t_done = clone.t_done
+                self.route_of[gid] = ciid
+                if was_registered and not pi.crashed:
+                    self.transport.send(piid, CANCEL,
+                                        (primary_rid, "hedge-lost"), now)
+                    self._pump(pi, now)
+                del self._hedge_clone[gid]
+                del self._hedge_live[gid]
+                continue
+            if clone.finished or clone_dead:
+                # clone died without completing (deadline abort, host
+                # crash, undeliverable): dissolve the race — the primary
+                # keeps running; if it no longer serves the request
+                # (zombie-fenced meanwhile), recovery takes over
+                hedge.abandon(gid)
+                del self._hedge_clone[gid]
+                pi = self._inst(piid)
+                if (pi is None
+                        or pi.engine.requests.get(g.rid) is not g) \
+                        and not any(q is g for _, q in self._redeliver):
+                    self._requeue(g, now, "hedge-failed")
+
+    def _launch_hedge(self, g: GenRequest,
+                      primary: Optional[FleetInstance], reason: str,
+                      now: float) -> None:
+        """Race ``g`` on the best live peer (router-scored, skipping the
+        primary) under a fresh delivery epoch. The clone is a private
+        ``GenRequest`` seeded with the drained-so-far prefix and rides
+        the existing inject-recompute path — greedy decoding makes its
+        stream bitwise-equal to the fault-free one."""
+        piid = -1 if primary is None else primary.id
+        cands = [i for i in self.instances
+                 if i.accepts_prompts() and i.id != piid]
+        if not cands:
+            return
+        out = list(g.output)
+        rl = g.params.max_new_tokens
+        eos = g.params.eos_token
+        if eos is not None and eos in out:
+            rl = out.index(eos) + 1
+        if len(out) >= rl:
+            return                   # drained tail already complete
+        demand = len(g.prompt) + rl - len(out)
+        tgt = self.router.choose(cands, demand)
+        clone = GenRequest(prompt=g.prompt, params=g.params, output=out,
+                           t_submit=g.t_submit, deadline=g.deadline)
+        self._hedge_seq += 1
+        self.hedge.launch(id(g), (self._hedge_seq,), tgt.id, reason)
+        self._hedge_clone[id(g)] = (clone, tgt.id, piid)
+        if out:
+            r = Request(rid=-1, prompt_len=len(g.prompt), true_rl=rl,
+                        arrival=g.t_submit, slo_deadline=g.deadline)
+            r.generated = len(out)
+            r.prompt_done = r.prompt_len
+            r.n_preemptions = 1
+            r.predicted_rl = tgt.engine.predictor.predict(r)
+            scfg = tgt.engine.scheduler.cfg
+            r.padded_rl = apply_padding(r.predicted_rl, scfg.pad_ratio,
+                                        scfg.bucket)
+            if r.padded_rl <= r.generated:
+                r.padded_rl = bucketize(r.generated + scfg.bucket,
+                                        scfg.bucket)
+            payload = {"gen": clone, "req": r, "kv": None,
+                       "ctx": len(g.prompt) + len(out) - 1,
+                       "last_tok": out[-1], "kv_crc": None,
+                       "dkey": self._dkey(clone)}
+            self.transport.send(tgt.id, INJECT, payload, now,
+                                dkey=payload["dkey"])
+            self._pump(tgt, now)
+        else:
+            self.transport.send(tgt.id, SUBMIT, (clone, now), now,
+                                dkey=self._dkey(clone))
+            self._pump(tgt, now)
 
     def _requeue(self, g: GenRequest, now: float, reason: str) -> None:
         att = self._retries.get(id(g), 0)
@@ -496,6 +776,10 @@ class EngineFleet:
                     tgt.engine.submit(g, g.t_submit)
             self.route_of[id(g)] = tgt.id    # re-route, not a double route
             self.n_recovered += 1
+            if self.hedge is not None and self.hedge.cfg.enabled:
+                # re-arm the stall clocks: the new host deserves a full
+                # threshold window before being called a straggler
+                self.hedge.reset_progress(id(g), len(g.output), now)
 
     # -- deadline watchdog ---------------------------------------------- #
     def _enforce_deadlines(self, now: float) -> None:
@@ -617,8 +901,10 @@ class EngineFleet:
 
     def flush(self) -> None:
         for inst in self.instances:
-            if inst.alive:
+            if self._steppable(inst):   # zombies drain their fences too
                 inst.engine.flush()
+        if self._fences:
+            self._sweep_fences(0.0)
 
     # -- liveness / diagnostics ----------------------------------------- #
     def progress_state(self) -> tuple:
@@ -631,7 +917,11 @@ class EngineFleet:
                 self.n_shed, self.n_shed_reroutes, self.n_shed_rescued,
                 0 if self.transport is None else self.transport.pending(),
                 0 if self.detector is None
-                else len(self.detector.transitions))
+                else len(self.detector.transitions),
+                self.n_fenced_completions, len(self._fences),
+                0 if self.hedge is None
+                else (self.hedge.n_fired, self.hedge.n_won,
+                      self.hedge.n_cancelled))
 
     def attach_metrics(self, registry) -> None:
         """Attach a per-iteration ``MetricsSampler`` to every engine
@@ -688,6 +978,13 @@ class EngineFleet:
           "feasible peer", self.n_shed_rescued)
         c("fleet_double_routes_total", "conservation violations (must "
           "stay 0)", self.double_routes)
+        c("fleet_fenced_completions_total", "loser-side completions that "
+          "landed on a registration fence: counted, never delivered",
+          self.n_fenced_completions)
+        c("fleet_stale_drops_total", "stale-epoch deliveries fenced at "
+          "the pump", self.n_stale_drops)
+        if self.hedge is not None:
+            self.hedge.publish_metrics(registry)
         registry.gauge("fleet_redeliver_queue_depth",
                        "recoveries awaiting backoff expiry") \
             .unlabeled.set(len(self._redeliver))
@@ -705,6 +1002,10 @@ class EngineFleet:
             tfam.labels(kind="delayed").inc_to(self.transport.n_delayed)
             tfam.labels(kind="retransmits").inc_to(
                 self.transport.n_retransmits)
+            tfam.labels(kind="partition_lost").inc_to(
+                self.transport.n_partition_lost)
+            tfam.labels(kind="partition_held").inc_to(
+                self.transport.n_partition_held)
             registry.gauge("transport_pending_messages",
                            "messages in flight") \
                 .unlabeled.set(self.transport.pending())
@@ -767,4 +1068,12 @@ class EngineFleet:
                                       for i in self.instances),
                 "dup_completions": sum(i.engine.n_dup_completions
                                        for i in self.instances),
+                "fenced_completions": self.n_fenced_completions,
+                "stale_drops": self.n_stale_drops,
+                "hedges_fired": 0 if self.hedge is None
+                else self.hedge.n_fired,
+                "hedges_won": 0 if self.hedge is None
+                else self.hedge.n_won,
+                "hedges_cancelled": 0 if self.hedge is None
+                else self.hedge.n_cancelled,
                 "ok": int(self.double_routes == 0 and pending == 0)}

@@ -45,9 +45,10 @@ from repro.core.scheduler import BaseScheduler
 from repro.core.simulator import SimInstance
 
 from .autoscale import GoodputAutoscaler
-from .base import (DetectorConfig, FailureDetector, InstanceBase, ROLES,
-                   execute_autoscale, validate_roles)
+from .base import (DEAD, DetectorConfig, FailureDetector, HEALTHY,
+                   InstanceBase, ROLES, execute_autoscale, validate_roles)
 from .faults import FaultInjector, RecoveryConfig, backoff_delay
+from .hedge import HedgeConfig, HedgeCoordinator
 from .router import Router, make_router
 from .transport import Transport
 
@@ -83,9 +84,13 @@ class ClusterInstance(InstanceBase):
 
     # -- event-loop interface ------------------------------------------ #
     def next_time(self) -> float:
-        if not self.alive or self.crashed:
+        if self.crashed or (self.health == DEAD and not self.detected):
             return _INF               # silent carcass: only the detector
-        t = _INF                      # (or a declared kill) frees its work
+            # (or a declared kill) frees its work. A *detected* DEAD
+            # instance that never crashed is a zombie (partitioned away
+            # from the control plane): it keeps stepping — its output is
+            # fenced at the delivery boundary, not by freezing it
+        t = _INF
         if self.sim.has_work() and not self.stalled:
             t = self.sim.t
         elif self.pending:
@@ -138,6 +143,12 @@ class ClusterResult:
     n_shed_terminal: int = 0     # of those, shed for good (no peer fits)
     n_dup_deliveries: int = 0    # duplicates suppressed by idempotency
     n_false_suspects: int = 0    # suspects reinstated by a fresh beat
+    # hedged execution / partition fencing (zero with hedging off and no
+    # partition faults)
+    n_fenced_completions: int = 0   # zombie completions counted, dropped
+    n_hedges_fired: int = 0
+    n_hedges_won: int = 0           # clone beat its primary
+    n_hedges_cancelled: int = 0     # losers cancelled (either side)
     detector_transitions: List[Tuple[float, int, str, str]] = \
         field(default_factory=list)
     transport_stats: Dict[str, int] = field(default_factory=dict)
@@ -186,6 +197,10 @@ class ClusterResult:
                 "duplicate_completions": dups,
                 "uncompleted_routed": missing,
                 "double_routes": self.double_routes,
+                "fenced_completions": self.n_fenced_completions,
+                "hedges_fired": self.n_hedges_fired,
+                "hedges_won": self.n_hedges_won,
+                "hedges_cancelled": self.n_hedges_cancelled,
                 "ok": int(dups == 0 and both == 0
                           and self.double_routes == 0
                           and missing == 0
@@ -203,6 +218,7 @@ class ClusterSim:
                  faults: Optional[FaultInjector] = None,
                  recovery: Optional[RecoveryConfig] = None,
                  detector: Optional[DetectorConfig] = None,
+                 hedge: Optional[HedgeConfig] = None,
                  collect_samples: bool = False,
                  name: Optional[str] = None):
         self.factory = scheduler_factory
@@ -258,6 +274,25 @@ class ClusterSim:
         self.n_shed_reroutes = 0
         self.n_shed_rescued = 0
         self.n_shed_terminal = 0
+        # hedged execution + partition fencing. Fencing (zombies, clone
+        # recovery, winner snapshots) is independent of hedging: partition
+        # chaos with hedging off still needs it for conservation
+        self.hedge = HedgeCoordinator(hedge) if hedge is not None else None
+        if self.hedge is not None:
+            assert detector is not None, \
+                "hedging requires the failure detector (suspect signal)"
+        self._hedge_seq = 0                      # global epoch stream
+        self._hedge_live: Dict[int, Request] = {}    # watched originals
+        # rid -> {orig, clone, piid, ciid?, p_gone?}: one in-flight race
+        self._races: Dict[int, dict] = {}
+        self._host_of: Dict[int, int] = {}       # rid -> last chosen host
+        self._fenced: set = set()                # (iid, rid): zombie side
+        self._dead_objs: set = set()             # id(Request): race losers
+        # rid -> (orig, winner-src): terminal fields re-applied at run()
+        # end — a fenced zombie may stomp the client record mid-run
+        self._swap_result: Dict[int, Tuple[Request, Request]] = {}
+        self._cancel_at: List = []               # (heal_t, seq, iid, rid)
+        self.n_fenced_completions = 0
 
     def _dkey(self, rid: int) -> tuple:
         """Fresh delivery key for one intentional (re)delivery of rid."""
@@ -268,6 +303,8 @@ class ClusterSim:
     # ------------------------------------------------------------------ #
     def _route(self, req: Request, t: float, as_gt: bool,
                rerouted: bool = False) -> None:
+        if id(req) in self._dead_objs:
+            return          # fenced race loser: never resurrected
         cands = [i for i in self.instances
                  if (i.accepts_decodes() if as_gt else i.accepts_prompts())]
         if not cands:
@@ -278,6 +315,15 @@ class ClusterSim:
             cands = [i for i in self.instances
                      if i.alive and i.role in want] \
                 or [i for i in self.instances if i.alive]
+        race = self._races.get(req.rid)
+        if race is not None and race["clone"] is req:
+            # a hedge clone must never land on its own primary (same-rid
+            # collision inside one scheduler); with no other peer left
+            # the race dissolves and the primary runs alone
+            cands = [i for i in cands if i.id != race["piid"]]
+            if not cands:
+                self._abandon_race(req.rid, t)
+                return
         if not cands:
             # whole fleet is dead: the request cannot be served, ever —
             # record a terminal abort instead of losing it silently
@@ -308,6 +354,14 @@ class ClusterSim:
             if req.rid in self.route_of and not rerouted:
                 self.double_routes += 1
             self.route_of[req.rid] = inst.id
+            if not rerouted and self.hedge is not None \
+                    and self.hedge.cfg.enabled:
+                self.hedge.track(req.rid, t)
+                self._hedge_live[req.rid] = req
+        if rerouted and self.hedge is not None and self.hedge.cfg.enabled:
+            # re-delivery re-arms the stall clocks: the new host deserves
+            # a full threshold window before being called a straggler
+            self.hedge.reset_progress(req.rid, req.generated, t)
         self._deliver(inst, req, t, as_gt)
 
     def _deliver(self, inst: ClusterInstance, req: Request, t: float,
@@ -316,12 +370,27 @@ class ClusterSim:
         transport's verdict when detection is on (drop => retransmit via
         the shared event heap, dup => two pending copies sharing one
         delivery key, delay => deferred and possibly overtaken)."""
+        race = self._races.get(req.rid)
+        if race is not None and race["clone"] is req:
+            race["ciid"] = inst.id       # clone-side fence key tracks
+        else:                            # the host actually delivered to
+            self._host_of[req.rid] = inst.id
         if self.transport is None:
             inst.pending.append((t, req, as_gt, None))
             inst.stalled = False
             return
         dkey = self._dkey(req.rid)
         v = self.transport.judge(inst.id, t)
+        if v.heal > 0.0:
+            # partitioned link: the sender's retry timer holds the send
+            # and re-routes once the partition heals (fresh decision,
+            # fresh epoch) — data is never silently lost to a partition
+            self._mig_seq += 1
+            heapq.heappush(self._migrations,
+                           (max(t + self.transport.retransmit_after,
+                                v.heal),
+                            self._mig_seq, req, as_gt))
+            return
         deliver_t = t + v.delay
         if v.drop:
             # at-least-once: the sender's retry timer re-sends (a fresh
@@ -373,6 +442,11 @@ class ClusterSim:
             if inst.alive or inst.id in self._dead_handled:
                 continue
             self._dead_handled.add(inst.id)
+            if inst.detected and not inst.crashed:
+                # declared dead but still running: a partitioned zombie —
+                # fence it instead of cancelling through the partition
+                self._reclaim_zombie(inst, t, heap)
+                continue
             victims, vseen = [], set()
             for _, r, _, _ in inst.pending:
                 if r.rid not in vseen:      # dup'd copies: recover once
@@ -394,15 +468,83 @@ class ClusterSim:
                     break
                 victims.append(c)
             for r in victims:
+                race = self._races.get(r.rid)
+                if race is not None and race["clone"] is r:
+                    # the clone died with its host: the race dissolves
+                    self._abandon_race(r.rid, t)
+                    continue
+                if race is not None and race["orig"] is r:
+                    # the primary died mid-race: the clone IS the
+                    # recovery — resolution will crown it
+                    race["p_gone"] = True
+                    continue
+                if id(r) in self._dead_objs:
+                    continue
                 self._recover(r, t, heap)
             if self.autoscaler is not None:
                 self.autoscaler.invalidate()
+
+    def _reclaim_zombie(self, inst: "ClusterInstance", t: float,
+                        heap: List) -> None:
+        """A *detected*-DEAD instance that never crashed is a partitioned
+        zombie: it keeps crunching, but nothing it produces from here on
+        is client-visible. Undelivered pendings are recovered normally
+        (they never reached the device). Requests already on the zombie
+        are *fenced*: a same-rid clone re-enters service elsewhere (the
+        original object stays with the zombie, so a late completion can
+        never mutate what the client finally reads past the winner
+        snapshot), the zombie's scheduler state is reclaimed by a cancel
+        deferred to the partition heal — the first instant the control
+        plane can reach it again — and any completion it produces
+        meanwhile is counted, never delivered."""
+        victims, vseen = [], set()
+        for _, r, _, _ in inst.pending:
+            if r.rid not in vseen and id(r) not in self._dead_objs:
+                vseen.add(r.rid)
+                victims.append(r)
+        inst.pending.clear()
+        inst.stalled = False
+        for r in victims:
+            race = self._races.get(r.rid)
+            if race is not None and race["clone"] is r:
+                self._abandon_race(r.rid, t)
+                continue
+            self._recover(r, t, heap)
+        heal = t
+        if self.transport is not None:
+            heal = max(t, self.transport.partition_heal(inst.id, t))
+        sched = inst.sim.scheduler
+        held = list(sched.pt_queue) + list(sched.gt_queue) \
+            + [m for g in sched.running_groups for m in g.members]
+        hseen = set()
+        for r in held:
+            if r.rid in hseen or r.t_complete is not None:
+                continue
+            hseen.add(r.rid)
+            self._fenced.add((inst.id, r.rid))
+            self._mig_seq += 1
+            heapq.heappush(self._cancel_at,
+                           (heal, self._mig_seq, inst.id, r.rid))
+            if self._races.get(r.rid) is not None:
+                continue     # racing: the hedge clone is the recovery
+            if id(r) in self._dead_objs:
+                continue
+            clone = self._clone_request(r)
+            self._swap_result[r.rid] = (r, clone)
+            self._hedge_live.pop(r.rid, None)
+            if self.hedge is not None:
+                self.hedge.watchdog.forget(r.rid)
+            self._recover(clone, t, heap)
+        if self.autoscaler is not None and (victims or hseen):
+            self.autoscaler.invalidate()
 
     def _recover(self, req: Request, t: float, heap: List) -> None:
         """Requeue a reclaimed request with bounded retries + exponential
         backoff. Progressed requests re-enter as queued GTs holding their
         context 'in host memory' (the swap-recompute path re-onboards
         them); unstarted ones are re-routed as fresh PTs."""
+        if id(req) in self._dead_objs:
+            return               # fenced race loser: never resurrected
         att = self._retries.get(req.rid, 0)
         if att >= self.recovery.max_retries:
             if req.rid in self._shed_rids:
@@ -424,6 +566,189 @@ class ClusterSim:
         self._mig_seq += 1
         heapq.heappush(heap, (t + delay, self._mig_seq, req, as_gt))
         self.n_recovered += 1
+
+    # -- hedged execution ----------------------------------------------- #
+    @staticmethod
+    def _clone_request(src: Request) -> Request:
+        """Private same-rid copy for re-delivery while the original is
+        stranded behind a fence (or racing as a hedge): the rid is the
+        fleet-level identity, but a distinct object means the fenced
+        side can never mutate what the client finally reads."""
+        c = Request(rid=src.rid, prompt_len=src.prompt_len,
+                    true_rl=src.true_rl, arrival=src.arrival,
+                    slo_deadline=src.slo_deadline)
+        c.predicted_rl = src.predicted_rl
+        c.padded_rl = src.padded_rl
+        c.generated = src.generated
+        c.t_first_token = src.t_first_token
+        c.n_preemptions = src.n_preemptions
+        return c
+
+    @staticmethod
+    def _apply_snapshot(orig: Request, src: Request) -> None:
+        """Re-apply the winner's client-visible terminal fields onto the
+        original (client-held) record — a fenced zombie may have stomped
+        them with completions the client never saw."""
+        if src is orig:
+            return
+        if src.t_complete is None and src.state != State.ABORTED:
+            return
+        orig.state = src.state
+        orig.t_complete = src.t_complete
+        orig.generated = src.generated
+        if src.t_first_token is not None:
+            orig.t_first_token = src.t_first_token \
+                if orig.t_first_token is None \
+                else min(orig.t_first_token, src.t_first_token)
+
+    def _drop_pending(self, obj: Request) -> None:
+        for inst in self.instances:
+            if any(p[1] is obj for p in inst.pending):
+                inst.pending = [p for p in inst.pending
+                                if p[1] is not obj]
+
+    def _cancel_loser(self, rid: int, loser: Request, t: float) -> None:
+        """Fence + cancel the losing copy of a resolved race everywhere
+        it could still run: live schedulers detach it now (releasing
+        KVC/slots), zombies reconcile through the cancel already
+        deferred to their partition heal, and the object is marked dead
+        so the recovery/retransmit paths can never resurrect it. The
+        winner is terminal, so by construction the scan can only ever
+        detach the loser."""
+        self._dead_objs.add(id(loser))
+        self._drop_pending(loser)
+        for inst in self.instances:
+            if not inst.alive or inst.crashed:
+                continue
+            sched = inst.sim.scheduler
+            held = any(q.rid == rid for q in list(sched.pt_queue)) \
+                or any(q.rid == rid for q in list(sched.gt_queue)) \
+                or any(m.rid == rid for g in sched.running_groups
+                       for m in g.members)
+            if held:
+                sched.cancel(rid, t)
+
+    def _abandon_race(self, rid: int, t: float) -> None:
+        """The clone died without a client-visible completion (its host
+        crashed, was fenced, or no peer could host it): the race
+        dissolves with no winner. If the primary is still live it races
+        on alone; if both copies are gone, recover from the
+        furthest-progressed snapshot so the request still reaches
+        exactly one terminal state."""
+        ent = self._races.pop(rid)
+        orig, clone = ent["orig"], ent["clone"]
+        self.hedge.abandon(rid)
+        self._dead_objs.add(id(clone))
+        self._drop_pending(clone)
+        p_live = not ent.get("p_gone") \
+            and (ent["piid"], rid) not in self._fenced
+        if p_live:
+            return
+        src = clone if clone.generated >= orig.generated else orig
+        c2 = self._clone_request(src)
+        self._swap_result[rid] = (orig, c2)
+        self._hedge_live.pop(rid, None)
+        self.hedge.watchdog.forget(rid)
+        self._recover(c2, t, self._migrations)
+
+    def _launch_hedge(self, r: Request, piid: Optional[int], reason: str,
+                      t: float) -> None:
+        """Race a stalled/suspect-hosted request on the best live peer:
+        a same-rid clone seeded with the client-visible progress enters
+        under a fresh delivery epoch; first terminal transition wins."""
+        as_gt = r.generated > 0
+        cands = [i for i in self.instances
+                 if (i.accepts_decodes() if as_gt else i.accepts_prompts())
+                 and i.id != piid]
+        if not cands:
+            return               # no live peer to race against
+        clone = self._clone_request(r)
+        if as_gt:
+            clone.prompt_done = clone.prompt_len
+            clone.occupied_kvc = clone.prompt_len + clone.generated
+            clone.n_preemptions += 1
+            clone.set_state(State.QUEUED_GT, t)
+        demand = clone.prompt_len + max(clone.padded_rl,
+                                        clone.predicted_rl, 1)
+        router = self.decode_router if as_gt else self.router
+        inst = router.choose(cands, demand)
+        self._hedge_seq += 1
+        self.hedge.launch(r.rid, (self._hedge_seq,), inst.id, reason)
+        self._races[r.rid] = {"orig": r, "clone": clone, "piid": piid,
+                              "ciid": inst.id}
+        self._deliver(inst, clone, t, as_gt)
+
+    def _resolve_races(self, t: float) -> None:
+        """First terminal transition wins; the loser is fenced+cancelled.
+        A terminal transition behind a fence is not client-visible and
+        can never win."""
+        for rid, ent in list(self._races.items()):
+            orig, clone, piid = ent["orig"], ent["clone"], ent["piid"]
+            ciid = ent.get("ciid")
+            p_live = not ent.get("p_gone") \
+                and (piid, rid) not in self._fenced
+            c_live = ciid is None or (ciid, rid) not in self._fenced
+            if orig.t_complete is not None and p_live:
+                self.hedge.resolve(rid, "primary", piid)
+                self._cancel_loser(rid, clone, t)
+                self._hedge_live.pop(rid, None)
+                del self._races[rid]
+                continue
+            if clone.t_complete is not None and c_live:
+                self.hedge.resolve(rid, "clone", piid)
+                if p_live:
+                    self._cancel_loser(rid, orig, t)
+                else:
+                    self._dead_objs.add(id(orig))
+                self._swap_result[rid] = (orig, clone)
+                self._apply_snapshot(orig, clone)
+                self._hedge_live.pop(rid, None)
+                del self._races[rid]
+                continue
+            clone_dead = clone.state == State.ABORTED \
+                or (clone.t_complete is not None and not c_live)
+            if clone_dead:
+                self._abandon_race(rid, t)
+
+    def _hedge_tick(self, t: float, heap: List) -> None:
+        """Per-event hedging pass: resolve finished races, feed the
+        progress watchdog with client-visible progress, and launch a
+        clone for any request that stalled or whose host went suspect.
+        Runs after every step/detector event so a completion is always
+        observed before any other instance can produce a second one."""
+        hedge = self.hedge
+        if hedge is None or not hedge.cfg.enabled:
+            return
+        self._resolve_races(t)
+        for rid, r in list(self._hedge_live.items()):
+            if rid in self._races:
+                continue                  # racing: resolution handles it
+            if r.t_complete is not None or r.state == State.ABORTED:
+                hedge.mark_terminal(rid)
+                del self._hedge_live[rid]
+                continue
+            hedge.observe_progress(rid, r.generated, t)
+            piid = self._host_of.get(rid)
+            inst = next((i for i in self.instances if i.id == piid), None)
+            suspect = inst is not None and inst.health != HEALTHY
+            reason = hedge.want_hedge(rid, t, host_suspect=suspect)
+            if reason is None:
+                continue
+            if any(m[2] is r for m in heap):
+                continue                  # mid-recovery: re-route first
+            self._launch_hedge(r, piid, reason, t)
+
+    def _apply_due_cancels(self, t: float) -> None:
+        """Heal-deferred fencing cancels: the first instant the control
+        plane can reach a zombie again, its fenced scheduler state is
+        reclaimed (KVC freed, groups cascaded). A rid the zombie already
+        finished cancels to nothing — the completion stays fenced."""
+        while self._cancel_at and self._cancel_at[0][0] <= t + _EPS:
+            _, _, iid, rid = heapq.heappop(self._cancel_at)
+            inst = next((i for i in self.instances if i.id == iid), None)
+            if inst is None or inst.crashed:
+                continue
+            inst.sim.scheduler.cancel(rid, t)
 
     # ------------------------------------------------------------------ #
     def _spawn(self, t: float) -> None:
@@ -486,6 +811,8 @@ class ClusterSim:
           self.n_shed_terminal)
         c("cluster_dup_deliveries_total", "duplicates suppressed by "
           "idempotency", sum(i.n_dup_deliveries for i in self.instances))
+        c("cluster_fenced_completions_total", "fenced-host completions "
+          "counted, never delivered", self.n_fenced_completions)
         if self.transport is not None:
             tfam = registry.counter("transport_messages_total",
                                     "lossy-transport events by kind",
@@ -496,8 +823,14 @@ class ClusterSim:
             tfam.labels(kind="delayed").inc_to(self.transport.n_delayed)
             tfam.labels(kind="retransmits").inc_to(
                 self.transport.n_retransmits)
+            tfam.labels(kind="partition_lost").inc_to(
+                self.transport.n_partition_lost)
+            tfam.labels(kind="partition_held").inc_to(
+                self.transport.n_partition_held)
         if self.detector is not None:
             self.detector.publish_metrics(registry, self.instances)
+        if self.hedge is not None:
+            self.hedge.publish_metrics(registry)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence[Request],
@@ -541,6 +874,8 @@ class ClusterSim:
                 while t_now >= next_sample - _EPS:
                     on_sample(next_sample, self)
                     next_sample += sample_every
+            if self._cancel_at:
+                self._apply_due_cancels(t_now)
             if self.faults is not None:
                 for inst in self.instances:
                     inst.update_health(t_now)
@@ -555,8 +890,11 @@ class ClusterSim:
                 for inst in self.instances:
                     inst.maybe_beat(self.transport, t_now,
                                     self.detector.cfg.beat_every)
-                if self.detector.observe(t_now, self.instances):
+                newly_dead = self.detector.observe(t_now, self.instances)
+                if newly_dead:
                     self._reclaim_dead(t_now, migrations)
+                self._hedge_tick(t_now, migrations)
+                if newly_dead:
                     continue
                 if t_det < t_evt:
                     continue             # pure detection wake: re-horizon
@@ -611,15 +949,31 @@ class ClusterSim:
                     self._collect_migrations(nxt, migrations)
                 if self.autoscaler is not None:
                     nxt.harvest_completions(self.autoscaler)
+                self._hedge_tick(t_now, migrations)
             else:
                 # empty plan while work remains: nothing placeable until a
                 # new delivery arrives (mirrors the single-engine loop's
                 # jump-to-next-arrival; here the next event wakes it)
                 nxt.stalled = True
 
-        completed_by = {inst.id: [r.rid for r in
-                                  inst.sim.scheduler.completed]
-                        for inst in self.instances}
+        # partition fences: a fenced host's post-fence completions are
+        # counted, never credited — the clone that re-entered service
+        # elsewhere is the one completion the client sees
+        completed_by: Dict[int, List[int]] = {}
+        for inst in self.instances:
+            kept = []
+            for r in inst.sim.scheduler.completed:
+                if (inst.id, r.rid) in self._fenced:
+                    self.n_fenced_completions += 1
+                    if self.hedge is not None:
+                        self.hedge.n_fenced += 1
+                    continue
+                kept.append(r.rid)
+            completed_by[inst.id] = kept
+        # re-apply winner snapshots: the client record must show what the
+        # winning copy produced, whatever a fenced zombie wrote meanwhile
+        for orig, src in self._swap_result.values():
+            self._apply_snapshot(orig, src)
         wall = max((inst.sim.t for inst in self.instances), default=0.0)
         return ClusterResult(
             name=self.name, requests=list(reqs),
@@ -641,8 +995,17 @@ class ClusterSim:
                               if self.detector else 0),
             detector_transitions=(list(self.detector.transitions)
                                   if self.detector else []),
+            n_fenced_completions=self.n_fenced_completions,
+            n_hedges_fired=(self.hedge.n_fired if self.hedge else 0),
+            n_hedges_won=(self.hedge.n_won if self.hedge else 0),
+            n_hedges_cancelled=(self.hedge.n_cancelled
+                                if self.hedge else 0),
             transport_stats=({"dropped": self.transport.n_dropped,
                               "duplicated": self.transport.n_duplicated,
                               "delayed": self.transport.n_delayed,
-                              "retransmits": self.transport.n_retransmits}
+                              "retransmits": self.transport.n_retransmits,
+                              "partition_lost":
+                                  self.transport.n_partition_lost,
+                              "partition_held":
+                                  self.transport.n_partition_held}
                              if self.transport else {}))

@@ -17,6 +17,20 @@ chaos kinds) perturb each send with a seeded rng:
   * ``delay`` — delivery is deferred by the window's delay; messages
     sent later through a clean link can overtake it (reordering falls
     out of the queue ordering, it is not a separate fault).
+  * ``part``  — a network partition: instance ``a`` is cut off from the
+    side holding instance ``b`` **and the fleet control plane** (the
+    router/detector hub all control traffic transits). The two sides
+    are asymmetric — a minority of one against the rest of the fleet —
+    and so are the two directions: ``a``'s outbound heartbeats are
+    fire-and-forget and simply *lost* (which is what drives the
+    detector to suspect and eventually declare it dead, while the
+    instance itself keeps stepping as a zombie), whereas data-plane
+    messages crossing the cut in either direction are *held* by the
+    sender's retry timer and land just after the heal (at-least-once
+    delivery: the sender keeps retrying into the void until the link
+    returns). A cancel sent to fence a zombie therefore reconciles it
+    at heal time; the zombie's own late completions must be fenced by
+    the receiving side, never double-delivered.
 
 With no active window the transport draws **zero** rng samples and
 delivers same-tick in FIFO order — a no-fault run is bitwise-identical
@@ -37,6 +51,7 @@ import numpy as np
 BEAT = "beat"
 SUBMIT = "submit"
 INJECT = "inject"
+CANCEL = "cancel"       # fence a re-routed request on its old host
 
 #: destination address of the failure detector (heartbeat sink)
 DETECTOR = -1
@@ -61,10 +76,13 @@ class Message:
 
 @dataclass(frozen=True)
 class Verdict:
-    """What the fault windows decided about one send (``judge``)."""
+    """What the fault windows decided about one send (``judge``).
+    ``heal > 0`` means the link is partitioned: the message is held by
+    the sender's retry timer and can land no earlier than ``heal``."""
     drop: bool = False
     dup: bool = False
     delay: float = 0.0
+    heal: float = 0.0
 
 
 @dataclass
@@ -83,6 +101,21 @@ class _Window:
                 and (self.target < 0 or self.target == link))
 
 
+@dataclass
+class _Partition:
+    """One partition window: instance ``a`` severed from the side that
+    holds instance ``b`` and the control plane. Only ``a``'s link is
+    cut — ``b`` stands in for the majority side, whose own links stay
+    clean."""
+    a: int
+    b: int
+    t0: float
+    t1: float
+
+    def covers(self, link: int, now: float) -> bool:
+        return self.t0 <= now < self.t1 and link == self.a
+
+
 class Transport:
     """Seeded lossy message layer. ``send``/``recv`` give the real-engine
     fleet an actual in-flight queue; ``judge`` lets the discrete-event
@@ -93,21 +126,45 @@ class Transport:
         self.rng = np.random.default_rng(seed)
         self.retransmit_after = retransmit_after
         self.windows: List[_Window] = []
+        self.partitions: List[_Partition] = []
         self._q: Dict[int, List[Tuple[float, int, Message]]] = {}
         self._seq = 0
         self.n_dropped = 0
         self.n_duplicated = 0
         self.n_delayed = 0
         self.n_retransmits = 0
+        self.n_partition_lost = 0      # beats swallowed by a partition
+        self.n_partition_held = 0      # data-plane sends held until heal
 
     # -- fault windows -------------------------------------------------- #
     def add_fault(self, ev) -> None:
-        """Open a fault window from a ``FaultEvent`` (kind drop/dup/delay):
-        ``[ev.t, ev.t + ev.duration)`` on instance ``ev.target``'s link."""
+        """Open a fault window from a ``FaultEvent``. Transport kinds
+        drop/dup/delay open a ``_Window`` on instance ``ev.target``'s
+        link for ``[ev.t, ev.t + ev.duration)``; kind ``part`` opens a
+        ``_Partition`` cutting ``ev.target`` off from the side holding
+        ``ev.peer`` and the control plane."""
+        if ev.kind == "part":
+            assert ev.peer >= 0 and ev.peer != ev.target, (ev.target,
+                                                           ev.peer)
+            self.partitions.append(_Partition(
+                a=ev.target, b=ev.peer, t0=ev.t, t1=ev.t + ev.duration))
+            return
         assert ev.kind in ("drop", "dup", "delay"), ev.kind
         self.windows.append(_Window(
             kind=ev.kind, target=ev.target, t0=ev.t, t1=ev.t + ev.duration,
             frac=ev.frac, delay=ev.delay))
+
+    def partition_heal(self, link: int, now: float) -> float:
+        """Heal time of the latest active partition covering ``link``'s
+        side, or 0.0 when the link is clean."""
+        heal = 0.0
+        for p in self.partitions:
+            if p.covers(link, now):
+                heal = max(heal, p.t1)
+        return heal
+
+    def partitioned(self, link: int, now: float) -> bool:
+        return self.partition_heal(link, now) > 0.0
 
     def _roll(self, kind: str, link: int, now: float) -> Optional[_Window]:
         """The first active window of ``kind`` on ``link`` whose seeded
@@ -121,6 +178,11 @@ class Transport:
 
     def judge(self, link: int, now: float) -> Verdict:
         """Fault decision for one send on ``link`` (sim data plane)."""
+        if self.partitions:
+            heal = self.partition_heal(link, now)
+            if heal > 0.0:
+                self.n_partition_held += 1
+                return Verdict(heal=heal)
         if not self.windows:
             return Verdict()
         w_delay = self._roll("delay", link, now)
@@ -151,6 +213,19 @@ class Transport:
         msg = Message(dst=dst, kind=kind, payload=payload, send_t=now,
                       seq=self._seq, dkey=dkey)
         link = dst if link is None else link
+        if self.partitions:
+            heal = self.partition_heal(link, now)
+            if heal > 0.0:
+                if kind == BEAT:
+                    # fire-and-forget liveness: lost into the cut — the
+                    # detector's missed-beat walk is the whole point
+                    self.n_partition_lost += 1
+                else:
+                    # at-least-once: the sender's retry timer keeps the
+                    # message alive and it lands just after the heal
+                    self.n_partition_held += 1
+                    self._push(max(now + self.retransmit_after, heal), msg)
+                return
         v = self.judge(link, now)
         if v.drop:
             if kind != BEAT:

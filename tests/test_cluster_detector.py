@@ -259,7 +259,9 @@ def test_sim_detector_fault_free_is_bitwise_identical():
     assert det.wall_time == plain.wall_time
     assert det.detector_transitions == []
     assert det.transport_stats == {"dropped": 0, "duplicated": 0,
-                                   "delayed": 0, "retransmits": 0}
+                                   "delayed": 0, "retransmits": 0,
+                                   "partition_lost": 0,
+                                   "partition_held": 0}
 
 
 def test_sim_dup_delivery_suppressed_exactly_once():

@@ -1,0 +1,313 @@
+"""Hedged execution + network-partition battery, example-by-example.
+
+Covers the deterministic surface of the hedging tier on both backends:
+``part@t:a|b/dur`` parsing (typed errors naming the bad clause), the
+transport's asymmetric cut (beats lost forever, data held until heal),
+zombie fencing in the sim (a partitioned instance keeps stepping; its
+late completions are counted, never double-delivered), first-winner
+racing with provable conservation, the bitwise-off contract, and the
+registry-sourced autoscaler attainment window.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (ChaosSpecError, DetectorConfig, EngineFleet,
+                           FaultInjector, GoodputAutoscaler, HedgeConfig,
+                           RecoveryConfig, Transport,
+                           check_fleet_invariants, parse_chaos_spec)
+from repro.cluster.autoscale import AutoscaleConfig
+from repro.cluster.sim import ClusterSim
+from repro.cluster.transport import BEAT, DETECTOR, SUBMIT
+from repro.configs import get_config
+from repro.core import predictor, traces
+from repro.core.costmodel import CostModel
+from repro.core.scheduler import SchedulerConfig, make_econoserve
+from repro.obs import MetricsRegistry
+from repro.serving import GenRequest, SamplingParams, ServingEngine
+
+
+# --------------------------------------------------------------------- #
+# part@ chaos-spec parsing: typed errors that name the bad clause
+# --------------------------------------------------------------------- #
+def test_part_spec_parses_fields():
+    (ev,) = parse_chaos_spec("part@6:2|0/12")
+    assert (ev.kind, ev.t, ev.target, ev.peer, ev.duration) \
+        == ("part", 6.0, 2, 0, 12.0)
+
+
+def test_part_spec_self_partition_rejected():
+    with pytest.raises(ChaosSpecError, match="self-partition"):
+        parse_chaos_spec("part@6:1|1/12")
+
+
+def test_part_spec_nonpositive_duration_rejected():
+    with pytest.raises(ChaosSpecError, match="duration"):
+        parse_chaos_spec("part@6:2|0/0")
+    with pytest.raises(ChaosSpecError, match="duration"):
+        parse_chaos_spec("part@6:2|0/-3")
+
+
+def test_part_spec_missing_target_rejected():
+    # no ':a|b' at all, and a target without the bar — both name the
+    # offending clause in the message
+    with pytest.raises(ChaosSpecError, match=r"part@6/12"):
+        parse_chaos_spec("part@6/12")
+    with pytest.raises(ChaosSpecError, match=r"part@6:2/12"):
+        parse_chaos_spec("part@6:2/12")
+
+
+def test_part_spec_unknown_instance_rejected():
+    with pytest.raises(ChaosSpecError, match="unknown instance 7"):
+        parse_chaos_spec("part@6:7|0/12", n_instances=3)
+    with pytest.raises(ChaosSpecError, match="unknown instance 5"):
+        parse_chaos_spec("part@6:2|5/12", n_instances=3)
+    # in range parses fine with the same validation armed
+    assert len(parse_chaos_spec("part@6:2|0/12", n_instances=3)) == 1
+
+
+# --------------------------------------------------------------------- #
+# transport: the asymmetric cut
+# --------------------------------------------------------------------- #
+def test_partition_loses_beats_holds_data():
+    tr = Transport(seed=0)
+    (ev,) = parse_chaos_spec("part@5:1|0/10")
+    tr.add_fault(ev)
+    # before the window: clean
+    tr.send(DETECTOR, BEAT, 1, 1.0, link=1)
+    assert len(tr.recv(DETECTOR, 1.0)) == 1
+    # inside the window: the beat is swallowed outright...
+    tr.send(DETECTOR, BEAT, 1, 6.0, link=1)
+    assert tr.recv(DETECTOR, 20.0) == []
+    assert tr.n_partition_lost == 1
+    # ...but a data-plane send is held and lands only after the heal
+    tr.send(1, SUBMIT, {"rid": 7}, 6.0, dkey=(7, 0), link=1)
+    assert tr.n_partition_held == 1
+    assert tr.recv(1, 14.9) == []
+    msgs = tr.recv(1, 15.0)
+    assert [m.payload for m in msgs] == [{"rid": 7}]
+    # the majority side's own link is never cut
+    tr.send(DETECTOR, BEAT, 0, 6.0, link=0)
+    assert len(tr.recv(DETECTOR, 6.0)) == 1
+
+
+def test_partition_heal_times():
+    tr = Transport(seed=0)
+    (ev,) = parse_chaos_spec("part@5:1|0/10")
+    tr.add_fault(ev)
+    assert tr.partition_heal(1, 4.9) == 0.0       # not yet open
+    assert tr.partition_heal(1, 5.0) == 15.0      # cut: heals at t1
+    assert tr.partition_heal(0, 5.0) == 0.0       # majority side clean
+    assert tr.partition_heal(1, 15.0) == 0.0      # healed
+    assert tr.judge(1, 6.0).heal == 15.0
+
+
+# --------------------------------------------------------------------- #
+# sim: zombie fencing + hedged racing
+# --------------------------------------------------------------------- #
+def _sim_trace(n=120, rate=6.0, seed=0):
+    reqs = traces.generate(traces.SHAREGPT, n, seed=seed, rate=rate)
+    predictor.annotate(reqs, predictor.NoisyPredictor(accuracy=0.75,
+                                                      seed=seed), 0.15)
+    return reqs
+
+
+def _mk_sim(spec=None, hedge=None, n_instances=3, seed=0):
+    cost = CostModel()
+    scfg = SchedulerConfig()
+    kw = {}
+    if spec is not None:
+        kw["faults"] = FaultInjector(
+            schedule=parse_chaos_spec(spec, n_instances), seed=seed,
+            min_alive=1)
+    return ClusterSim(lambda i: make_econoserve(scfg, cost), cost,
+                      n_instances=n_instances, router="least-kvc",
+                      seed=seed, detector=DetectorConfig(),
+                      recovery=RecoveryConfig(max_retries=4,
+                                              backoff_base=1.0),
+                      hedge=hedge, **kw)
+
+
+def test_sim_partition_zombie_is_fenced_and_conserved():
+    """A partitioned instance outlives its lease, keeps stepping as a
+    zombie, and finishes work the control plane already re-routed: that
+    completion must be *fenced* — counted, never double-delivered — and
+    every request still completes exactly once."""
+    res = _mk_sim(spec="part@6:2|0/12").run(_sim_trace())
+    cons = res.conservation()
+    assert cons["ok"]
+    assert cons["completed"] == cons["submitted"] == 120
+    assert cons["duplicate_completions"] == 0
+    assert res.n_fenced_completions >= 1
+    assert res.transport_stats["partition_lost"] >= 1
+
+
+def test_sim_hedge_off_is_bitwise_identical():
+    """``HedgeConfig(enabled=False)`` must change nothing: same token
+    counts and completion times as ``hedge=None`` under the same chaos."""
+    spec = "slow@5:1/30x25,part@15:1|0/15"
+    a = _mk_sim(spec=spec).run(_sim_trace())
+    b = _mk_sim(spec=spec, hedge=HedgeConfig(enabled=False)) \
+        .run(_sim_trace())
+    assert [(r.rid, r.generated, r.t_complete) for r in a.requests] \
+        == [(r.rid, r.generated, r.t_complete) for r in b.requests]
+    assert b.n_hedges_fired == b.n_hedges_won == b.n_hedges_cancelled == 0
+
+
+def test_sim_hedge_races_cut_the_straggler_tail():
+    """Hedging on under straggler + partition chaos: >= 1 race fired AND
+    won, the partitioned zombie's completions fenced, conservation
+    exactly-once, and the p99 JCT tail strictly better than hedging
+    off."""
+    spec = "slow@5:1/30x25,part@15:1|0/15"
+    off = _mk_sim(spec=spec).run(_sim_trace())
+    on = _mk_sim(spec=spec, hedge=HedgeConfig(floor=0.5)) \
+        .run(_sim_trace())
+
+    def p99_jct(res):
+        jct = sorted(r.t_complete - r.arrival for r in res.requests
+                     if r.t_complete is not None)
+        return jct[int(0.99 * (len(jct) - 1))]
+
+    cons = on.conservation()
+    assert cons["ok"] and cons["completed"] == 120
+    assert cons["duplicate_completions"] == 0
+    assert on.n_hedges_fired >= 1
+    assert on.n_hedges_won >= 1
+    assert on.n_hedges_cancelled == on.n_hedges_fired
+    assert on.n_fenced_completions >= 1
+    assert p99_jct(on) < p99_jct(off)
+
+
+def test_sim_hedge_publishes_metrics():
+    reg = MetricsRegistry()
+    sim = _mk_sim(spec="slow@5:1/30x25,part@15:1|0/15",
+                  hedge=HedgeConfig(floor=0.5))
+    res = sim.run(_sim_trace())
+    sim.publish_metrics(reg)
+    snap = reg.snapshot()
+    assert snap.get("hedge_fired_total") == res.n_hedges_fired
+    assert snap.get("hedge_won_total") == res.n_hedges_won
+    assert snap.get("cluster_fenced_completions_total") \
+        == res.n_fenced_completions
+
+
+# --------------------------------------------------------------------- #
+# fleet: first-winner racing on real engines
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("qwen3_8b").reduced(layers=1).with_(
+        d_model=64, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dtype="float32", param_dtype="float32")
+
+
+def _gen_reqs(cfg, n=10, seed=5, lo=8, hi=16):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        prompt=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(8, 24)))),
+        params=SamplingParams(max_new_tokens=int(rng.integers(lo, hi)),
+                              temperature=0.0))
+        for _ in range(n)]
+
+
+def test_fleet_hedge_race_under_partition_chaos(tiny_cfg):
+    """Real engines: a 6x straggler plus a partitioned zombie. At least
+    one hedge must fire and win, the zombie's completion must be fenced,
+    and every winning stream must be bitwise-equal to a fault-free
+    single-engine run with the invariant audit green."""
+    scfg = SchedulerConfig(kvc_tokens=224, block_size=16, tfs=128,
+                           max_model_len=128, max_batch_reqs=4)
+    spec = "slow@2:1/40x6,part@6:2|0/12"
+    fleet = EngineFleet(
+        tiny_cfg, n_instances=3, router="least-kvc", seed=0,
+        max_batch=4, capacity=128, rl_accuracy=1.0, scheduler_cfg=scfg,
+        faults=FaultInjector(schedule=parse_chaos_spec(spec, 3), seed=0,
+                             min_alive=1),
+        recovery=RecoveryConfig(max_retries=4, backoff_base=1.0,
+                                shed_retry=True),
+        detector=DetectorConfig(), hedge=HedgeConfig())
+    ref = ServingEngine(tiny_cfg, params=fleet.params, max_batch=4,
+                        capacity=128, rl_accuracy=1.0, seed=0,
+                        scheduler_cfg=scfg)
+    ref_reqs = _gen_reqs(tiny_cfg)
+    ref.run(ref_reqs)
+    reqs = fleet.run(_gen_reqs(tiny_cfg))
+    cons = fleet.conservation()
+    assert cons["ok"]
+    assert cons["dup_completions"] == 0
+    hc = fleet.hedge.counters()
+    assert hc["hedges_fired"] >= 1
+    assert hc["hedges_won"] >= 1
+    assert fleet.n_fenced_completions >= 1
+    assert all(g.output == r.output for g, r in zip(reqs, ref_reqs)
+               if g.status != "shed")
+    assert check_fleet_invariants(fleet)["ok"]
+
+
+def test_fleet_hedge_off_is_bitwise_identical(tiny_cfg):
+    plain = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                        seed=0, max_batch=4, capacity=256,
+                        rl_accuracy=1.0, detector=DetectorConfig())
+    p_reqs = plain.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=12),
+                       arrivals=[0.5 * i for i in range(8)])
+    off = EngineFleet(tiny_cfg, n_instances=2, router="least-kvc",
+                      seed=0, max_batch=4, capacity=256,
+                      rl_accuracy=1.0, detector=DetectorConfig(),
+                      hedge=HedgeConfig(enabled=False))
+    o_reqs = off.run(_gen_reqs(tiny_cfg, n=8, lo=6, hi=12),
+                     arrivals=[0.5 * i for i in range(8)])
+    assert [g.output for g in o_reqs] == [g.output for g in p_reqs]
+    assert sum(off.hedge.counters().values()) == 0
+
+
+# --------------------------------------------------------------------- #
+# autoscaler: registry-sourced attainment (satellite of this tier)
+# --------------------------------------------------------------------- #
+def test_autoscaler_registry_mode_is_decision_identical():
+    """``bind_registry`` swaps the private rolling window for counter
+    deltas over the obs registry series — every decision must match the
+    legacy list mode step for step, including across invalidations."""
+    cfg = AutoscaleConfig(window=16, min_window=4, patience=2,
+                          cooldown=10.0)
+    legacy = GoodputAutoscaler(cfg)
+    bound = GoodputAutoscaler(cfg)
+    bound.bind_registry(MetricsRegistry())
+    rng = np.random.default_rng(3)
+    t = 0.0
+    for step in range(400):
+        t += float(rng.uniform(0.2, 1.0))
+        met = bool(rng.random() < (0.7 if step % 120 < 60 else 0.999))
+        legacy.record(met)
+        bound.record(met)
+        if step % 97 == 50:
+            legacy.invalidate()
+            bound.invalidate()
+        assert legacy.attainment == bound.attainment
+        args = (t, 3, 0, 0.5, True)
+        assert legacy.decide(*args) == bound.decide(*args)
+    assert legacy.events == bound.events
+    assert len(legacy.events) >= 1       # the load pattern forced actions
+
+
+def test_autoscaler_registry_counters_survive_window_reset():
+    """Invalidation moves the controller's baseline, not the counters:
+    the exported series stays monotonic for the dashboards."""
+    reg = MetricsRegistry()
+    auto = GoodputAutoscaler(AutoscaleConfig(window=8, min_window=2))
+    auto.bind_registry(reg)
+    for met in [True, False, True, True]:
+        auto.record(met)
+    fam = reg.counter("autoscaler_completions_total",
+                      "completions observed by the autoscaler", ("met",))
+    assert fam.labels(met="true").value == 3.0
+    assert fam.labels(met="false").value == 1.0
+    assert auto.attainment == 0.75
+    auto.invalidate()
+    # counters untouched; the window restarts empty
+    assert fam.labels(met="true").value == 3.0
+    assert auto.attainment is None
+    for met in [True, True]:
+        auto.record(met)
+    assert fam.labels(met="true").value == 5.0
+    assert auto.attainment == 1.0

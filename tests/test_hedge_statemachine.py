@@ -1,0 +1,178 @@
+"""Property-based state machine over the hedged-execution lifecycle.
+
+Drives random interleavings of request tracking, progress, hedge
+launches, race resolutions, clone deaths, and zombie completions
+against one ``HedgeCoordinator``, and audits after every rule that the
+racing invariants the backends rely on never break:
+
+  * at most one winner per request, ever — and once recorded it never
+    changes;
+  * a cancelled loser is fenced: it can never deliver downstream, and
+    every post-fence completion is counted (``record_fenced``) rather
+    than delivered;
+  * delivery epochs per request strictly increase — a reused epoch is
+    rejected at launch time;
+  * no hedge ever launches for a terminal (or already-resolved)
+    request.
+
+Skips cleanly when ``hypothesis`` is not installed — the deterministic
+races in ``test_cluster_hedge.py`` cover the same surface
+example-by-example.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st      # noqa: E402
+from hypothesis.stateful import (RuleBasedStateMachine,  # noqa: E402
+                                 invariant, rule)
+
+from repro.cluster.hedge import (HedgeConfig,  # noqa: E402
+                                 HedgeCoordinator, HedgeViolation)
+
+N_HOSTS = 4
+KEYS = st.integers(min_value=0, max_value=7)
+HOSTS = st.integers(min_value=0, max_value=N_HOSTS - 1)
+
+
+class HedgeLifecycleMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        # generous budget so abandon -> re-hedge interleavings occur
+        self.coord = HedgeCoordinator(HedgeConfig(max_hedges=3))
+        self.now = 0.0
+        self.epoch = 0                   # global monotonic epoch source
+        self.primary = {}                # key -> primary host
+        self.last_epoch = {}             # key -> last epoch issued
+        self.winners = {}                # key -> winner, once decided
+        self.terminal = set()
+        self.fenced = []                 # (key, host) pairs ever fenced
+        self.n_fenced_seen = 0
+
+    # -- rules ---------------------------------------------------------- #
+    @rule(dt=st.floats(min_value=0.1, max_value=5.0,
+                       allow_nan=False, allow_infinity=False))
+    def advance(self, dt):
+        self.now += dt
+
+    @rule(key=KEYS, host=HOSTS)
+    def submit(self, key, host):
+        if key in self.primary or key in self.terminal:
+            return
+        self.primary[key] = host
+        self.coord.track(key, self.now)
+
+    @rule(key=KEYS, tokens=st.integers(min_value=0, max_value=64))
+    def progress(self, key, tokens):
+        if key in self.primary and key not in self.terminal:
+            self.coord.observe_progress(key, tokens, self.now)
+
+    @rule(key=KEYS, clone_host=HOSTS)
+    def hedge(self, key, clone_host):
+        """The suspect path: the host looks degraded, the coordinator
+        decides, the backend launches under a fresh epoch."""
+        if key not in self.primary or key in self.terminal:
+            return
+        if clone_host == self.primary[key]:
+            return                        # backends never pick the primary
+        if not self.coord.deliverable(key, clone_host):
+            return                        # ...nor a host already fenced
+        reason = self.coord.want_hedge(key, self.now, host_suspect=True)
+        if reason is None:
+            return
+        self.epoch += 1
+        self.coord.launch(key, (self.epoch,), clone_host, reason)
+        self.last_epoch[key] = self.epoch
+
+    @rule(key=KEYS)
+    def primary_wins(self, key):
+        if key not in self.primary or key in self.terminal:
+            return
+        if self.coord.active(key):
+            loser = self.coord.clone_host(key)
+            self.coord.resolve(key, "primary", self.primary[key])
+            self.winners[key] = "primary"
+            self.fenced.append((key, loser))
+        else:
+            self.coord.mark_terminal(key)
+        self.terminal.add(key)
+
+    @rule(key=KEYS)
+    def clone_wins(self, key):
+        if not self.coord.active(key) or key in self.terminal:
+            return
+        self.coord.resolve(key, "clone", self.primary[key])
+        self.winners[key] = "clone"
+        self.fenced.append((key, self.primary[key]))
+        self.terminal.add(key)
+
+    @rule(key=KEYS)
+    def clone_dies(self, key):
+        """The clone's host crashed mid-race: no winner, the clone's
+        host is fenced, the primary may hedge again later."""
+        if not self.coord.active(key) or key in self.terminal:
+            return
+        loser = self.coord.clone_host(key)
+        self.coord.abandon(key)
+        self.fenced.append((key, loser))
+
+    @rule(i=st.integers(min_value=0, max_value=31))
+    def zombie_completion(self, i):
+        """A fenced loser finishes into the void: it must be counted,
+        never deliverable."""
+        if not self.fenced:
+            return
+        key, host = self.fenced[i % len(self.fenced)]
+        assert not self.coord.deliverable(key, host)
+        self.coord.record_fenced(key, host)
+        self.n_fenced_seen += 1
+
+    @rule(key=KEYS, clone_host=HOSTS)
+    def hedge_after_terminal_rejected(self, key, clone_host):
+        if key not in self.terminal:
+            return
+        self.epoch += 1
+        with pytest.raises(HedgeViolation):
+            self.coord.launch(key, (self.epoch,), clone_host, "suspect")
+
+    @rule(key=KEYS, clone_host=HOSTS)
+    def reused_epoch_rejected(self, key, clone_host):
+        if key not in self.primary or key in self.terminal \
+                or self.coord.active(key) \
+                or self.last_epoch.get(key) is None:
+            return
+        if self.coord.want_hedge(key, self.now, host_suspect=True) is None:
+            return
+        with pytest.raises(HedgeViolation):
+            self.coord.launch(key, (self.last_epoch[key],), clone_host,
+                              "suspect")
+
+    # -- invariants audited after every rule ----------------------------- #
+    @invariant()
+    def at_most_one_winner_and_it_never_changes(self):
+        for key, winner in self.winners.items():
+            assert self.coord.winner(key) == winner
+
+    @invariant()
+    def fenced_losers_never_deliver(self):
+        for key, host in self.fenced:
+            assert not self.coord.deliverable(key, host)
+
+    @invariant()
+    def terminal_requests_never_race(self):
+        for key in self.terminal:
+            assert not self.coord.active(key)
+
+    @invariant()
+    def counters_consistent(self):
+        c = self.coord.counters()
+        assert c["hedges_won"] <= c["hedges_fired"]
+        # every cancel (win or abandon) required a launch first
+        assert c["hedges_cancelled"] <= c["hedges_fired"]
+        assert c["hedges_cancelled"] == len(self.fenced)
+        assert c["fenced_completions"] == self.n_fenced_seen
+
+
+HedgeLifecycleMachine.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=50, deadline=None)
+TestHedgeLifecycle = HedgeLifecycleMachine.TestCase
